@@ -1,0 +1,56 @@
+"""Fig. 1 analogue: total cluster RAM vs normalized execution cost. The
+memory-bottleneck cliff must be visible for K-Means/Spark (caching,
+iterative) and absent for PageRank/Hadoop (no caching)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.catalog import aws_like_catalog
+from repro.core.simulator import build_history, cost_usd, scout_like_jobs
+
+
+def run(verbose: bool = True):
+    jobs = {j.name: j for j in scout_like_jobs()}
+    catalog = aws_like_catalog()
+    out = {}
+    for jname in ("kmeans/spark/bigdata", "pagerank/hadoop/bigdata"):
+        job = jobs[jname]
+        pts = sorted(
+            ((c.total_mem_gib, cost_usd(job, c)) for c in catalog))
+        best = min(p[1] for p in pts)
+        out[jname] = [(m, c / best) for m, c in pts]
+        if verbose:
+            print(f"-- {jname} (working set "
+                  f"{job.working_set_gib:.0f} GiB cached="
+                  f"{job.caching}) --")
+            for m, c in out[jname][::9]:
+                bar = "#" * min(int(c * 8), 60)
+                print(f"  {m:7.0f} GiB  {c:7.2f}x  {bar}")
+    # cliff metric: correlation of cost with memory-deficit for KM,
+    # ~none for hadoop PR
+    km = np.array(out["kmeans/spark/bigdata"])
+    ws = jobs["kmeans/spark/bigdata"].working_set_gib
+    deficit = np.maximum(0, 1 - km[:, 0] / ws)
+    corr_km = float(np.corrcoef(deficit, km[:, 1])[0, 1])
+    pr = np.array(out["pagerank/hadoop/bigdata"])
+    deficit_pr = np.maximum(0, 1 - pr[:, 0] / max(ws, 1))
+    corr_pr = float(np.corrcoef(deficit_pr, pr[:, 1])[0, 1]) \
+        if deficit_pr.std() > 0 else 0.0
+    if verbose:
+        print(f"cost~memory-deficit correlation: kmeans {corr_km:.3f}, "
+              f"pagerank/hadoop {corr_pr:.3f}")
+    return corr_km, corr_pr
+
+
+def main():
+    t0 = time.monotonic()
+    corr_km, corr_pr = run(verbose=True)
+    wall = time.monotonic() - t0
+    print(f"fig1_memory_cliff,{wall * 1e6:.0f},"
+          f"corr_km={corr_km:.3f};corr_prhadoop={corr_pr:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 3 analogue: memory-use-over-time traces for profiling runs at five
+sample sizes — REAL RSS traces of local jobs; linear (K-Means) vs flat
+(Sort) behaviour, with the per-job R2 the gate sees."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.local_jobs import LOCAL_JOBS
+from repro.core.memory_model import fit_memory_model
+from repro.core.profiler import RSSProfiler
+from repro.core.sampling import ladder_from_anchor
+
+ANCHOR = 48 * 1024 * 1024
+
+
+def run(verbose: bool = True):
+    profiler = RSSProfiler(interval_s=0.002)
+    out = {}
+    for name in ("kmeans", "logregression", "sort"):
+        ladder = ladder_from_anchor(ANCHOR)
+        profiler.profile(LOCAL_JOBS[name](int(ladder.anchor)), ladder.anchor)
+        peaks = []
+        for s in ladder.sizes:
+            r = profiler.profile(LOCAL_JOBS[name](int(s)), s)
+            peaks.append(r.job_mem_bytes)
+            if verbose and r.trace:
+                t = np.asarray(r.trace) - r.base_mem_bytes
+                n = max(1, len(t) // 24)
+                spark = "".join(
+                    " .:-=+*#%@"[min(int(v / (max(t.max(), 1) + 1) * 10), 9)]
+                    for v in t[::n][:24])
+                print(f"{name:14s} size={s / 2**20:6.1f}MiB "
+                      f"peak={r.job_mem_bytes / 2**20:7.1f}MiB |{spark}|")
+        m = fit_memory_model(ladder.sizes, peaks)
+        out[name] = m
+        if verbose:
+            print(f"{name:14s} R2={m.r2:.5f} -> "
+                  f"{'extrapolate' if m.confident else 'fallback'}")
+    return out
+
+
+def main():
+    t0 = time.monotonic()
+    out = run(verbose=True)
+    wall = time.monotonic() - t0
+    km = out["kmeans"].r2
+    print(f"fig3_profile_traces,{wall * 1e6:.0f},kmeans_r2={km:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Perf markdown tables
+from experiments/dryrun/*.json and experiments/perf/*.json."""
+import glob
+import json
+import os
+import sys
+
+GiB = 1024 ** 3
+
+
+def fmt_bytes(b):
+    if b >= GiB:
+        return f"{b / GiB:.2f} GiB"
+    return f"{b / 2**20:.1f} MiB"
+
+
+def dryrun_table(suffix):
+    rows = []
+    for path in sorted(glob.glob(f"experiments/dryrun/*__{suffix}.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            rows.append(f"| {r['cell']} | — | — | — | — | SKIP (full attn "
+                        f"@500k) |")
+            continue
+        m = r["memory"]
+        c = r["collectives"]
+        rows.append(
+            f"| {r['cell']} | {m['per_device_gib']:.2f} | "
+            f"{r['hlo_costs']['dot_flops_per_dev'] / 1e12:.2f} | "
+            f"{c['wire_bytes_per_dev'] / 1e9:.1f} | "
+            f"{r['compile_s']:.0f}s | ok |")
+    hdr = ("| cell | GiB/dev | HLO TFLOP/dev | coll GB/dev | compile | "
+           "status |\n|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table(suffix):
+    rows = []
+    for path in sorted(glob.glob(f"experiments/dryrun/*__{suffix}.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            rows.append(f"| {r['cell']} | — | — | — | — | — | — | SKIP |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['cell']} | {ro['compute_s']:.3f} | {ro['memory_s']:.3f} |"
+            f" {ro['collective_s']:.3f} | **{ro['dominant']}** | "
+            f"{ro['useful_flops_fraction']:.3f} | {ro['mfu_bound']:.3f} | |")
+    hdr = ("| cell | compute_s | memory_s | collective_s | dominant | "
+           "6ND/HLO | MFU@bound | note |\n|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def perf_table():
+    rows = []
+    for path in sorted(glob.glob("experiments/perf/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        ro = r["roofline"]
+        name = os.path.basename(path)[:-5]
+        rows.append(
+            f"| {name} | {r.get('mesh_shape')} | {ro['compute_s']:.3f} | "
+            f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | "
+            f"{ro['dominant']} | {ro['mfu_bound']:.3f} | "
+            f"{r['memory']['per_device_gib']:.1f} |")
+    hdr = ("| cell/variant | mesh | compute_s | memory_s | collective_s | "
+           "dominant | MFU@bound | GiB/dev |\n|---|---|---|---|---|---|---|"
+           "---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### single-pod (16,16)\n")
+        print(dryrun_table("singlepod"))
+        print("\n### multi-pod (2,16,16)\n")
+        print(dryrun_table("multipod"))
+    if which in ("all", "roofline"):
+        print("\n### roofline single-pod\n")
+        print(roofline_table("singlepod"))
+        print("\n### roofline multi-pod\n")
+        print(roofline_table("multipod"))
+    if which in ("all", "perf"):
+        print("\n### perf\n")
+        print(perf_table())

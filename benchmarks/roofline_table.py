@@ -1,0 +1,74 @@
+"""§Roofline table: read dry-run records and emit the per-(arch x shape x
+mesh) three-term roofline with dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+utilization and the mfu bound."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(mesh_suffix: str = "singlepod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*__{mesh_suffix}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, verbose=True):
+    rows = []
+    for r in recs:
+        if r.get("skipped"):
+            rows.append({"cell": r["cell"], "skipped": True})
+            continue
+        ro = r["roofline"]
+        rows.append({
+            "cell": r["cell"],
+            "gib_per_dev": r["memory"]["per_device_gib"],
+            "compute_s": ro["compute_s"],
+            "memory_s": ro["memory_s"],
+            "collective_s": ro["collective_s"],
+            "dominant": ro["dominant"],
+            "useful": ro["useful_flops_fraction"],
+            "mfu_bound": ro["mfu_bound"],
+        })
+    if verbose:
+        print(f"{'cell':44s} {'GiB/dev':>8s} {'comp_s':>9s} {'mem_s':>9s} "
+              f"{'coll_s':>9s} {'dom':>10s} {'useful':>7s} {'MFU':>6s}")
+        skip_note = "SKIP-BY-DESIGN (full attention at 500k)"
+        for row in rows:
+            if row.get("skipped"):
+                print(f"{row['cell']:44s} {skip_note}")
+                continue
+            print(f"{row['cell']:44s} {row['gib_per_dev']:8.2f} "
+                  f"{row['compute_s']:9.3f} {row['memory_s']:9.3f} "
+                  f"{row['collective_s']:9.3f} {row['dominant']:>10s} "
+                  f"{row['useful']:7.3f} {row['mfu_bound']:6.3f}")
+    return rows
+
+
+def main():
+    t0 = time.monotonic()
+    for suffix in ("singlepod", "multipod"):
+        recs = load_records(suffix)
+        if not recs:
+            continue
+        print(f"== mesh: {suffix} ({len(recs)} cells) ==")
+        rows = table(recs)
+        live = [r for r in rows if not r.get("skipped")]
+        if live:
+            import numpy as np
+            mean_mfu = float(np.mean([r["mfu_bound"] for r in live]))
+            print(f"mean mfu_bound ({suffix}): {mean_mfu:.4f}")
+    wall = time.monotonic() - t0
+    n = len(load_records("singlepod")) + len(load_records("multipod"))
+    print(f"roofline_table,{wall * 1e6:.0f},cells={n}")
+
+
+if __name__ == "__main__":
+    main()

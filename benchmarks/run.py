@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline +
+planner). Each prints human-readable results then a final
+``name,us_per_call,derived`` CSV line."""
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_selection_cost",
+    "benchmarks.table2_profiling_time",
+    "benchmarks.fig1_memory_cliff",
+    "benchmarks.fig3_profile_traces",
+    "benchmarks.fig4_measurement_hygiene",
+    "benchmarks.planner_validation",
+    "benchmarks.roofline_table",
+]
+
+
+def main() -> None:
+    failures = 0
+    for mod_name in MODULES:
+        print(f"\n===== {mod_name} =====", flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"{failures} benchmarks failed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,45 @@
+"""The paper, end to end, on this machine: profile the seven HiBench-family
+jobs with the OS-level RSS profiler (five sample sizes each), fit the
+memory model, gate on R^2, and select an AWS-style cluster configuration —
+Crispy §III steps 1-4 with *real* measurements.
+
+  PYTHONPATH=src python examples/profile_and_select.py
+"""
+from repro.core.catalog import aws_like_catalog
+from repro.core.crispy import CrispyAllocator
+from repro.core.local_jobs import LOCAL_JOBS
+from repro.core.profiler import RSSProfiler
+from repro.core.sampling import ladder_from_anchor
+from repro.core.simulator import build_history
+
+GiB = 1024 ** 3
+ANCHOR = 48 * 1024 * 1024            # profiling sample anchor (48 MiB)
+FULL_DATASET_GIB = 64                # pretend production dataset size
+
+
+def main():
+    catalog = aws_like_catalog()
+    history = build_history()         # cost history of unrelated jobs (BFA)
+    profiler = RSSProfiler(interval_s=0.002)
+    alloc = CrispyAllocator(catalog, history, overhead_per_node_gib=2.0,
+                            leeway=0.05)
+    print(f"{'job':16s} {'R2':>9s} {'gate':>9s} {'req(GiB)':>9s} "
+          f"{'selected':>16s} {'profiling(s)':>12s}")
+    for name, factory in LOCAL_JOBS.items():
+        ladder = ladder_from_anchor(ANCHOR)
+        profiler.profile(factory(int(ladder.anchor)), ladder.anchor)  # warmup
+
+        def profile_at(size):
+            return profiler.profile(factory(int(size)), size)
+
+        rep = alloc.allocate(name, profile_at, FULL_DATASET_GIB * GiB,
+                             sizes=ladder.sizes, exclude_job_in_history=False)
+        print(f"{name:16s} {rep.model.r2:9.5f} "
+              f"{'PASS' if rep.model.confident else 'fallback':>9s} "
+              f"{rep.requirement_gib:9.1f} "
+              f"{rep.selection.config.name:>16s} "
+              f"{rep.profiling_wall_s:12.2f}")
+
+
+if __name__ == "__main__":
+    main()

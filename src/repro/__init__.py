@@ -1,0 +1,4 @@
+"""repro: Crispy memory-driven resource allocation for large-scale data
+processing, reproduced and extended as a JAX training/serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,15 @@
+"""mistral-large-123b [dense] — GQA 96/8.
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32768,
+    source="[hf:mistralai/Mistral-Large-Instruct-2407; unverified]",
+)

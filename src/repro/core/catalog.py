@@ -1,0 +1,113 @@
+"""Cluster configuration catalogs.
+
+Two catalogs, one per evaluation half (DESIGN.md §2):
+
+* ``aws_like_catalog()`` — the paper's search space: {c,m,r} x {large,
+  xlarge, 2xlarge} x scale-outs 4..48 (the scout dataset's 69 configs were
+  drawn from this space). Memory/core and $/h follow the c4/m4/r4 families
+  the paper used (us-east-1 on-demand list prices, 2017-era to match scout).
+
+* ``tpu_catalog()`` — the at-scale analogue: chip generations (node types)
+  x slice sizes (scale-outs). HBM/chip, peak bf16 FLOP/s and $/chip-h from
+  public list prices. The v5e numbers (16 GB, 197 TFLOP/s, 819 GB/s) are the
+  roofline constants used throughout EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+GiB = 1024 ** 3
+
+
+@dataclass(frozen=True)
+class NodeType:
+    name: str
+    cores: int               # cores (VMs) / chips-per-host (TPU)
+    mem_gib: float           # memory per node (VM RAM / TPU HBM per chip)
+    usd_per_hour: float
+    peak_tflops: float = 0.0     # accelerators only
+    hbm_gbps: float = 0.0
+    ici_gbps: float = 0.0
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    node: NodeType
+    scale_out: int           # number of nodes (VMs / chips)
+
+    @property
+    def name(self) -> str:
+        return f"{self.node.name}x{self.scale_out}"
+
+    @property
+    def total_mem_gib(self) -> float:
+        return self.node.mem_gib * self.scale_out
+
+    @property
+    def total_cores(self) -> int:
+        return self.node.cores * self.scale_out
+
+    @property
+    def usd_per_hour(self) -> float:
+        return self.node.usd_per_hour * self.scale_out
+
+    def usable_mem_gib(self, overhead_per_node_gib: float) -> float:
+        """Paper §III-D: subtract the fixed per-node OS/framework overhead
+        (~2 GiB for Spark/Hadoop on Ubuntu; ~1.25 GiB XLA reserve on TPU)."""
+        return max(0.0, (self.node.mem_gib - overhead_per_node_gib)
+                   * self.scale_out)
+
+
+# -- AWS-like (paper evaluation space) --------------------------------------
+
+_AWS_NODES = [
+    #        name        cores mem$/h
+    NodeType("c4.large", 2, 3.75, 0.100),
+    NodeType("c4.xlarge", 4, 7.5, 0.199),
+    NodeType("c4.2xlarge", 8, 15.0, 0.398),
+    NodeType("m4.large", 2, 8.0, 0.100),
+    NodeType("m4.xlarge", 4, 16.0, 0.200),
+    NodeType("m4.2xlarge", 8, 32.0, 0.400),
+    NodeType("r4.large", 2, 15.25, 0.133),
+    NodeType("r4.xlarge", 4, 30.5, 0.266),
+    NodeType("r4.2xlarge", 8, 61.0, 0.532),
+]
+
+_AWS_SCALEOUTS = [4, 6, 8, 10, 12, 16, 24, 32, 40, 48]
+
+
+def aws_like_catalog() -> List[ClusterConfig]:
+    return [ClusterConfig(n, s) for n in _AWS_NODES for s in _AWS_SCALEOUTS]
+
+
+def medium_config(catalog: List[ClusterConfig]) -> ClusterConfig:
+    """Paper baseline 2: a medium VM at medium scale-out (12x m4.xlarge in
+    the paper's dataset). Generalized: median node by memory, median
+    scale-out."""
+    nodes = sorted({c.node.name: c.node for c in catalog}.values(),
+                   key=lambda n: (n.cores, n.mem_gib))
+    node = nodes[len(nodes) // 2]
+    scales = sorted({c.scale_out for c in catalog})
+    scale = scales[len(scales) // 2]
+    want = ClusterConfig(node, scale)
+    for c in catalog:
+        if c.name == want.name:
+            return c
+    return want
+
+
+# -- TPU (at-scale adaptation) ----------------------------------------------
+
+V5E = NodeType("v5e", 1, 16.0, 1.20, peak_tflops=197.0, hbm_gbps=819.0,
+               ici_gbps=50.0)
+V4 = NodeType("v4", 1, 32.0, 3.22, peak_tflops=275.0, hbm_gbps=1228.0,
+              ici_gbps=50.0)
+V5P = NodeType("v5p", 1, 95.0, 4.20, peak_tflops=459.0, hbm_gbps=2765.0,
+               ici_gbps=100.0)
+
+_TPU_SLICES = [16, 32, 64, 128, 256, 512, 1024, 2048]
+
+
+def tpu_catalog() -> List[ClusterConfig]:
+    return [ClusterConfig(n, s) for n in (V5E, V4, V5P) for s in _TPU_SLICES]

@@ -1,0 +1,68 @@
+"""Crispy orchestration (paper §III-A): sample -> profile -> model -> select.
+
+`CrispyAllocator` is backend-agnostic: give it a `profile_at(size)` callable
+(RSS-based for local dataflow jobs, XLA-compile-based for TPU jobs via
+core/hbm_planner.py) and a full-size target, and it runs the paper's four
+steps end to end.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.catalog import ClusterConfig
+from repro.core.history import ExecutionHistory
+from repro.core.memory_model import LinearMemoryModel, fit_memory_model
+from repro.core.profiler import ProfileResult
+from repro.core.sampling import Ladder, ladder_from_anchor
+from repro.core.selector import (DEFAULT_OVERHEAD_GIB, Selection,
+                                 select_crispy)
+
+GiB = 1024 ** 3
+
+
+@dataclass
+class CrispyReport:
+    job: str
+    sizes: List[float]
+    mems_bytes: List[float]
+    model: LinearMemoryModel
+    requirement_gib: float
+    selection: Selection
+    profiling_wall_s: float
+    results: List[ProfileResult] = field(default_factory=list)
+
+
+class CrispyAllocator:
+    def __init__(self, catalog: List[ClusterConfig],
+                 history: ExecutionHistory,
+                 overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
+                 leeway: float = 0.0):
+        self.catalog = catalog
+        self.history = history
+        self.overhead = overhead_per_node_gib
+        self.leeway = leeway
+
+    def allocate(self, job: str,
+                 profile_at: Callable[[float], ProfileResult],
+                 full_size: float,
+                 anchor: Optional[float] = None,
+                 sizes: Optional[List[float]] = None,
+                 exclude_job_in_history: bool = True) -> CrispyReport:
+        t0 = time.monotonic()
+        if sizes is None:
+            ladder = ladder_from_anchor(anchor if anchor is not None
+                                        else full_size * 0.01)
+            sizes = ladder.sizes
+        results = [profile_at(s) for s in sizes]
+        mems = [r.job_mem_bytes for r in results]
+        model = fit_memory_model(sizes, mems)
+        req_gib = model.requirement(full_size, self.leeway) / GiB
+        sel = select_crispy(
+            self.catalog, self.history, req_gib,
+            overhead_per_node_gib=self.overhead,
+            exclude_job=job if exclude_job_in_history else None)
+        wall = time.monotonic() - t0
+        return CrispyReport(job, list(sizes), mems, model, req_gib, sel,
+                            wall, results)

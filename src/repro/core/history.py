@@ -1,0 +1,65 @@
+"""Execution history + normalized-cost bookkeeping (paper §IV-C).
+
+Cost of a (job, config) execution is normalized per job to the cheapest
+config for that job, so the best possible selection scores 1.0 — Table I's
+metric. ``ExecutionHistory`` is what BFA averages over: records of *other*
+jobs (Crispy never assumes the job at hand recurs)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.catalog import ClusterConfig
+
+
+@dataclass(frozen=True)
+class Execution:
+    job: str
+    config_name: str
+    runtime_s: float
+    usd: float
+
+
+class ExecutionHistory:
+    def __init__(self, executions: Iterable[Execution] = ()):
+        self._by_job: Dict[str, Dict[str, Execution]] = defaultdict(dict)
+        for e in executions:
+            self.add(e)
+
+    def add(self, e: Execution) -> None:
+        self._by_job[e.job][e.config_name] = e
+
+    def jobs(self) -> List[str]:
+        return sorted(self._by_job)
+
+    def cost(self, job: str, config_name: str) -> Optional[float]:
+        e = self._by_job.get(job, {}).get(config_name)
+        return None if e is None else e.usd
+
+    def normalized_costs(self, job: str) -> Dict[str, float]:
+        """config name -> cost / best cost, for one job."""
+        ex = self._by_job.get(job, {})
+        if not ex:
+            return {}
+        best = min(e.usd for e in ex.values())
+        return {name: e.usd / best for name, e in ex.items()}
+
+    def mean_normalized_cost(self, config_name: str,
+                             exclude_job: Optional[str] = None) -> float:
+        """Average normalized cost of `config_name` over all *other* jobs —
+        the BFA ranking signal. inf if the config never ran."""
+        vals = []
+        for job in self._by_job:
+            if job == exclude_job:
+                continue
+            nc = self.normalized_costs(job)
+            if config_name in nc:
+                vals.append(nc[config_name])
+        return sum(vals) / len(vals) if vals else float("inf")
+
+    def config_names(self) -> List[str]:
+        names = set()
+        for ex in self._by_job.values():
+            names.update(ex)
+        return sorted(names)

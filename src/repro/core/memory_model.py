@@ -1,0 +1,62 @@
+"""Crispy §III-C: memory usage modeling.
+
+Ordinary least squares `mem = a * size + b` over the profiling samples, with
+the paper's train-set R² > 0.99 linearity gate. No sklearn — the closed form
+is two lines and this *is* the paper's model (LinearRegression + r2_score).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+R2_GATE = 0.99          # paper §III-A step 3
+
+
+@dataclass
+class LinearMemoryModel:
+    slope: float
+    intercept: float
+    r2: float
+    n: int
+
+    @property
+    def confident(self) -> bool:
+        """Paper's gate: extrapolate only if the fit is (near-)perfectly
+        linear on its own training points."""
+        return self.r2 > R2_GATE
+
+    def predict(self, size: float) -> float:
+        return self.slope * size + self.intercept
+
+    def requirement(self, full_size: float, leeway: float = 0.0) -> float:
+        """Total memory requirement for the full dataset (0 if the model is
+        not confident — Crispy then degenerates to the BFA baseline)."""
+        if not self.confident:
+            return 0.0
+        return max(0.0, self.predict(full_size)) * (1.0 + leeway)
+
+
+def fit_memory_model(sizes: Sequence[float],
+                     mems: Sequence[float]) -> LinearMemoryModel:
+    x = np.asarray(sizes, dtype=np.float64)
+    y = np.asarray(mems, dtype=np.float64)
+    if x.size < 2 or np.allclose(x, x[0]):
+        return LinearMemoryModel(0.0, float(y.mean()) if y.size else 0.0,
+                                 -np.inf, int(x.size))
+    xm, ym = x.mean(), y.mean()
+    sxx = float(((x - xm) ** 2).sum())
+    sxy = float(((x - xm) * (y - ym)).sum())
+    slope = sxy / sxx
+    intercept = ym - slope * xm
+    pred = slope * x + intercept
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - ym) ** 2).sum())
+    if ss_tot == 0.0:
+        # flat target: a constant-memory job; the fit is exact iff residuals
+        # are zero, in which case extrapolation is trivially safe
+        r2 = 1.0 if ss_res == 0.0 else -np.inf
+    else:
+        r2 = 1.0 - ss_res / ss_tot
+    return LinearMemoryModel(slope, intercept, r2, int(x.size))

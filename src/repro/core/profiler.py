@@ -1,0 +1,148 @@
+"""Crispy §III-B: job profiling backends.
+
+``RSSProfiler`` — the paper's literal method: run the job on this machine
+while a background thread samples OS-level memory (/proc/self/statm and
+/proc/meminfo), with aggressive garbage collection between samples (the
+analogue of the paper's JVM NewRatio tuning, Fig. 4: measure live objects,
+not allocator slack).
+
+``XLACompileProfiler`` — the at-scale adaptation: "run" = AOT-compile a
+scaled-down job and read XLA's buffer-assignment peak from
+``compiled.memory_analysis()``. No accelerator needed; minutes per point;
+the measured quantity is exactly the per-device working set the real job
+would occupy.
+"""
+from __future__ import annotations
+
+import ctypes
+import gc
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+GiB = 1024 ** 3
+_PAGE = os.sysconf("SC_PAGE_SIZE")
+
+try:
+    _LIBC = ctypes.CDLL("libc.so.6")
+except OSError:                                    # non-glibc platforms
+    _LIBC = None
+
+
+def _malloc_trim():
+    """Return freed arena pages to the OS so RSS tracks live memory.
+    This is the userspace analogue of the paper's aggressive-GC tuning
+    (Fig. 4): without it, consecutive profiling runs in one process read
+    the allocator high-water mark, the memory(size) relation flattens and
+    the R2 gate wrongly rejects linear jobs (measured in
+    benchmarks/fig4_measurement_hygiene.py)."""
+    if _LIBC is not None:
+        try:
+            _LIBC.malloc_trim(0)
+        except Exception:
+            pass
+
+
+def _rss_bytes() -> int:
+    with open("/proc/self/statm") as f:
+        return int(f.read().split()[1]) * _PAGE
+
+
+@dataclass
+class ProfileResult:
+    size: float                  # the scale knob value (bytes / tokens / ...)
+    peak_mem_bytes: float        # measured peak
+    base_mem_bytes: float        # pre-run baseline (subtracted by caller)
+    wall_s: float
+    trace: List[float] = field(default_factory=list)   # sampled series
+    trace_t: List[float] = field(default_factory=list)
+
+    @property
+    def job_mem_bytes(self) -> float:
+        """Paper: 'the system-wide allocated memory before the start of
+        execution is captured and accounted for'."""
+        return max(0.0, self.peak_mem_bytes - self.base_mem_bytes)
+
+
+class RSSProfiler:
+    """Profile a python callable's peak RSS with a sampler thread."""
+
+    def __init__(self, interval_s: float = 0.005, aggressive_gc: bool = True):
+        self.interval_s = interval_s
+        self.aggressive_gc = aggressive_gc
+
+    def profile(self, job: Callable[[], object], size: float) -> ProfileResult:
+        gc.collect()
+        if self.aggressive_gc:
+            _malloc_trim()
+        base = _rss_bytes()
+        peak = [base]
+        trace: List[float] = []
+        trace_t: List[float] = []
+        stop = threading.Event()
+        t0 = time.monotonic()
+
+        def sampler():
+            n = 0
+            while not stop.is_set():
+                rss = _rss_bytes()
+                peak[0] = max(peak[0], rss)
+                trace.append(rss)
+                trace_t.append(time.monotonic() - t0)
+                n += 1
+                # aggressive GC: reclaim short-lived objects so the reading
+                # tracks live use (paper Fig. 4). Do it sparsely — a full
+                # collect per sample would distort the wall time it charges.
+                if self.aggressive_gc and n % 20 == 0:
+                    gc.collect(0)
+                    _malloc_trim()
+                time.sleep(self.interval_s)
+
+        th = threading.Thread(target=sampler, daemon=True)
+        th.start()
+        try:
+            job()
+        finally:
+            stop.set()
+            th.join(timeout=1.0)
+        wall = time.monotonic() - t0
+        peak[0] = max(peak[0], _rss_bytes())
+        return ProfileResult(size, float(peak[0]), float(base), wall,
+                             trace, trace_t)
+
+
+class XLACompileProfiler:
+    """Profile per-device memory of a JAX step function by AOT compiling it
+    against ShapeDtypeStructs — the 'single machine' profiling run of the
+    TPU adaptation. ``job`` must return a lowered-compilable callable and
+    its abstract inputs."""
+
+    def profile(self, lower: Callable[[], object], size: float,
+                donate_normalized: bool = True) -> ProfileResult:
+        t0 = time.monotonic()
+        compiled = lower()
+        wall = time.monotonic() - t0
+        ma = compiled.memory_analysis()
+        peak = _memory_analysis_bytes(ma)
+        return ProfileResult(size, float(peak), 0.0, wall)
+
+
+def _memory_analysis_bytes(ma) -> float:
+    """Total per-device bytes from an XLA memory analysis object: live
+    arguments + outputs + temp + generated code. Argument/output aliasing
+    (donation) is already reflected by XLA."""
+    for attrs in (("argument_size_in_bytes", "output_size_in_bytes",
+                   "temp_size_in_bytes", "generated_code_size_in_bytes",
+                   "alias_size_in_bytes"),):
+        try:
+            arg = getattr(ma, attrs[0])
+            out = getattr(ma, attrs[1])
+            tmp = getattr(ma, attrs[2])
+            gen = getattr(ma, attrs[3])
+            alias = getattr(ma, attrs[4], 0)
+            return float(arg + out + tmp + gen - alias)
+        except AttributeError:
+            continue
+    return float("nan")

@@ -1,0 +1,70 @@
+"""Crispy §III-D / §IV-C: configuration selection + the three baselines.
+
+* Random — expected cost of a uniformly random pick (paper evaluates this as
+  the average normalized cost over the catalog).
+* Medium — fixed medium VM, medium scale-out.
+* BFA ("Best For All") — config with the lowest mean normalized cost over
+  all *other* jobs.
+* Crispy — BFA restricted to configs whose usable total memory satisfies the
+  extrapolated requirement. Requirement 0 (no confident model) == exactly BFA
+  — the never-worse-than-fallback property the paper reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.core.catalog import ClusterConfig, medium_config
+from repro.core.history import ExecutionHistory
+
+DEFAULT_OVERHEAD_GIB = 2.0      # Spark/Hadoop+OS per node (paper §III-D)
+
+
+@dataclass
+class Selection:
+    config: ClusterConfig
+    method: str
+    mem_requirement_gib: float
+    feasible_count: int
+    fell_back: bool
+
+
+def select_bfa(catalog: List[ClusterConfig], history: ExecutionHistory,
+               exclude_job: Optional[str] = None) -> ClusterConfig:
+    def rank(c: ClusterConfig):
+        return history.mean_normalized_cost(c.name, exclude_job=exclude_job)
+    return min(catalog, key=lambda c: (rank(c), c.usd_per_hour))
+
+
+def select_medium(catalog: List[ClusterConfig]) -> ClusterConfig:
+    return medium_config(catalog)
+
+
+def select_crispy(catalog: List[ClusterConfig], history: ExecutionHistory,
+                  mem_requirement_gib: float,
+                  overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
+                  exclude_job: Optional[str] = None) -> Selection:
+    feasible = [c for c in catalog
+                if c.usable_mem_gib(overhead_per_node_gib)
+                >= mem_requirement_gib]
+    fell_back = False
+    if not feasible:
+        # nothing satisfies the requirement (requirement larger than the
+        # biggest cluster): take the largest-memory config — still the
+        # bottleneck-minimizing choice
+        feasible = sorted(catalog,
+                          key=lambda c: -c.usable_mem_gib(
+                              overhead_per_node_gib))[:1]
+        fell_back = True
+    cfg = select_bfa(feasible, history, exclude_job=exclude_job)
+    return Selection(cfg, "crispy", mem_requirement_gib, len(feasible),
+                     fell_back or mem_requirement_gib <= 0.0)
+
+
+def random_expected_cost(catalog: List[ClusterConfig],
+                         history: ExecutionHistory, job: str) -> float:
+    """Paper baseline 1: the expectation of a uniform random selection =
+    mean normalized cost over configs with a recorded execution."""
+    nc = history.normalized_costs(job)
+    vals = [nc[c.name] for c in catalog if c.name in nc]
+    return sum(vals) / len(vals) if vals else float("inf")

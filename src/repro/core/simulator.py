@@ -1,0 +1,165 @@
+"""Scout-like corpus simulator (evaluation substrate for Table I / Fig. 1).
+
+The paper evaluates on the scout dataset (1031 Spark/Hadoop runs over 69 AWS
+configs; github.com/oxhead/scout) which is not redistributable/offline, so
+the Table-I benchmark runs against a *simulated* corpus with the same
+structure: the 16 (algorithm x framework x dataset-size) jobs, the
+{c,m,r} x {large,xlarge,2xlarge} x scale-out catalog, and a documented
+cost model whose single essential property is the one the paper measures —
+**a memory-bottleneck step function**:
+
+    T = T_compute + T_io
+    T_compute = cpu_hours / (total_cores ** alpha)          (alpha < 1:
+                diminishing parallel returns)
+    T_io      = passes * dataset / agg_disk_bw
+    passes    = 1                              if job never caches
+              = 1 + (iters-1) * miss_fraction  if caching job
+    miss_fraction = max(0, 1 - usable_mem / working_set)
+
+so a caching, iterative job falls off a cost cliff exactly when the working
+set stops fitting in usable cluster memory — Fig. 1's shape. cost = T * $/h.
+
+Profiling traces are generated per job from its declared memory profile:
+  linear —  mem(s) = ws_factor*s + jvm_base (+0.2% noise): R2 > .99, Crispy
+            extrapolates (K-Means, Naive Bayes, PageRank-on-Spark);
+  noisy  —  same slope but 6-12% multiplicative noise from 'rapidly
+            generated objects' (paper §III-C): fails the gate (Log./Lin.
+            Regression);
+  flat   —  memory independent of input (Hadoop jobs, streaming sort/join):
+            R2 of a flat+noise series fails the gate, requirement 0.
+
+The validated claims are structural (bench/table1): cost(Crispy) <=
+cost(BFA) per job, integer-factor wins on bottleneck-prone jobs, graceful
+fallback elsewhere — not the paper's exact 56%, which is a property of
+their private measurements.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.catalog import ClusterConfig, aws_like_catalog
+from repro.core.history import Execution, ExecutionHistory
+from repro.core.profiler import ProfileResult
+
+GiB = 1024 ** 3
+
+ALPHA = 0.95            # parallel-efficiency exponent (data-parallel jobs
+                        # scale near-linearly; cost is then ~flat in cores
+                        # and memory effects dominate — the scout regime)
+DISK_BW_GIB_S = 0.05    # per-node effective scan bandwidth (HDD-era, HiBench)
+SPILL_PENALTY = 4.0     # spill/recompute passes cost more than a clean scan
+JVM_BASE_GIB = 1.6      # profiling-machine framework baseline
+OVERHEAD_GIB = 2.0      # per-node OS+framework (paper §III-D)
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    name: str
+    framework: str          # spark | hadoop
+    dataset_gib: float
+    cpu_hours: float        # total compute work
+    working_set_factor: float   # cached bytes per input byte
+    iterations: int         # data passes (iterative ML jobs re-read)
+    caching: bool           # Spark RDD caching (Hadoop: never)
+    mem_profile: str        # linear | noisy | flat
+
+    @property
+    def working_set_gib(self) -> float:
+        return self.working_set_factor * self.dataset_gib
+
+
+def scout_like_jobs() -> List[JobSpec]:
+    J = JobSpec
+    return [
+        # name                 fw      GiB   cpuh  wsf  iters cache profile
+        J("naivebayes/spark/bigdata", "spark", 300, 10.0, 0.9, 4, True, "linear"),
+        J("naivebayes/spark/huge", "spark", 90, 3.2, 0.9, 4, True, "linear"),
+        # K-Means caches *deserialized* vectors: JVM object overhead makes
+        # the working set several times the on-disk bytes — this is what
+        # puts the Fig. 1 cliff beyond BFA's aggregate memory
+        J("kmeans/spark/bigdata", "spark", 240, 14.0, 4.5, 12, True, "linear"),
+        J("kmeans/spark/huge", "spark", 72, 4.5, 4.5, 12, True, "linear"),
+        J("linregression/spark/bigdata", "spark", 360, 8.0, 1.0, 6, True, "noisy"),
+        J("linregression/spark/huge", "spark", 110, 2.6, 1.0, 6, True, "noisy"),
+        J("logregression/spark/bigdata", "spark", 300, 12.0, 1.1, 10, True, "noisy"),
+        J("logregression/spark/huge", "spark", 90, 3.8, 1.1, 10, True, "noisy"),
+        J("pagerank/spark/bigdata", "spark", 60, 16.0, 2.4, 8, True, "linear"),
+        J("pagerank/spark/huge", "spark", 18, 5.0, 2.4, 8, True, "linear"),
+        J("join/spark/bigdata", "spark", 420, 6.0, 0.25, 1, False, "flat"),
+        J("join/spark/huge", "spark", 130, 1.9, 0.25, 1, False, "flat"),
+        J("pagerank/hadoop/bigdata", "hadoop", 60, 20.0, 0.0, 8, False, "flat"),
+        J("pagerank/hadoop/huge", "hadoop", 18, 6.5, 0.0, 8, False, "flat"),
+        J("terasort/hadoop/bigdata", "hadoop", 900, 9.0, 0.0, 3, False, "flat"),
+        J("terasort/hadoop/huge", "hadoop", 280, 3.0, 0.0, 3, False, "flat"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# ground-truth cost model
+# ---------------------------------------------------------------------------
+
+
+def runtime_s(job: JobSpec, cfg: ClusterConfig) -> float:
+    cores = cfg.total_cores
+    t_compute = job.cpu_hours * 3600.0 / (cores ** ALPHA)
+    usable = cfg.usable_mem_gib(OVERHEAD_GIB)
+    if job.caching and job.working_set_gib > 0:
+        miss = max(0.0, 1.0 - usable / job.working_set_gib)
+        # misses re-read AND spill: each missed pass costs SPILL_PENALTY
+        # scans (write-out + read-back + recompute) — the Fig. 1 cliff
+        passes = 1.0 + (job.iterations - 1) * miss * SPILL_PENALTY
+    else:
+        passes = float(job.iterations)
+    agg_bw = DISK_BW_GIB_S * cfg.scale_out
+    t_io = passes * job.dataset_gib / agg_bw
+    # fixed per-job startup (scheduling, JVM spin-up) grows mildly w/ nodes
+    t_start = 30.0 + 0.5 * cfg.scale_out
+    return t_compute + t_io + t_start
+
+
+def cost_usd(job: JobSpec, cfg: ClusterConfig) -> float:
+    return runtime_s(job, cfg) / 3600.0 * cfg.usd_per_hour
+
+
+def build_history(jobs: List[JobSpec] = None,
+                  catalog: List[ClusterConfig] = None) -> ExecutionHistory:
+    jobs = jobs or scout_like_jobs()
+    catalog = catalog or aws_like_catalog()
+    hist = ExecutionHistory()
+    for j in jobs:
+        for c in catalog:
+            t = runtime_s(j, c)
+            hist.add(Execution(j.name, c.name, t, t / 3600.0 * c.usd_per_hour))
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# synthetic profiling traces (what the laptop would have measured)
+# ---------------------------------------------------------------------------
+
+
+def make_profile_fn(job: JobSpec, seed: int = 0) -> Callable[[float],
+                                                             ProfileResult]:
+    def profile_at(size_bytes: float) -> ProfileResult:
+        # deterministic per (job, size): re-profiling the same sample gives
+        # the same reading
+        rng = np.random.default_rng(
+            abs(hash((job.name, seed, round(size_bytes)))) % (2 ** 31))
+        s_gib = size_bytes / GiB
+        base = JVM_BASE_GIB * GiB
+        if job.mem_profile == "linear":
+            mem = job.working_set_factor * size_bytes
+            mem *= 1.0 + rng.normal(0.0, 0.002)
+        elif job.mem_profile == "noisy":
+            mem = job.working_set_factor * size_bytes
+            mem *= 1.0 + rng.normal(0.0, 0.09) + 0.08 * math.sin(s_gib * 17.0)
+        else:  # flat
+            mem = 0.35 * GiB * (1.0 + rng.normal(0.0, 0.08))
+        wall = 20.0 + 40.0 * s_gib     # seconds; matches paper's 0.5-3 min/run
+        return ProfileResult(size_bytes, base + max(mem, 0.0), base, wall)
+
+    return profile_at

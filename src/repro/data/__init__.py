@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLMDataset, MemmapDataset,
+                                 ShardedLoader, make_batch_fn)

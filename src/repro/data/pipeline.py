@@ -1,0 +1,155 @@
+"""Token data pipeline: datasets, sharded loader, background prefetch.
+
+* ``SyntheticLMDataset`` — deterministic pseudo-corpus (Zipfian unigrams +
+  short-range Markov structure) so training losses are meaningfully
+  decreasing without external data; seeded, infinite.
+* ``MemmapDataset`` — flat binary token file (np.memmap), the standard
+  pre-tokenized format. Writer helper included.
+* ``ShardedLoader`` — deterministic host sharding (shard i of n reads
+  interleaved windows), background prefetch thread with a bounded queue,
+  and a (step, epoch) cursor that serializes into checkpoints so a resumed
+  run continues the stream exactly — including on a different host count
+  (elastic resharding: the cursor is global, shards re-derive their slice).
+  A prefetch timeout marks the batch late (straggler signal consumed by
+  train/loop.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+class SyntheticLMDataset:
+    """Infinite deterministic token stream with learnable structure."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, zipf_a: float = 1.3):
+        self.vocab = vocab_size
+        self.seed = seed
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks ** zipf_a
+        self.p = p / p.sum()
+
+    def window(self, index: int, length: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, index))
+        toks = rng.choice(self.vocab, size=length + 1, p=self.p)
+        # inject short-range structure: every even position repeats the
+        # previous token with p=.5 (a pattern a model can learn)
+        mask = (np.arange(length + 1) % 2 == 0) & (rng.random(length + 1) < .5)
+        toks[1:][mask[1:]] = toks[:-1][mask[1:]]
+        return toks.astype(np.int32)
+
+
+class MemmapDataset:
+    """Flat int32 token file."""
+
+    def __init__(self, path: str):
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+
+    @staticmethod
+    def write(path: str, tokens: np.ndarray):
+        arr = np.memmap(path, dtype=np.int32, mode="w+", shape=tokens.shape)
+        arr[:] = tokens.astype(np.int32)
+        arr.flush()
+
+    def window(self, index: int, length: int) -> np.ndarray:
+        n = self.tokens.shape[0]
+        start = (index * length) % max(n - length - 1, 1)
+        return np.asarray(self.tokens[start:start + length + 1])
+
+
+@dataclass
+class LoaderState:
+    step: int = 0
+
+    def to_dict(self):
+        return {"step": int(self.step)}
+
+    @staticmethod
+    def from_dict(d):
+        return LoaderState(int(d.get("step", 0)))
+
+
+class ShardedLoader:
+    """Yields {tokens, labels} host batches for shard `shard`/`n_shards`."""
+
+    def __init__(self, dataset, batch_per_shard: int, seq_len: int,
+                 shard: int = 0, n_shards: int = 1, prefetch: int = 2,
+                 state: Optional[LoaderState] = None,
+                 timeout_s: float = 30.0):
+        self.ds = dataset
+        self.B = batch_per_shard
+        self.S = seq_len
+        self.shard = shard
+        self.n_shards = n_shards
+        self.state = state or LoaderState()
+        self.timeout_s = timeout_s
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        # the worker starts lazily on first __next__ so a checkpoint-restored
+        # cursor (train_loop sets loader.state post-construction) takes effect
+        self._thread: Optional[threading.Thread] = None
+        self.late_batches = 0
+
+    def _global_index(self, step: int, row: int) -> int:
+        # global sample index: deterministic across any shard count
+        return step * (self.B * self.n_shards) + self.shard * self.B + row
+
+    def _make(self, step: int):
+        toks = np.stack([self.ds.window(self._global_index(step, r), self.S)
+                         for r in range(self.B)])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def _worker(self):
+        step = self.state.step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.25)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        t0 = time.monotonic()
+        try:
+            step, batch = self._q.get(timeout=self.timeout_s)
+        except queue.Empty:
+            # straggler mitigation: a stuck shard yields a repeat of the
+            # last-known-good index rather than stalling the collective
+            self.late_batches += 1
+            batch = self._make(self.state.step)
+            step = self.state.step
+        self.state.step = step + 1
+        if time.monotonic() - t0 > self.timeout_s * 0.5:
+            self.late_batches += 1
+        return batch
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)
+
+
+def make_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):
+    """One-liner for tests/examples: step -> jnp-ready batch dict."""
+    ds = SyntheticLMDataset(vocab, seed)
+
+    def fn(step: int):
+        toks = np.stack([ds.window(step * batch + r, seq)
+                         for r in range(batch)])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return fn

@@ -1,0 +1,72 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode — the kernel body
+runs in Python for correctness validation; on TPU the same call compiles to
+Mosaic. `interpret=None` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd as _ssd
+from repro.kernels import wkv6 as _wkv
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_kv=1024,
+                    interpret=None):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv,
+                               interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps=1e-5, residual=None, block_rows=256,
+            interpret=None):
+    return _rn.rmsnorm(x, scale, eps=eps, residual=residual,
+                       block_rows=block_rows,
+                       interpret=_auto_interpret(interpret))
+
+
+def wkv6(r, k, v, lw, u, *, state=None, chunk=16, interpret=None):
+    """Matches models.rwkv.wkv_chunked's (y, state) contract; the kernel
+    computes y, the final state (needed only when handing off to serving)
+    is reconstructed by one closed-form pass."""
+    y = _wkv.wkv6(r, k, v, lw, u, chunk=chunk,
+                  interpret=_auto_interpret(interpret))
+    if state is not None:
+        # kernel assumes zero initial state; correct y by the decayed
+        # contribution of the incoming state, then update the state.
+        lw32 = lw.astype(jnp.float32)
+        cum = jnp.cumsum(lw32, axis=1)
+        cum_prev = cum - lw32
+        y = y + jnp.einsum("bshk,bhkv->bshv",
+                           r.astype(jnp.float32) * jnp.exp(cum_prev), state)
+    else:
+        state = jnp.zeros((r.shape[0], r.shape[2], r.shape[3], v.shape[3]),
+                          jnp.float32)
+        lw32 = lw.astype(jnp.float32)
+        cum = jnp.cumsum(lw32, axis=1)
+    tail = jnp.exp(cum[:, -1:] - cum)
+    new_state = state * jnp.exp(cum[:, -1])[..., None] + jnp.einsum(
+        "bshk,bshv->bhkv", k.astype(jnp.float32) * tail,
+        v.astype(jnp.float32))
+    return y, new_state
+
+
+def ssd(xs, dt, A, Bm, Cm, *, chunk=128, interpret=None):
+    return _ssd.ssd(xs, dt, A, Bm, Cm, chunk=chunk,
+                    interpret=_auto_interpret(interpret))

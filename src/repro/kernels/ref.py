@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each mirrors the corresponding kernel contract exactly; the model code's
+recurrent/step implementations double as independent second oracles.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,Sq,H,D); k,v: (B,Sk,Hkv,D)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5, residual=None):
+    x32 = x.astype(jnp.float32)
+    if residual is not None:
+        x32 = x32 + residual.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """Step-by-step recurrence. Returns y (B,S,H,K) f32."""
+    B, S, H, K = r.shape
+    state = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(S_t, inp):
+        r_t, k_t, v_t, w_t = (a.astype(jnp.float32) for a in inp)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S_t + u.astype(jnp.float32)[None, :, :, None] * kv)
+        return S_t * jnp.exp(w_t)[..., None] + kv, y
+
+    _, ys = jax.lax.scan(step, state,
+                         tuple(a.transpose(1, 0, 2, 3)
+                               for a in (r, k, v, lw)))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def ssd_ref(xs, dt, A, Bm, Cm):
+    """Step-by-step SSD recurrence. Returns y (B,S,H,P) f32."""
+    B, S, H, P = xs.shape
+    N = Bm.shape[-1]
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a = jnp.exp(dt_t * A[None, :])
+        h = h * a[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", b_t * dt_t[..., None], x_t)
+        return h, jnp.einsum("bhn,bhnp->bhp", c_t, h)
+
+    _, ys = jax.lax.scan(
+        step, h0,
+        (xs.astype(jnp.float32).transpose(1, 0, 2, 3),
+         dt.transpose(1, 0, 2),
+         Bm.astype(jnp.float32).transpose(1, 0, 2, 3),
+         Cm.astype(jnp.float32).transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,94 @@
+"""Pallas TPU Mamba2 SSD kernel: chunked state-space scan.
+
+Grid = (B, H, n_chunks) with the chunk index sequential; (N, P) state in
+VMEM scratch. Per chunk: the intra-chunk (Q, Q) decay-weighted C.B matmul
+runs on the MXU; decays are scalar per head so the tile is 2-D (unlike
+wkv6's per-channel 3-D decay). All exponents <= 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
+            n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (Q,)
+    A = a_ref[0].astype(jnp.float32)          # scalar (per head), < 0
+    Bm = b_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    h = h_scr[...]                             # (N, P)
+
+    la = dt * A                                # (Q,) log decay
+    cum = jnp.cumsum(la)
+    Q = x.shape[0]
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    dec = jnp.exp(jnp.minimum(cum[:, None] - cum[None, :], 0.0))
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    M = jnp.where(tri, cb * dec, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    tail = jnp.exp(cum[-1] - cum)              # (Q,)
+    h_scr[...] = h * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        Bm * (tail * dt)[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd(xs, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """xs: (B,S,H,P); dt: (B,S,H) f32; A: (H,); Bm/Cm: (B,S,H,N).
+    Returns (y (B,S,H,P) f32, None)."""
+    B, S, H, P = xs.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+
+    def prep(a):
+        a = jnp.moveaxis(a, 2, 1)
+        if pad:
+            cfg = [(0, 0)] * a.ndim
+            cfg[2] = (0, pad)
+            a = jnp.pad(a, cfg)
+        return a
+
+    xt = prep(xs)
+    bt = prep(Bm)
+    ct = prep(Cm)
+    dtt = jnp.moveaxis(dt, 2, 1)
+    if pad:
+        dtt = jnp.pad(dtt, ((0, 0), (0, 0), (0, pad)))
+    n_chunks = (S + pad) // chunk
+
+    kernel = functools.partial(_kernel, n_chunks=n_chunks)
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, n_chunks * chunk, P),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A, bt, ct)
+    return jnp.moveaxis(y, 1, 2)[:, :S], None

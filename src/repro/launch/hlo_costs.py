@@ -1,0 +1,283 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — while
+loops (every lax.scan: microbatch accumulation, scan-over-layers, blocked
+attention) are counted per-iteration, underreporting FLOPs by the product
+of trip counts (validated in tests/test_roofline.py). This module parses
+the per-device optimized HLO and:
+
+  1. builds the computation call graph (while bodies, fusions, calls,
+     conditionals) with static trip counts recovered from each while
+     condition's ``compare(iv, constant(N)), direction=LT``;
+  2. charges every ``dot`` 2 * out_elems * contraction_size FLOPs and
+     lhs+rhs+out bytes, every collective its ring wire bytes — each
+     multiplied by the product of enclosing trip counts.
+
+The result is the honest per-device roofline numerator set.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+    r"c64|c128)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|called_computations=\{[^}]*|true_computation|"
+    r"false_computation|branch_computations=\{[^}]*)=?%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_DOT_RE = re.compile(r"\bdot\(([^)]*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\-?\d+)\)")
+_CMP_RE = re.compile(r"compare\(([^)]*)\).*direction=(\w+)")
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(text: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    defs: Dict[str, str] = field(default_factory=dict)  # op name -> rhs text
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(stripped)
+        dm = _DEF_RE.match(stripped)
+        if dm:
+            cur.defs[dm.group(1)] = dm.group(2)
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover N from the while condition (lax.scan lowers to
+    `iv < constant(N)`; XLA usually wraps the compare in a kLoop fusion with
+    the constant as a fusion operand). Strategy: direct compare-operand
+    lookup first, else the max constant defined in the condition — scan
+    conditions contain exactly the bound (plus possibly 0/1 increments)."""
+    consts: Dict[str, int] = {}
+    for name, rhs in cond.defs.items():
+        cm = _CONST_RE.search(rhs)
+        if cm:
+            consts[name] = int(cm.group(1))
+    for rhs in cond.defs.values():
+        m = _CMP_RE.search(rhs)
+        if not m:
+            continue
+        ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+        ops = [o.split(" ")[-1].lstrip("%") for o in ops]
+        for o in ops:
+            if o in consts and consts[o] > 0:
+                return consts[o]
+    if consts:
+        best = max(consts.values())
+        if best >= 1:
+            return best
+    return 1
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, int]:
+    """Effective execution count of each computation from the entry."""
+    mult: Dict[str, int] = {}
+
+    import sys
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, 10000))
+
+    def visit(name: str, factor: int):
+        if name not in comps:
+            return
+        # accumulate (a computation can be called from several sites)
+        mult[name] = mult.get(name, 0) + factor
+        comp = comps[name]
+        for line in comp.lines:
+            if _WHILE_RE.search(line):
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if cond and cond in comps:
+                    visit(cond, factor * (trips + 1))
+                if body and body in comps:
+                    visit(body, factor * trips)
+            else:
+                for m in re.finditer(
+                        r"(?:to_apply|true_computation|false_computation|"
+                        r"calls)=%?([\w.\-]+)", line):
+                    visit(m.group(1), factor)
+                m = re.search(r"called_computations=\{([^}]*)\}", line)
+                if m:
+                    for c in m.group(1).split(","):
+                        visit(c.strip().lstrip("%"), factor)
+        return
+
+    visit(entry, 1)
+    sys.setrecursionlimit(old_limit)
+    return mult
+
+
+@dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+    n_while: int = 0
+    max_mult: int = 1
+
+
+def _operand_names(argtext: str) -> List[str]:
+    names = []
+    depth = 0
+    cur = ""
+    for ch in argtext:
+        if ch == "(" or ch == "{" or ch == "[":
+            depth += 1
+        elif ch == ")" or ch == "}" or ch == "]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            names.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        names.append(cur.strip())
+    out = []
+    for n in names:
+        n = n.split(" ")[-1]
+        out.append(n.lstrip("%"))
+    return out
+
+
+def analyze(hlo: str, n_devices: int) -> HloCosts:
+    comps, entry = parse_computations(hlo)
+    mult = _multipliers(comps, entry)
+    costs = HloCosts()
+    # global def map for operand shape lookup (names are module-unique)
+    gdefs: Dict[str, str] = {}
+    for comp in comps.values():
+        gdefs.update(comp.defs)
+        # parameters: "p = f32[..] parameter(0)" are in defs already
+    for cname, comp in comps.items():
+        factor = mult.get(cname, 0)
+        if factor <= 0:
+            continue
+        costs.max_mult = max(costs.max_mult, factor)
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            out_type = rhs.split(" ")[0]
+            d = _DOT_RE.search(rhs)
+            if d and " dot(" in " " + rhs:
+                out_elems = _nelems(out_type)
+                ops = _operand_names(d.group(1))
+                lhs_shape = _shape_dims(gdefs.get(ops[0], "")) if ops else []
+                contract = 1
+                cm = _CONTRACT_RE.search(rhs)
+                if cm and lhs_shape:
+                    dims = lhs_shape[0][1]
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contract *= dims[int(idx)]
+                flops = 2.0 * out_elems * contract
+                io = _nbytes(out_type)
+                for o in ops[:2]:
+                    io += _nbytes(gdefs.get(o, "").split(" ")[0])
+                costs.dot_flops += flops * factor
+                costs.dot_bytes += io * factor
+                continue
+            c = _COLL_RE.search(rhs)
+            if c and "-done" not in rhs[:40]:
+                size = _nbytes(out_type)
+                if size == 0:
+                    continue
+                kind = c.group(1)
+                n = _group_size(rhs, n_devices)
+                ring = (n - 1) / max(n, 1)
+                if kind == "all-reduce":
+                    wire = 2.0 * size * ring
+                elif kind == "collective-permute":
+                    wire = float(size)
+                else:
+                    wire = size * ring
+                costs.coll_wire_bytes += wire * factor
+                costs.coll_by_kind[kind] = \
+                    costs.coll_by_kind.get(kind, 0.0) + wire * factor
+                costs.coll_counts[kind] = \
+                    costs.coll_counts.get(kind, 0) + factor
+            if _WHILE_RE.search(rhs):
+                costs.n_while += 1
+    return costs
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices

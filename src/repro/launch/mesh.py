@@ -1,0 +1,41 @@
+"""Production mesh builders.
+
+`make_production_mesh` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+while smoke tests and benches see 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes,
+                         axis_types=(AxisType.Auto,) * len(cfg.axes))
+
+
+def make_local_mesh(model: int = 1, data: Optional[int] = None):
+    """Mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def mesh_config(mesh) -> MeshConfig:
+    return MeshConfig(tuple(mesh.shape[a] for a in mesh.axis_names),
+                      tuple(mesh.axis_names))

@@ -1,0 +1,2 @@
+from repro.models.model import (Model, build_model, input_specs,
+                                analytic_param_count)

@@ -1,0 +1,211 @@
+"""RWKV6 ("Finch") block: token-shift time-mix with data-dependent decay,
+WKV linear-attention recurrence, and squared-ReLU channel-mix.
+
+Recurrence per head (state S: (K, V), K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t in (0,1), data-dependent
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Chunked closed form (cum[i] = sum_{k<=i} log w_k, exponents <= 0, stable):
+    A[t,j]  = sum_K r_t[K] k_j[K] exp(cum[t-1,K] - cum[j,K])   (j < t)
+    y_t     = sum_j A[t,j] v_j + (r_t . (u*k_t)) v_t + r_t^T diag(exp(cum[t-1])) S_in
+The per-channel decay makes A a 3-tensor contraction — this is the
+perf-critical op the Pallas wkv6 kernel tiles (repro/kernels/wkv6.py).
+
+Fidelity note (DESIGN.md): decay w is data-dependent via the Finch LoRA
+(w = exp(-exp(w0 + tanh(x @ A) @ B))); the r/k/v/g token-shift mixes use
+static learned coefficients (full Finch also LoRAs those — the decay is the
+architecturally significant part and is reproduced exactly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    K = d // H
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 64)
+    return {
+        "mix": 0.5 * jnp.ones((5, d)),          # mu for r,k,v,g,w
+        "wr": L.dense_init(ks[0], (d, H, K)),
+        "wk": L.dense_init(ks[1], (d, H, K)),
+        "wv": L.dense_init(ks[2], (d, H, K)),
+        "wg": L.dense_init(ks[3], (d, d)),
+        "w0": jnp.zeros((H, K)) - 0.6,          # base decay ~ exp(-exp(-0.6))
+        "w_lora_a": L.dense_init(ks[4], (d, lora)),
+        "w_lora_b": L.dense_init(ks[5], (lora, H, K), in_axis_size=lora) * 0.1,
+        "u": 0.1 * jax.random.normal(ks[6], (H, K)),
+        "ln_x": jnp.ones((d,)),                 # per-head group norm scale
+        "wo": L.dense_init(ks[7], (d, d)),
+        # channel mix
+        "cm_mix": 0.5 * jnp.ones((2, d)),
+        "cm_k": L.dense_init(ks[8], (d, cfg.d_ff)),
+        "cm_v": L.dense_init(ks[9], (cfg.d_ff, d), in_axis_size=cfg.d_ff),
+        "cm_r": L.dense_init(ks[10], (d, d)),
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} with zero (or carried `last`) at t=0. x: (B,S,d)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _decay(params, xw):
+    """Data-dependent log-decay lw (B,S,H,K), <= -exp(w0-ish) < 0."""
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw,
+                             params["w_lora_a"].astype(xw.dtype)))
+    ww = params["w0"].astype(jnp.float32) + \
+        jnp.einsum("bsr,rhk->bshk", lo, params["w_lora_b"].astype(xw.dtype)
+                   ).astype(jnp.float32)
+    return -jnp.exp(ww)          # log w_t = -exp(ww)  =>  w in (0,1)
+
+
+def time_mix(params, x, cfg: ModelConfig, run: RunConfig, state=None,
+             shift_last=None):
+    """WKV6 time-mix over a sequence. Returns (out, (new_state, new_last))."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    K = d // H
+    xp = _token_shift(x, shift_last)
+    mix = params["mix"].astype(x.dtype)
+    xr = x + (xp - x) * mix[0]
+    xk = x + (xp - x) * mix[1]
+    xv = x + (xp - x) * mix[2]
+    xg = x + (xp - x) * mix[3]
+    xw = x + (xp - x) * mix[4]
+    r = jnp.einsum("bsd,dhk->bshk", xr, params["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xk, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xv, params["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["wg"].astype(x.dtype)))
+    lw = _decay(params, xw)                                   # (B,S,H,K) f32
+    u = params["u"].astype(jnp.float32)
+    if run.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        y, new_state = kops.wkv6(r, k, v, lw, u, state=state)
+    else:
+        y, new_state = wkv_chunked(r, k, v, lw, u, chunk=16, state=state)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    # per-head group norm
+    yh = y.reshape(B, S, H, K)
+    mu = jnp.mean(yh.astype(jnp.float32), -1, keepdims=True)
+    var = jnp.var(yh.astype(jnp.float32), -1, keepdims=True)
+    yh = ((yh - mu) * jax.lax.rsqrt(var + 64e-5)).astype(x.dtype)
+    y = yh.reshape(B, S, d) * params["ln_x"].astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y * g, params["wo"].astype(x.dtype))
+    return out, (new_state, x[:, -1, :])
+
+
+def wkv_chunked(r, k, v, lw, u, chunk: int, state=None):
+    """Chunked WKV6. r,k,v: (B,S,H,K); lw: (B,S,H,K) log-decay (<0);
+    u: (H,K). Returns y (B,S,H,K) f32, final state (B,H,K,K) f32
+    (state[k_dim, v_dim])."""
+    B, S, H, K = r.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, z4) for a in (r, k, v))
+        lw = jnp.pad(lw, z4)  # pad decay 0 => w=1 (no-op steps)
+    nC = (S + pad) // Q
+    rc = r.reshape(B, nC, Q, H, K).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nC, Q, H, K).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nC, Q, H, K).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    wc = lw.reshape(B, nC, Q, H, K).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    if state is None:
+        state = jnp.zeros((B, H, K, K), jnp.float32)
+
+    tri = jnp.arange(Q)[:, None] > jnp.arange(Q)[None, :]       # strict lower
+
+    def per_chunk(S_in, inp):
+        rq, kq, vq, wq = inp                                    # (B,Q,H,K)
+        cum = jnp.cumsum(wq, axis=1)                            # (B,Q,H,K)
+        cum_prev = cum - wq                                     # cum[t-1] = cum[t]-w[t]
+        # A[t,j] = sum_K r_t k_j exp(cum_prev[t] - cum[j]), j < t
+        expo = cum_prev[:, :, None] - cum[:, None, :]           # (B,t,j,H,K)
+        A = jnp.einsum("bthk,bjhk,btjhk->bhtj", rq, kq,
+                       jnp.exp(jnp.minimum(expo, 0.0)))
+        A = A * tri[None, None]
+        diag = jnp.einsum("bthk,hk,bthk->bth", rq, u, kq)       # bonus term
+        y = jnp.einsum("bhtj,bjhk->bthk", A, vq)
+        y = y + diag[..., None] * vq
+        y = y + jnp.einsum("bthk,bhkv->bthv", rq * jnp.exp(cum_prev), S_in)
+        # state: S_out = diag(exp(cum[-1])) S_in + sum_j diag(exp(cum[-1]-cum[j])) k_j v_j^T
+        tail = jnp.exp(cum[:, -1:] - cum)                       # (B,Q,H,K)
+        S_out = S_in * jnp.exp(cum[:, -1])[..., None] + \
+            jnp.einsum("bjhk,bjhv->bhkv", kq * tail, vq)
+        return S_out, y
+
+    S_fin, ys = lax.scan(per_chunk, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nC * Q, H, K)
+    return y[:, :S], S_fin
+
+
+def wkv_recurrent(r, k, v, lw, u, state=None):
+    """Step oracle (tests / decode). Same contract as wkv_chunked."""
+    B, S, H, K = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(S_t, inp):
+        r_t, k_t, v_t, w_t = (a.astype(jnp.float32) for a in inp)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_t + u[None, :, :, None] * kv)
+        S_new = S_t * jnp.exp(w_t)[..., None] + kv
+        return S_new, y
+
+    S_fin, ys = lax.scan(step, state,
+                         tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, lw)))
+    return ys.transpose(1, 0, 2, 3), S_fin
+
+
+def channel_mix(params, x, state_last=None):
+    xp = _token_shift(x, state_last)
+    mix = params["cm_mix"].astype(x.dtype)
+    xk = x + (xp - x) * mix[0]
+    xr = x + (xp - x) * mix[1]
+    kk = jnp.einsum("bsd,df->bsf", xk, params["cm_k"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["cm_v"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                   params["cm_r"].astype(x.dtype)))
+    return vv * rr, x[:, -1, :]
+
+
+def rwkv_block(params, x, cfg: ModelConfig, run: RunConfig, norms):
+    """Full RWKV6 layer: ln1 -> time-mix -> residual; ln2 -> channel-mix."""
+    h, _ = time_mix(params, L.rms_norm(x, norms["ln1"], cfg.norm_eps), cfg, run)
+    x = x + h
+    h, _ = channel_mix(params, L.rms_norm(x, norms["ln2"], cfg.norm_eps))
+    return x + h
+
+
+def rwkv_block_decode(params, x, cache, cfg: ModelConfig, run: RunConfig,
+                      norms):
+    """One-token decode. cache: {"wkv": (B,H,K,K), "tm_last": (B,d),
+    "cm_last": (B,d)}."""
+    xn = L.rms_norm(x, norms["ln1"], cfg.norm_eps)
+    h, (wkv, tm_last) = time_mix(params, xn, cfg, run,
+                                 state=cache["wkv"],
+                                 shift_last=cache["tm_last"])
+    x = x + h
+    xn = L.rms_norm(x, norms["ln2"], cfg.norm_eps)
+    h, cm_last = channel_mix(params, xn, state_last=cache["cm_last"])
+    return x + h, {"wkv": wkv, "tm_last": tm_last, "cm_last": cm_last}
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    K = d // H
+    return {"wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+            "tm_last": jnp.zeros((batch, d), dtype),
+            "cm_last": jnp.zeros((batch, d), dtype)}

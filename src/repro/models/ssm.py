@@ -1,0 +1,215 @@
+"""Mamba2 block (SSD — state space dual, chunked scan).
+
+Recurrence per head (state h: (N, P), N = d_state, P = head_dim):
+    a_t = exp(dt_t * A)                    (scalar decay per head, A < 0)
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t^T h_t + D * x_t
+
+Chunked closed form (chunk Q, cum[i] = sum_{k<=i} dt_k*A, all exponents <= 0
+so it is unconditionally stable):
+    Y_intra[i] = sum_{j<=i} (C_i.B_j) exp(cum[i]-cum[j]) dt_j x_j
+    Y_inter[i] = exp(cum[i]) C_i . h_in
+    h_out      = exp(cum[Q-1]) h_in + sum_j exp(cum[Q-1]-cum[j]) dt_j B_j x_j^T
+
+The Pallas kernel in repro/kernels/ssd.py implements the same contract;
+ref oracle = the recurrent path below.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    N = s.d_state
+    conv_dim = d_inner + 2 * s.n_groups * N
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj -> [z (d_inner), xBC (conv_dim), dt (H)]
+        "in_proj": L.dense_init(ks[0], (d, 2 * d_inner + 2 * s.n_groups * N + H)),
+        "conv_w": L.dense_init(ks[1], (s.d_conv, conv_dim)) * 0.5,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),    # A = -exp(A_log)
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(                     # softplus^-1 of ~1e-3..1e-1
+            jnp.exp(jax.random.uniform(ks[2], (H,),
+                                       minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "ssm_norm": jnp.ones((d_inner,)),
+        "out_proj": L.dense_init(ks[3], (d_inner, d), in_axis_size=d_inner),
+    }
+
+
+def _split_in_proj(cfg, proj):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    gN = s.n_groups * s.d_state
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:2 * d_inner + 2 * gN]
+    dt = proj[..., 2 * d_inner + 2 * gN:]
+    return z, xBC, dt, d_inner, H, gN
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width d_conv. xBC: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(W):
+        out = out + pad[:, i:i + xBC.shape[1]] * w[i]
+    return out + b
+
+
+def mamba2(params, x, cfg: ModelConfig, run: RunConfig):
+    """Full-sequence (train/prefill) Mamba2 block. x: (B,S,d) -> (B,S,d)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, xBC, dt, d_inner, H, gN = _split_in_proj(cfg, proj)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                                   params["conv_b"].astype(x.dtype)))
+    xs = xBC[..., :d_inner].reshape(B, S, H, s.head_dim)
+    Bm = xBC[..., d_inner:d_inner + gN].reshape(B, S, s.n_groups, s.d_state)
+    Cm = xBC[..., d_inner + gN:].reshape(B, S, s.n_groups, s.d_state)
+    # broadcast groups over heads
+    rep = H // s.n_groups
+    Bm = jnp.repeat(Bm, rep, axis=2)   # (B,S,H,N)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (H,)
+
+    if run.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd(xs, dt, A, Bm, Cm, chunk=s.chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=s.chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs.astype(y.dtype)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["ssm_norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(x.dtype))
+
+
+def ssd_chunked(xs, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD. xs: (B,S,H,P); dt: (B,S,H) f32; A: (H,); Bm/Cm: (B,S,H,N).
+    Returns y (B,S,H,P) f32 and final state (B,H,N,P)."""
+    B, S, H, P = xs.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = (S + pad) // Q
+    xs_c = xs.reshape(B, nC, Q, H, P).astype(jnp.float32)
+    dt_c = dt.reshape(B, nC, Q, H)
+    Bm_c = Bm.reshape(B, nC, Q, H, N).astype(jnp.float32)
+    Cm_c = Cm.reshape(B, nC, Q, H, N).astype(jnp.float32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def per_chunk(h, inp):
+        xq, dq, bq, cq = inp          # (B,Q,H,P),(B,Q,H),(B,Q,H,N),(B,Q,H,N)
+        la = dq * A[None, None, :]    # (B,Q,H) log-decay per step, <= 0
+        cum = jnp.cumsum(la, axis=1)  # (B,Q,H)
+        # intra-chunk: M[b,h,i,j] = (C_i.B_j) exp(cum_i-cum_j) dt_j  (j<=i)
+        cb = jnp.einsum("bihn,bjhn->bhij", cq, bq)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,i,j,H)
+        dec = jnp.where(jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :],
+                        dec.transpose(0, 3, 1, 2), 0.0)          # (B,H,i,j)
+        M = cb * dec * dq.transpose(0, 2, 1)[:, :, None, :]      # *dt_j
+        y_intra = jnp.einsum("bhij,bjhp->bihp", M, xq)
+        # inter-chunk: exp(cum_i) C_i . h_in
+        y_inter = jnp.einsum("bihn,bhnp->bihp", cq, h) * \
+            jnp.exp(cum)[:, :, :, None]
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)                     # (B,Q,H)
+        h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + \
+            jnp.einsum("bjhn,bjhp->bhnp", bq * (tail * dq)[..., None], xq)
+        return h_new, y_intra + y_inter
+
+    h_fin, ys = lax.scan(per_chunk, h0,
+                         (xs_c.transpose(1, 0, 2, 3, 4),
+                          dt_c.transpose(1, 0, 2, 3),
+                          Bm_c.transpose(1, 0, 2, 3, 4),
+                          Cm_c.transpose(1, 0, 2, 3, 4)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nC * Q, H, P)
+    return y[:, :S], h_fin
+
+
+def ssd_recurrent(xs, dt, A, Bm, Cm, h0=None):
+    """Step-by-step oracle for tests / ref.py. Same signature as chunked."""
+    B, S, H, P = xs.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a = jnp.exp(dt_t * A[None, :])                 # (B,H)
+        h = h * a[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", b_t * dt_t[..., None], x_t)
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, h)
+        return h, y
+
+    xs32 = xs.astype(jnp.float32)
+    h, ys = lax.scan(step, h0,
+                     (xs32.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                      Bm.astype(jnp.float32).transpose(1, 0, 2, 3),
+                      Cm.astype(jnp.float32).transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def mamba2_decode(params, x, cache, cfg: ModelConfig, run: RunConfig):
+    """One-token decode. cache: {"h": (B,H,N,P) f32, "conv": (B,W-1,convdim)}."""
+    s = cfg.ssm
+    B = x.shape[0]
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, xBC, dt, d_inner, H, gN = _split_in_proj(cfg, proj)
+    # conv with carried window
+    W = s.d_conv
+    win = jnp.concatenate([cache["conv"], xBC.astype(cache["conv"].dtype)], 1)
+    conv_out = jnp.einsum("bwc,wc->bc", win, params["conv_w"].astype(win.dtype))
+    xBC = jax.nn.silu(conv_out + params["conv_b"].astype(win.dtype))[:, None, :]
+    new_conv = win[:, 1:]
+    xs = xBC[..., :d_inner].reshape(B, 1, H, s.head_dim)
+    rep = H // s.n_groups
+    Bm = jnp.repeat(xBC[..., d_inner:d_inner + gN]
+                    .reshape(B, 1, s.n_groups, s.d_state), rep, 2)
+    Cm = jnp.repeat(xBC[..., d_inner + gN:]
+                    .reshape(B, 1, s.n_groups, s.d_state), rep, 2)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) +
+                          params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    h = cache["h"]
+    a = jnp.exp(dtv * A[None, :])
+    h = h * a[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bm[:, 0].astype(jnp.float32) * dtv[..., None],
+        xs[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * \
+        xs[:, 0].astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(x.dtype))
+    return out, {"h": h, "conv": new_conv}
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return {"h": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+            "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype)}

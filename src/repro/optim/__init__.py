@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, init_adamw, adamw_update,
+                               OptState)
+from repro.optim.schedule import cosine_warmup
+from repro.optim.compression import compress_grads_bf16

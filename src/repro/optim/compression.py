@@ -1,0 +1,35 @@
+"""Gradient compression with error feedback.
+
+bf16 all-reduce halves cross-pod (DCN) gradient traffic; the f32 residual of
+each cast is carried to the next step so the compression is unbiased over
+time (error-feedback / EF21-style). With pjit the cast happens *before* the
+psum that XLA inserts at the data/pod boundary, so the wire format is bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads_bf16(grads, residual):
+    """Returns (compressed_grads_bf16, new_residual_f32).
+
+    compressed = bf16(g + r);  new_r = (g + r) - f32(compressed)
+    """
+    if residual is None:
+        residual = jax.tree.map(
+            lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads)
+
+    def one(g, r):
+        tot = g.astype(jnp.float32) + r
+        q = tot.astype(jnp.bfloat16)
+        return q, tot - q.astype(jnp.float32)
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, rs = zip(*(one(g, r) for g, r in zip(flat_g, flat_r)))
+    return jax.tree.unflatten(td, qs), jax.tree.unflatten(td, rs)
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to `floor` of peak. Returns the LR
+    *scale* in [0, 1] — multiply by the optimizer's peak lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * cos

@@ -1,0 +1,149 @@
+"""Batched serving engine: continuous batching over a fixed-slot KV cache.
+
+The engine keeps `slots` concurrent sequences. Each scheduler tick:
+  1. admit queued requests into free slots (prompt tokens are injected
+     through the decode path token-by-token — teacher-forced prefill — so
+     one compiled decode_step serves both phases; architectures with a
+     fused prefill use it via `prefill_into_slot`);
+  2. run one batched decode_step for all active slots;
+  3. retire sequences that hit max tokens or EOS.
+
+Greedy or temperature sampling. This is the serving analogue the paper's
+"job" maps onto for decode shapes, and the engine the serve_demo example
+drives.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    submitted_at: float = field(default_factory=time.monotonic)
+    finished_at: Optional[float] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, slots: int, max_len: int,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self.caches = model.init_caches(slots, max_len)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pending: List[Request] = []
+        self.finished: List[Request] = []
+        self._feed: List[List[int]] = [[] for _ in range(slots)]
+        self._last_token = np.zeros((slots,), np.int32)
+
+        self._step = jax.jit(
+            lambda p, b, c: model.decode_step(p, b, c, None))
+
+    # -- public ------------------------------------------------------------
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def run(self, max_ticks: int = 10000) -> List[Request]:
+        ticks = 0
+        while (self.pending or any(self.active)) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.finished
+
+    # -- internals ----------------------------------------------------------
+    def tick(self):
+        self._admit()
+        if not any(self.active):
+            return
+        batch = {"tokens": jnp.asarray(self._last_token)[:, None]}
+        extras = self._extras()
+        batch.update(extras)
+        logits, self.caches = self._step(self.params, batch, self.caches)
+        logits = np.asarray(logits[:, 0])           # (slots, V)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self._feed[i]:
+                # still teacher-forcing the prompt
+                self._last_token[i] = self._feed[i].pop(0)
+                continue
+            tok = self._sample(logits[i], req.temperature)
+            req.out_tokens.append(int(tok))
+            self._last_token[i] = tok
+            if (len(req.out_tokens) >= req.max_new_tokens or
+                    (self.eos_id is not None and tok == self.eos_id)):
+                req.done = True
+                req.finished_at = time.monotonic()
+                self.finished.append(req)
+                self.active[i] = None
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.active[i] = req
+                self.caches = _reset_slot(self.caches, i)
+                self._feed[i] = list(req.prompt[1:])
+                self._last_token[i] = req.prompt[0]
+
+    def _extras(self) -> Dict:
+        cfg = self.model.cfg
+        extras = {}
+        if cfg.family == "vlm":
+            extras["media"] = jnp.zeros(
+                (self.slots, cfg.cross_attn.n_media_tokens, cfg.d_model),
+                jnp.float32)
+        if cfg.family == "audio":
+            extras["enc_out"] = jnp.zeros(
+                (self.slots, cfg.encdec.enc_len, cfg.d_model), jnp.float32)
+        return extras
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(np.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, jnp.asarray(logits) /
+                                          temperature))
+
+
+# base rank of each cache leaf kind; batch axis = ndim - base_rank
+_BATCH_RANK = {"k": 4, "v": 4, "ckv": 3, "kr": 3, "pos": 1,
+               "h": 4, "conv": 3, "wkv": 4, "tm_last": 2, "cm_last": 2}
+
+
+def _reset_slot(caches, slot: int):
+    """Zero one slot's state across all (stacked) cache leaves: per-row
+    `pos` goes to 0 so stale KV beyond it is never attended; recurrent
+    states are cleared explicitly."""
+    def one(path, leaf):
+        name = ""
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        rank = _BATCH_RANK.get(name)
+        if rank is None or leaf.ndim < rank:
+            return leaf
+        axis = leaf.ndim - rank
+        idx = (slice(None),) * axis + (slot,)
+        return leaf.at[idx].set(0)
+
+    return jax.tree_util.tree_map_with_path(one, caches)

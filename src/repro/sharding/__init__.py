@@ -1,0 +1,2 @@
+from repro.sharding.rules import (param_specs, opt_state_specs, cache_specs,
+                                  named, batch_spec)

@@ -1,0 +1,226 @@
+"""Logical-axis sharding rules: param-tree leaf name -> PartitionSpec.
+
+Megatron-style tensor parallelism over the 'model' mesh axis:
+  attention heads, MLP ff dim, expert dim, vocab dim -> 'model'
+plus optional FSDP of expert ff over 'data' (RunConfig.fsdp_experts) and
+ZeRO-1 sharding of optimizer state over ('pod','data').
+
+Specs are *trailing-dim* patterns: stacked scan params (leading layer /
+group dims) get Nones prepended automatically. A dim whose size is not
+divisible by its mesh axis falls back to replicated (e.g. whisper's 12
+heads on a 16-way model axis, chatglm's 2 KV heads) — correctness first,
+GSPMD still shards everything divisible.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+
+# (leaf name, trailing spec). First rank-compatible match wins.
+_RULES = [
+    ("embed", ("model", None)),
+    ("head", ("model", None)),
+    # attention projections (d, H, Dh) / (H, Dh, d)
+    ("wq", (None, "model", None)),
+    ("wk", (None, "model", None)),
+    ("wv", (None, "model", None)),
+    ("wo", ("model", None, None)),
+    ("wo", ("model", None)),            # rwkv output (d, d)
+    # MLA
+    ("wuq", (None, "model", None)),
+    ("wuk", (None, "model", None)),
+    ("wuv", (None, "model", None)),
+    # dense MLP (d, ff) / (ff, d)
+    ("gate", (None, "model")),
+    ("up", (None, "model")),
+    ("down", ("model", None)),
+    # MoE experts (E, d, f) / (E, f, d); f optionally FSDP over data
+    ("w_gate", ("model", None, "__ff__")),
+    ("w_up", ("model", None, "__ff__")),
+    ("w_down", ("model", "__ff__", None)),
+    # rwkv
+    ("wg", (None, "model")),
+    ("w_lora_b", (None, "model", None)),
+    ("u", ("model", None)),
+    ("w0", ("model", None)),
+    ("cm_k", (None, "model")),
+    ("cm_v", ("model", None)),
+    # mamba2
+    ("in_proj", (None, "model")),
+    ("out_proj", ("model", None)),
+    ("conv_w", (None, "model")),
+    ("conv_b", ("model",)),
+    ("A_log", ("model",)),
+    ("D", ("model",)),
+    ("dt_bias", ("model",)),
+    ("ssm_norm", ("model",)),
+]
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    try:
+        return mesh.shape[name]
+    except (KeyError, TypeError):
+        return 1
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+        n = getattr(p, "name", None)
+        if isinstance(n, str):
+            return n
+    return ""
+
+
+def _spec_for(name: str, shape: Tuple[int, ...], mesh: Mesh,
+              run: RunConfig) -> P:
+    ff_axis = "data" if run.fsdp_experts else None
+    for rule_name, trailing in _RULES:
+        if rule_name != name or len(trailing) > len(shape):
+            continue
+        lead = len(shape) - len(trailing)
+        spec = [None] * lead
+        ok = True
+        for dim, ax in zip(shape[lead:], trailing):
+            if ax == "__ff__":
+                ax = ff_axis
+            if ax is None:
+                spec.append(None)
+            elif dim % max(_axis_size(mesh, ax), 1) == 0 and \
+                    _axis_size(mesh, ax) > 1:
+                spec.append(ax)
+            elif _axis_size(mesh, ax) <= 1:
+                spec.append(None)
+            else:
+                spec.append(None)       # non-divisible -> replicate this dim
+        if ok:
+            if run.fsdp_params:
+                # FSDP: 2D-shard — put 'data' on the first replicated,
+                # divisible dim (weights gathered transiently per layer)
+                return _zero1_extend(P(*spec), shape, mesh, ("data",))
+            return P(*spec)
+    return P()                           # replicated (norms, scalars, biases)
+
+
+def param_specs(params, mesh: Optional[Mesh], run: RunConfig):
+    """PartitionSpec pytree matching `params` (which may be a pytree of
+    arrays or ShapeDtypeStructs)."""
+    if mesh is None:
+        return jax.tree.map(lambda _: P(), params)
+
+    def one(path, leaf):
+        return _spec_for(_leaf_name(path), leaf.shape, mesh, run)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _zero1_extend(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+                  axes=("data",)) -> P:
+    """ZeRO-1: additionally shard optimizer state over the data axis on the
+    first dim that is still replicated and divisible."""
+    spec_t = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for ax in axes:
+        n = _axis_size(mesh, ax)
+        if n <= 1:
+            continue
+        used = set(a for a in spec_t if a is not None)
+        if ax in used:
+            continue
+        for i, (dim, cur) in enumerate(zip(shape, spec_t)):
+            if cur is None and dim % n == 0 and dim >= n:
+                spec_t = spec_t[:i] + (ax,) + spec_t[i + 1:]
+                break
+    return P(*spec_t)
+
+
+def cache_specs(caches, mesh: Optional[Mesh], run: RunConfig,
+                global_batch: int):
+    """PartitionSpecs for serve caches. Batch dim over (pod, data) when
+    divisible; KV heads / state heads over 'model' when divisible."""
+    if mesh is None:
+        return jax.tree.map(lambda _: P(), caches)
+    baxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = 1
+    for a in baxes:
+        dp *= _axis_size(mesh, a)
+    bax = baxes if (dp > 1 and global_batch % dp == 0) else None
+
+    def model_if(dim):
+        n = _axis_size(mesh, "model")
+        return "model" if (n > 1 and dim % n == 0) else None
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        if name == "pos" or nd <= 1:
+            return P()
+        if name in ("k", "v", "k_scale", "v_scale"):  # (..., B, S, K, D|1)
+            lead = nd - 4
+            k_ax = model_if(leaf.shape[lead + 2])
+            # too few KV heads to shard (GQA kv<16, MQA): shard the cache's
+            # SEQUENCE dim over 'model' instead — decode attention becomes a
+            # sharded reduction over context chunks (flash-decoding layout)
+            s_ax = None if k_ax else model_if(leaf.shape[lead + 1])
+            return P(*([None] * lead), bax, s_ax, k_ax, None)
+        if name in ("ckv", "kr"):          # (..., B, S, r) — MLA latents
+            lead = nd - 3
+            # no head dim at all: always context-shard over 'model'
+            return P(*([None] * lead), bax, model_if(leaf.shape[lead + 1]),
+                     None)
+        if name == "h":                    # (..., B, H, N, P)
+            lead = nd - 4
+            return P(*([None] * lead), bax,
+                     model_if(leaf.shape[lead + 1]), None, None)
+        if name == "conv":                 # (..., B, W, C)
+            lead = nd - 3
+            return P(*([None] * lead), bax, None,
+                     model_if(leaf.shape[lead + 2]))
+        if name == "wkv":                  # (..., B, H, K, K)
+            lead = nd - 4
+            return P(*([None] * lead), bax,
+                     model_if(leaf.shape[lead + 1]), None, None)
+        if name in ("tm_last", "cm_last"):  # (..., B, d)
+            lead = nd - 2
+            return P(*([None] * lead), bax, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def opt_state_specs(opt_state, p_specs, params, mesh: Optional[Mesh],
+                    run: RunConfig):
+    """Specs for OptState(step, m, v, master): moments & master follow the
+    param spec, ZeRO-1-extended over 'data' (+ 'pod' if present)."""
+    if mesh is None:
+        return jax.tree.map(lambda _: P(), opt_state)
+    axes = tuple(a for a in ("data", "pod") if _axis_size(mesh, a) > 1) \
+        if run.zero1 else ()
+
+    def z(spec, leaf):
+        return _zero1_extend(spec, leaf.shape, mesh, axes) if axes else spec
+
+    m = jax.tree.map(z, p_specs, params)
+    v = jax.tree.map(z, p_specs, params)
+    master = None
+    if opt_state.master is not None:
+        master = jax.tree.map(z, p_specs, params)
+    from repro.optim.adamw import OptState
+    return OptState(P(), m, v, master)
+
+
+def batch_spec(mesh: Optional[Mesh], ndim: int = 2) -> P:
+    if mesh is None:
+        return P()
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def named(mesh: Optional[Mesh], spec: P):
+    return None if mesh is None else NamedSharding(mesh, spec)

@@ -1,0 +1,101 @@
+"""Train/eval step builders.
+
+`make_train_step(model, acfg, mesh)` returns a pure function
+  (state, batch) -> (state, metrics)
+with:
+  * microbatch gradient accumulation via lax.scan (RunConfig.microbatches) —
+    activation memory is bounded by one microbatch; the gradient all-reduce
+    XLA inserts at the data/pod boundary happens ONCE per step, after the
+    scan (compute/comm overlap: the scan's partial sums stay device-local);
+  * optional bf16 gradient compression with f32 error feedback carried in
+    the train state (cuts cross-pod DCN bytes in half);
+  * AdamW with ZeRO-1-sharded state (sharding specs from sharding/rules.py);
+  * cosine-warmup LR schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import RunConfig
+from repro.models.model import Model
+from repro.optim import (AdamWConfig, OptState, adamw_update, init_adamw,
+                         cosine_warmup)
+from repro.optim.compression import compress_grads_bf16, init_residual
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    residual: Optional[dict]      # grad-compression error feedback
+
+
+def init_train_state(model: Model, key, acfg: AdamWConfig) -> TrainState:
+    params = model.init(key)
+    opt = init_adamw(params, acfg)
+    res = init_residual(params) if model.run.grad_compression else None
+    return TrainState(params, opt, res)
+
+
+def make_train_step(model: Model, acfg: AdamWConfig, mesh=None, *,
+                    warmup: int = 100, total_steps: int = 10000):
+    run = model.run
+    n_micro = max(1, run.microbatches)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch, mesh)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+
+        if n_micro > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def mb_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            acc_dt = jnp.dtype(run.accum_dtype)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss_sum), _ = lax.scan(mb_body, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        residual = state.residual
+        if run.grad_compression:
+            grads, residual = compress_grads_bf16(grads, residual)
+
+        lr_scale = cosine_warmup(state.opt.step, warmup=warmup,
+                                 total=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state.opt, acfg, lr_scale=lr_scale)
+        out_metrics = {"loss": loss, **opt_metrics}
+        return TrainState(new_params, new_opt, residual), out_metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, mesh=None):
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch, mesh)
+        return loss
+
+    return eval_step

@@ -1,0 +1,53 @@
+"""Checkpointing: roundtrip, async, atomicity, garbage collection."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32),
+                  "d": jnp.array(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 7, t, extra={"step": 7, "note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    got, extra = restore_checkpoint(str(tmp_path), 7, like)
+    assert extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, tree())
+    bad = tree()
+    bad["a"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, bad)
+
+
+def test_async_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        ck.save(s, tree(), extra={"step": s})
+    ck.wait()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path))
+    assert steps == [30, 40]
+    got, extra = restore_checkpoint(str(tmp_path), 40, tree())
+    assert extra["step"] == 40
+
+
+def test_tmp_dirs_are_not_latest(tmp_path):
+    os.makedirs(tmp_path / "step_99.tmp")
+    save_checkpoint(str(tmp_path), 5, tree())
+    assert latest_step(str(tmp_path)) == 5

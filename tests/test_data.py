@@ -1,0 +1,71 @@
+"""Data pipeline: determinism, shard invariance, memmap, cursor resume."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import (LoaderState, MemmapDataset, ShardedLoader,
+                                 SyntheticLMDataset)
+
+
+def test_synthetic_deterministic():
+    ds = SyntheticLMDataset(1000, seed=3)
+    a = ds.window(5, 64)
+    b = ds.window(5, 64)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, ds.window(6, 64))
+
+
+def test_loader_shard_invariance():
+    """2 shards x B=4 see exactly the samples 1 shard x B=8 sees."""
+    ds = SyntheticLMDataset(500, seed=0)
+    whole = ShardedLoader(ds, 8, 16, shard=0, n_shards=1)
+    s0 = ShardedLoader(ds, 4, 16, shard=0, n_shards=2)
+    s1 = ShardedLoader(ds, 4, 16, shard=1, n_shards=2)
+    try:
+        w = next(whole)["tokens"]
+        a = next(s0)["tokens"]
+        b = next(s1)["tokens"]
+        np.testing.assert_array_equal(np.concatenate([a, b]), w)
+    finally:
+        whole.close(); s0.close(); s1.close()
+
+
+def test_loader_cursor_resume():
+    ds = SyntheticLMDataset(500, seed=0)
+    l1 = ShardedLoader(ds, 2, 16)
+    try:
+        batches = [next(l1) for _ in range(5)]
+        cursor = l1.state.to_dict()
+    finally:
+        l1.close()
+    l2 = ShardedLoader(ds, 2, 16, state=LoaderState.from_dict(
+        {"step": cursor["step"] - 2}))
+    try:
+        again = next(l2)
+        np.testing.assert_array_equal(again["tokens"],
+                                      batches[3]["tokens"])
+    finally:
+        l2.close()
+
+
+def test_labels_are_shifted_tokens():
+    ds = SyntheticLMDataset(500, seed=0)
+    l = ShardedLoader(ds, 2, 16)
+    try:
+        b = next(l)
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+        # label[t] == token[t+1] within the window
+        w = ds.window(0, 16)
+        np.testing.assert_array_equal(b["tokens"][0], w[:-1])
+        np.testing.assert_array_equal(b["labels"][0], w[1:])
+    finally:
+        l.close()
+
+
+def test_memmap_roundtrip(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    toks = np.arange(1000, dtype=np.int32)
+    MemmapDataset.write(path, toks)
+    ds = MemmapDataset(path)
+    w = ds.window(0, 16)
+    np.testing.assert_array_equal(w, np.arange(17))
+    assert ds.window(2, 16)[0] == 32

@@ -1,0 +1,133 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode
+executes the Pallas kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.rwkv import wkv_chunked
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,D", [
+    (1, 32, 32, 2, 2, 16),
+    (2, 64, 64, 4, 2, 32),
+    (1, 96, 48, 4, 1, 64),     # ragged + MQA
+    (2, 33, 65, 2, 2, 16),     # non-divisible block sizes
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Sq, Sk, H, Hkv, D, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_kv=16)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 17, 96), (2, 5, 7, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    sc = 1.0 + 0.1 * jax.random.normal(ks[1], shape[-1:])
+    got = ops.rmsnorm(x, sc, block_rows=4)
+    want = ref.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **tol(dtype))
+
+
+def test_rmsnorm_residual():
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (8, 64))
+    r = jax.random.normal(ks[1], (8, 64))
+    sc = jnp.ones((64,))
+    got = ops.rmsnorm(x, sc, residual=r, block_rows=8)
+    want = ref.rmsnorm_ref(x, sc, residual=r)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,K,chunk", [
+    (1, 16, 1, 8, 16),
+    (2, 40, 3, 16, 16),
+    (1, 33, 2, 32, 8),        # padding path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_kernel(B, S, H, K, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, K), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, K), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, K), dtype)
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K))).astype(jnp.float32)
+    u = 0.3 * jax.random.normal(ks[4], (H, K))
+    got, st = ops.wkv6(r, k, v, lw, u, chunk=chunk)
+    want = ref.wkv6_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+    # state matches the chunked-jnp second oracle
+    _, st2 = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), lw, u, chunk=chunk)
+    np.testing.assert_allclose(st, st2, atol=1e-3, rtol=1e-3)
+
+
+def test_wkv6_with_incoming_state():
+    ks = jax.random.split(KEY, 6)
+    B, S, H, K = 1, 24, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, K)) for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)))
+    u = 0.3 * jax.random.normal(ks[4], (H, K))
+    st0 = jax.random.normal(ks[5], (B, H, K, K))
+    got, st = ops.wkv6(r, k, v, lw, u, state=st0)
+    want, st_want = wkv_chunked(r, k, v, lw, u, chunk=16, state=st0)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(st, st_want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 2, 16, 8, 16),
+    (2, 50, 3, 8, 16, 16),    # padding path
+    (1, 16, 1, 32, 4, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    xs = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, H, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, H, N), dtype)
+    got, _ = ops.ssd(xs, dt, A, Bm, Cm, chunk=chunk)
+    want = ref.ssd_ref(xs, dt, A, Bm, Cm)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+def test_xla_paths_match_kernels():
+    """The XLA fallback paths (models/) and the Pallas kernels implement the
+    same contract."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, K = 2, 32, 2, 16
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, K)) for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)))
+    u = 0.3 * jax.random.normal(ks[4], (H, K))
+    y_k, _ = ops.wkv6(r, k, v, lw, u)
+    y_x, _ = wkv_chunked(r, k, v, lw, u, chunk=16)
+    np.testing.assert_allclose(y_k, y_x, atol=1e-4, rtol=1e-4)
+
+    xs = jax.random.normal(ks[0], (B, S, H, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, H, 4))
+    Cm = jax.random.normal(ks[4], (B, S, H, 4))
+    y_k, _ = ops.ssd(xs, dt, A, Bm, Cm, chunk=8)
+    y_x, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=8)
+    np.testing.assert_allclose(y_k, y_x, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,148 @@
+"""End-to-end behaviour tests: training convergence, checkpoint/restart,
+preemption, gradient compression, straggler detection."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import RunConfig
+from repro.data.pipeline import ShardedLoader, SyntheticLMDataset
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import init_train_state, make_train_step
+
+RUN = RunConfig(attn_impl="full", remat="nothing", compute_dtype="float32")
+
+
+def _setup(run=RUN, lr=1e-2, steps=30, arch="deepseek-7b"):
+    cfg = get_arch(arch).reduced()
+    model = Model(cfg, run)
+    acfg = AdamWConfig(lr=lr, moment_dtype=run.moment_dtype)
+    state = init_train_state(model, jax.random.PRNGKey(0), acfg)
+    step = jax.jit(make_train_step(model, acfg, None, total_steps=steps))
+    ds = SyntheticLMDataset(cfg.vocab_size, 0)
+    loader = ShardedLoader(ds, 8, 32)
+    return cfg, model, state, step, loader
+
+
+def test_training_reduces_loss():
+    _, _, state, step, loader = _setup()
+    state, report = train_loop(
+        state, step, loader, LoopConfig(total_steps=30, log_every=0),
+        log=lambda s: None)
+    first = np.mean(report.losses[:3])
+    last = np.mean(report.losses[-3:])
+    assert last < first * 0.8, (first, last)
+
+
+def test_microbatched_step_matches_single():
+    """Gradient accumulation is exact: 4 microbatches == 1 big batch."""
+    cfg = get_arch("deepseek-7b").reduced()
+    model1 = Model(cfg, RUN)
+    model4 = Model(cfg, RUN.with_(microbatches=4))
+    acfg = AdamWConfig(lr=1e-3)
+    s1 = init_train_state(model1, jax.random.PRNGKey(0), acfg)
+    s4 = init_train_state(model4, jax.random.PRNGKey(0), acfg)
+    f1 = jax.jit(make_train_step(model1, acfg, None))
+    f4 = jax.jit(make_train_step(model4, acfg, None))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    s1, m1 = f1(s1, batch)
+    s4, m4 = f4(s4, batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-4)
+
+
+def test_checkpoint_resume_is_exact(tmp_path):
+    """Training 30 steps straight == training 15, restarting, training 15."""
+    ck = str(tmp_path / "ck")
+    _, _, state, step, loader = _setup()
+    state_a, _ = train_loop(
+        state, step, loader,
+        LoopConfig(total_steps=30, log_every=0, ckpt_dir=None),
+        log=lambda s: None)
+
+    cfg = get_arch("deepseek-7b").reduced()
+    ds = SyntheticLMDataset(cfg.vocab_size, 0)
+    # run 1: 15 steps then "die"
+    _, _, state2, step2, _ = _setup()
+    loader1 = ShardedLoader(ds, 8, 32)
+    train_loop(state2, step2, loader1,
+               LoopConfig(total_steps=15, log_every=0, ckpt_dir=ck,
+                          ckpt_every=100),
+               log=lambda s: None)
+    # run 2: resumes from run 1's final checkpoint (step 15), continues to 30
+    _, _, state3, step3, _ = _setup()
+    loader2 = ShardedLoader(ds, 8, 32)
+    s_res, report = train_loop(
+        state3, step3, loader2,
+        LoopConfig(total_steps=30, log_every=0, ckpt_dir=ck, ckpt_every=100),
+        log=lambda s: None)
+    assert report.final_step == 30
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(s_res.params)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_grad_compression_still_converges():
+    run = RUN.with_(grad_compression=True)
+    cfg, model, state, step, loader = _setup(run=run)
+    assert state.residual is not None
+    state, report = train_loop(
+        state, step, loader, LoopConfig(total_steps=30, log_every=0),
+        log=lambda s: None)
+    assert np.mean(report.losses[-3:]) < np.mean(report.losses[:3]) * 0.85
+
+
+def test_bf16_moments_still_converge():
+    run = RUN.with_(moment_dtype="bfloat16")
+    cfg, model, state, step, loader = _setup(run=run)
+    assert jax.tree.leaves(state.opt.m)[0].dtype == jnp.bfloat16
+    state, report = train_loop(
+        state, step, loader, LoopConfig(total_steps=30, log_every=0),
+        log=lambda s: None)
+    assert np.mean(report.losses[-3:]) < np.mean(report.losses[:3]) * 0.85
+
+
+def test_nan_guard_aborts():
+    _, _, state, step, loader = _setup()
+
+    def bad_step(state, batch):
+        state, m = step(state, batch)
+        return state, {"loss": jnp.nan}
+
+    with pytest.raises(FloatingPointError):
+        train_loop(state, bad_step, loader,
+                   LoopConfig(total_steps=5, log_every=0), log=lambda s: None)
+
+
+def test_straggler_detection():
+    import time
+    cfg, _, state, step, loader = _setup()
+    # warm up jit so compile time doesn't dominate the EWMA
+    import jax.random as jr
+    toks = jr.randint(jr.PRNGKey(9), (8, 32), 0, cfg.vocab_size)
+    step(state, {"tokens": toks, "labels": toks})
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        out = step(state, batch)
+        jax.block_until_ready(out[1]["loss"])
+        if calls["n"] == 10:
+            time.sleep(1.5)
+        return out
+
+    msgs = []
+    state, report = train_loop(
+        state, slow_step, loader,
+        LoopConfig(total_steps=12, log_every=0, straggler_factor=3.0),
+        log=msgs.append)
+    assert report.stragglers, msgs
