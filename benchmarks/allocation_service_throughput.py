@@ -1,0 +1,91 @@
+"""AllocationService throughput: requests/sec and cache hit-rate under a
+zipf-ish mix of repeated and novel jobs submitted from concurrent clients.
+
+Three traffic phases over the simulated scout corpus plus synthetic novel
+jobs:
+  cold   every signature new — profiling + zoo fit on each
+  warm   repeats of confident jobs — served from the model registry
+  mixed  80/20 repeat/novel — the steady state a service actually sees
+
+Final CSV line: allocation_service_throughput,<us_per_request>,<hit_rate>
+(hit_rate = registry + LRU hits over all plan lookups in the mixed phase).
+"""
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.allocator import AllocationRequest, AllocationService
+from repro.core.catalog import aws_like_catalog
+from repro.core.simulator import (GiB, JobSpec, build_history,
+                                  make_profile_fn, scout_like_jobs)
+
+WORKERS = 8
+
+
+def _novel_job(i: int) -> JobSpec:
+    base = scout_like_jobs()[i % 4]
+    return JobSpec(f"novel-{i}/{base.framework}/gen", base.framework,
+                   base.dataset_gib * (1.0 + 0.1 * (i % 7)), base.cpu_hours,
+                   base.working_set_factor, base.iterations, base.caching,
+                   base.mem_profile)
+
+
+def _request(job: JobSpec) -> AllocationRequest:
+    full = job.dataset_gib * GiB
+    return AllocationRequest(job.name, make_profile_fn(job), full,
+                             anchor=full * 0.01)
+
+
+def _drive(svc: AllocationService, jobs) -> float:
+    t0 = time.monotonic()
+    with ThreadPoolExecutor(WORKERS) as ex:
+        list(ex.map(lambda j: svc.allocate(_request(j)), jobs))
+    return time.monotonic() - t0
+
+
+def main() -> None:
+    corpus = scout_like_jobs()
+    catalog = aws_like_catalog()
+    history = build_history(corpus, catalog)
+
+    with AllocationService(catalog, history) as svc:
+        cold = list(corpus)
+        t_cold = _drive(svc, cold)
+        print(f"cold:  {len(cold)} novel jobs in {t_cold:.3f}s "
+              f"({len(cold) / t_cold:.0f} req/s), "
+              f"{svc.stats.profile_calls} profile runs")
+
+        warm = [corpus[i % len(corpus)] for i in range(64)]
+        calls_before = svc.stats.profile_calls
+        t_warm = _drive(svc, warm)
+        print(f"warm:  {len(warm)} repeats in {t_warm:.3f}s "
+              f"({len(warm) / t_warm:.0f} req/s), "
+              f"{svc.stats.profile_calls - calls_before} new profile runs, "
+              f"{svc.stats.registry_hits} registry hits")
+
+        mixed = []
+        for i in range(96):
+            mixed.append(corpus[i % len(corpus)] if i % 5 else
+                         _novel_job(i))
+        reqs_before = svc.stats.requests
+        hits_before = (svc.stats.registry_hits + svc.stats.cache_hits)
+        lookups_before = hits_before + svc.stats.profile_calls
+        t_mixed = _drive(svc, mixed)
+        n = svc.stats.requests - reqs_before
+        hits = (svc.stats.registry_hits + svc.stats.cache_hits) - hits_before
+        lookups = (svc.stats.registry_hits + svc.stats.cache_hits +
+                   svc.stats.profile_calls) - lookups_before
+        hit_rate = hits / lookups if lookups else 0.0
+        us_per_req = t_mixed / n * 1e6
+        print(f"mixed: {n} requests (80/20 repeat/novel) in {t_mixed:.3f}s "
+              f"({n / t_mixed:.0f} req/s), hit-rate {hit_rate:.0%}")
+        s = svc.stats
+        print(f"totals: {s.requests} requests, {s.batches} batches, "
+              f"{s.profile_calls} profile runs, {s.zoo_confident} models "
+              f"registered, {s.classifier_fallbacks} classifier / "
+              f"{s.baseline_fallbacks} baseline fallbacks")
+        print(f"allocation_service_throughput,{us_per_req:.1f},"
+              f"{hit_rate:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ MODULES = [
     "benchmarks.fig1_memory_cliff",
     "benchmarks.fig3_profile_traces",
     "benchmarks.fig4_measurement_hygiene",
+    "benchmarks.allocation_service_throughput",
     "benchmarks.planner_validation",
     "benchmarks.roofline_table",
 ]

@@ -1,19 +1,61 @@
 """Batched serving demo: continuous batching over a fixed-slot KV cache,
-staggered arrivals, per-request latency stats. Uses the reduced rwkv6
-(attention-free O(1)-state) and deepseek-7b (KV cache) configs.
+staggered arrivals, per-request latency stats, plus the allocation endpoint
+(repro.allocator) answering concurrent resource-allocation requests on the
+same serving surface. Uses the reduced rwkv6 (attention-free O(1)-state)
+and deepseek-7b (KV cache) configs.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 
+from repro.allocator import AllocationService
 from repro.configs import get_arch
 from repro.configs.base import RunConfig
+from repro.core.catalog import aws_like_catalog
+from repro.core.simulator import (GiB, build_history, make_profile_fn,
+                                  scout_like_jobs)
 from repro.models.model import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import AllocationEndpoint, Request, ServeEngine
 
 RUN = RunConfig(attn_impl="full", remat="nothing", compute_dtype="float32")
+
+
+def demo_allocation(n_requests: int = 16, workers: int = 8):
+    """Concurrent allocation traffic against the service endpoint: a mix of
+    novel and repeated jobs; repeats skip profiling via the model registry."""
+    jobs = scout_like_jobs()
+    catalog = aws_like_catalog()
+    history = build_history(jobs, catalog)
+    with AllocationService(catalog, history) as svc:
+        endpoint = AllocationEndpoint(svc)
+        # half the corpus, twice over: the second visit of each signature
+        # should be a registry (or LRU) hit, not a fresh profiling ladder
+        mix = [jobs[i % (len(jobs) // 2)] for i in range(n_requests)]
+        t0 = time.monotonic()
+
+        def one(j):
+            return endpoint.handle(job=j.name, profile_at=make_profile_fn(j),
+                                   full_size=j.dataset_gib * GiB,
+                                   anchor=j.dataset_gib * GiB * 0.01)
+
+        with ThreadPoolExecutor(workers) as ex:
+            answers = list(ex.map(one, mix))
+        wall = time.monotonic() - t0
+        by_source = {}
+        for a in answers:
+            by_source[a["source"]] = by_source.get(a["source"], 0) + 1
+        s = svc.stats
+        print(f"allocation: {len(answers)} requests in {wall:.2f}s "
+              f"({len(answers) / wall:.0f} req/s); sources {by_source}; "
+              f"profile calls {s.profile_calls}, registry hits "
+              f"{s.registry_hits}, LRU hit-rate {s.profile_hit_rate:.0%}")
+        a = answers[0]
+        print(f"  e.g. {a['job']}: {a['requirement_gib']:.0f} GiB via "
+              f"{a['candidate']} -> {a['config']} "
+              f"(${a['usd_per_hour']:.2f}/h, source={a['source']})")
 
 
 def demo(arch: str, n_requests: int = 12, slots: int = 4):
@@ -38,6 +80,7 @@ def demo(arch: str, n_requests: int = 12, slots: int = 4):
 
 
 def main():
+    demo_allocation()
     demo("deepseek-7b")
     demo("rwkv6-7b")
 

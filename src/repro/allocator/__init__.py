@@ -1,0 +1,58 @@
+"""Allocation service: batched, cached, model-zoo-backed resource allocation.
+
+Crispy (arXiv:2206.13852) is a one-shot pipeline: sample -> profile ->
+fit one linear model (R² > 0.99 gate) -> select a cluster config, with all
+profiling work discarded when the gate fails. This package turns that loop
+into a servable, stateful subsystem:
+
+  model_zoo.py   Candidate-model registry — the paper's linear fit stays
+                 the first/default candidate, joined by log-linear,
+                 power-law and piecewise-linear fits. Leave-one-out CV
+                 picks the simplest candidate within 10% of the best
+                 held-out score; a `ZooFit` is a drop-in for
+                 `LinearMemoryModel` (`CrispyAllocator(fitter=
+                 zoo_fitter())`). Richer-candidate lineage: Ruya
+                 (arXiv:2211.04240).
+
+  registry.py    Persistent (JSON-backed, thread-safe) store of confident
+                 memory models keyed by job signature — repeat requests
+                 skip profiling entirely. Keeps each model's training
+                 ladder so the classifier survives restarts.
+
+  classifier.py  Flora-style nearest-job classification
+                 (arXiv:2502.21046): scale-invariant features of a
+                 profiling ladder, nearest-neighbor under a distance gate.
+                 Rescues jobs whose own profile fails every model gate by
+                 transferring the neighbor's model or best-known config.
+
+  service.py     `AllocationService` — accepts many concurrent requests
+                 (worker thread + futures), coalesces a drain window into
+                 batches, dedups profiling ladders per job signature
+                 within a batch, serves ladder points from a ProfileResult
+                 LRU across batches, and walks the fallback chain
+                 registry -> zoo -> classifier -> BFA baseline.
+
+Serving surface: `repro.serve.engine.AllocationEndpoint` adapts the
+service to dict-in/dict-out request handling next to the token-serving
+`ServeEngine`; `benchmarks/allocation_service_throughput.py` measures
+requests/sec and cache hit-rate.
+"""
+from repro.allocator.classifier import (Classification, NearestJobClassifier,
+                                        feature_distance, profile_features)
+from repro.allocator.model_zoo import (DEFAULT_CANDIDATES, LOOCV_GATE,
+                                       LogLinearModel, MODEL_KINDS,
+                                       PiecewiseLinearModel, PowerLawModel,
+                                       ZooFit, fit_zoo, model_from_dict,
+                                       model_to_dict, zoo_fitter)
+from repro.allocator.registry import ModelRecord, ModelRegistry
+from repro.allocator.service import (AllocationRequest, AllocationResponse,
+                                     AllocationService, ServiceStats)
+
+__all__ = [
+    "AllocationRequest", "AllocationResponse", "AllocationService",
+    "Classification", "DEFAULT_CANDIDATES", "LOOCV_GATE", "LogLinearModel",
+    "MODEL_KINDS", "ModelRecord", "ModelRegistry", "NearestJobClassifier",
+    "PiecewiseLinearModel", "PowerLawModel", "ServiceStats", "ZooFit",
+    "feature_distance", "fit_zoo", "model_from_dict", "model_to_dict",
+    "profile_features", "zoo_fitter",
+]

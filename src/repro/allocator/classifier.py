@@ -1,0 +1,96 @@
+"""Flora-style nearest-job classification (arXiv:2502.21046).
+
+When no zoo candidate passes its confidence gate, Crispy degenerates to the
+BFA baseline and the profiling work is discarded. Flora's observation: jobs
+with similar resource-usage *shape* want similar allocations, so an
+unusable profile can still be matched against previously seen jobs and the
+neighbor's allocation transferred.
+
+The classifier embeds a profiling ladder into a small scale-invariant
+feature vector — the memory curve resampled onto a fixed grid and
+normalized by its peak, plus growth, roughness, and linear-fit-R² summary
+terms — and answers nearest-neighbor queries under a Euclidean distance
+gate. Every job the AllocationService profiles is `observe`d here (even
+gate-failing ones), so the feature store grows with traffic and nothing is
+thrown away.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.memory_model import fit_memory_model
+
+FEATURE_POINTS = 8          # resampled curve resolution
+DEFAULT_MAX_DISTANCE = 0.25
+
+
+def profile_features(sizes: Sequence[float],
+                     mems: Sequence[float]) -> np.ndarray:
+    """Scale-invariant embedding of a profiling ladder."""
+    x = np.asarray(sizes, dtype=np.float64)
+    y = np.asarray(mems, dtype=np.float64)
+    order = np.argsort(x)
+    x, y = x[order], y[order]
+    if x.size == 0:
+        return np.zeros(FEATURE_POINTS + 3)
+    span = x[-1] - x[0]
+    t = (x - x[0]) / span if span > 0 else np.zeros_like(x)
+    scale = float(np.abs(y).max()) or 1.0
+    yn = y / scale
+    grid = np.linspace(0.0, 1.0, FEATURE_POINTS)
+    curve = np.interp(grid, t, yn)
+    growth = float(curve[-1] - curve[0])
+    rough = float(np.sqrt(np.mean(np.diff(curve, 2) ** 2))) \
+        if curve.size >= 3 else 0.0
+    lin = fit_memory_model(x, y)
+    r2c = float(np.clip(lin.r2, 0.0, 1.0))
+    return np.concatenate([curve, [growth, rough, r2c]])
+
+
+def feature_distance(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.sqrt(np.mean((a - b) ** 2)))
+
+
+@dataclass
+class Classification:
+    neighbor: str               # signature of the nearest observed job
+    distance: float
+
+
+class NearestJobClassifier:
+    def __init__(self, max_distance: float = DEFAULT_MAX_DISTANCE):
+        self.max_distance = max_distance
+        self._features: Dict[str, np.ndarray] = {}
+
+    def __len__(self) -> int:
+        return len(self._features)
+
+    def jobs(self) -> List[str]:
+        return sorted(self._features)
+
+    def has(self, signature: str) -> bool:
+        return signature in self._features
+
+    def observe(self, signature: str, sizes: Sequence[float],
+                mems: Sequence[float]) -> None:
+        if len(sizes) >= 2:
+            self._features[signature] = profile_features(sizes, mems)
+
+    def classify(self, sizes: Sequence[float], mems: Sequence[float],
+                 exclude: Iterable[str] = ()) -> Optional[Classification]:
+        """Nearest observed job under the distance gate, or None."""
+        query = profile_features(sizes, mems)
+        skip = set(exclude)
+        best: Optional[Classification] = None
+        for sig, feat in self._features.items():
+            if sig in skip:
+                continue
+            d = feature_distance(query, feat)
+            if best is None or d < best.distance:
+                best = Classification(sig, d)
+        if best is None or best.distance > self.max_distance:
+            return None
+        return best

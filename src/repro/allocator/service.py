@@ -1,0 +1,402 @@
+"""AllocationService: allocation as a servable, stateful subsystem.
+
+Request lifecycle (one worker thread, many submitters):
+
+  submit() --+                          +--> registry hit: skip profiling
+             |   drain window (coalesce |
+  submit() --+-> concurrent requests    +--> LRU-cached ladder profile
+             |   into one batch, group  |      -> model-zoo fit (LOOCV)
+  submit() --+   by job signature)      |      -> confident: persist model
+                                        |      -> else: nearest-job
+                                        |         classifier transfer
+                                        +--> per-request config selection
+
+Requests for the same job signature that land in one batch share a single
+profiling ladder (dedup); repeats across batches hit the model registry and
+never profile again; distinct requests that need the same (signature, size)
+sample hit the ProfileResult LRU. Per-profile work is therefore done at
+most once per (signature, size) while the cache holds.
+
+Fallback chain when no zoo candidate is confident — Flora-style (see
+classifier.py): transfer the nearest observed neighbor's registered model,
+else the neighbor's best historical config, else the paper's BFA baseline
+(requirement 0). Profiled ladders are always `observe`d by the classifier,
+so even gate-failing jobs contribute to future classifications.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future, InvalidStateError
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.allocator.classifier import NearestJobClassifier
+from repro.allocator.model_zoo import fit_zoo
+from repro.allocator.registry import ModelRegistry
+from repro.core.catalog import ClusterConfig
+from repro.core.history import ExecutionHistory
+from repro.core.profiler import ProfileResult
+from repro.core.sampling import ladder_from_anchor
+from repro.core.selector import (DEFAULT_OVERHEAD_GIB, Selection,
+                                 select_crispy, select_like)
+
+GiB = 1024 ** 3
+
+
+def _resolve(fut: Future, result=None, exc: Optional[Exception] = None):
+    """Resolve a future the caller may have cancelled (or be cancelling
+    concurrently) without letting InvalidStateError kill the worker."""
+    if fut.cancelled():
+        return
+    try:
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(result)
+    except InvalidStateError:       # cancelled between the check and the set
+        pass
+
+
+@dataclass
+class AllocationRequest:
+    job: str
+    profile_at: Callable[[float], ProfileResult]
+    full_size: float
+    anchor: Optional[float] = None
+    sizes: Optional[List[float]] = None
+    signature: Optional[str] = None     # defaults to the job name
+    leeway: Optional[float] = None      # overrides the service default
+
+    @property
+    def sig(self) -> str:
+        return self.signature if self.signature is not None else self.job
+
+
+@dataclass
+class AllocationResponse:
+    job: str
+    signature: str
+    source: str                  # registry | zoo | classifier | baseline
+    candidate: Optional[str]     # winning model kind (None on baseline)
+    model: Optional[object]
+    requirement_gib: float
+    selection: Selection
+    neighbor: Optional[str] = None
+    profiled: int = 0            # fresh profile_at calls for this plan
+    cache_hits: int = 0          # ladder points served from the LRU
+    wall_s: float = 0.0
+
+
+@dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    profile_calls: int = 0
+    cache_hits: int = 0
+    registry_hits: int = 0
+    zoo_fits: int = 0
+    zoo_confident: int = 0
+    classifier_fallbacks: int = 0
+    baseline_fallbacks: int = 0
+    plan_cache_hits: int = 0     # unconfident repeats answered w/o refit
+    flush_errors: int = 0        # registry persistence failures survived
+
+    @property
+    def profile_hit_rate(self) -> float:
+        total = self.profile_calls + self.cache_hits
+        return self.cache_hits / total if total else 0.0
+
+
+@dataclass
+class _Plan:
+    """Per-signature outcome shared by every request in a batch group."""
+    source: str
+    model: Optional[object]
+    candidate: Optional[str]
+    neighbor: Optional[str] = None
+    neighbor_selection: Optional[Selection] = None
+    profiled: int = 0
+    cache_hits: int = 0
+
+
+class AllocationService:
+    def __init__(self, catalog: List[ClusterConfig],
+                 history: ExecutionHistory,
+                 registry: Optional[ModelRegistry] = None,
+                 classifier: Optional[NearestJobClassifier] = None,
+                 candidates: Optional[Sequence] = None,
+                 overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
+                 leeway: float = 0.0,
+                 profile_cache_size: int = 512,
+                 batch_window_s: float = 0.005):
+        self.catalog = catalog
+        self.history = history
+        self.registry = registry if registry is not None else ModelRegistry()
+        self.classifier = classifier if classifier is not None \
+            else NearestJobClassifier()
+        self.candidates = candidates
+        self.overhead = overhead_per_node_gib
+        self.leeway = leeway
+        self.batch_window_s = batch_window_s
+        self.stats = ServiceStats()
+
+        self._cache: "OrderedDict[Tuple[str, float], ProfileResult]" = \
+            OrderedDict()
+        self._cache_cap = profile_cache_size
+        # negative-outcome cache: (sig, ladder) -> unconfident _Plan, so a
+        # noisy job resubmitted N times doesn't redo the zoo LOOCV fit and
+        # classifier scan N times. Cleared whenever the observable world
+        # changes (new signature observed / new model registered), because
+        # either can turn a baseline outcome into a classifier one.
+        # Worker-thread-only state: no lock needed.
+        self._plan_cache: "OrderedDict[Tuple[str, Tuple[float, ...]], _Plan]" \
+            = OrderedDict()
+        self._plan_cache_hist_version = history.version
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: List[Tuple[AllocationRequest, Future]] = []
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+
+        # warm the classifier from persisted registry records: a restarted
+        # service classifies against every CONFIDENT signature it ever
+        # registered (gate-failing ladders live only in memory and are
+        # re-observed as their jobs resubmit)
+        for rec in self.registry.records():
+            self.classifier.observe(rec.signature, rec.sizes, rec.mems)
+
+    # -- public -------------------------------------------------------------
+    def submit(self, req: AllocationRequest) -> "Future[AllocationResponse]":
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AllocationService is closed")
+            self._pending.append((req, fut))
+            self._ensure_worker_locked()
+            self._cv.notify()
+        return fut
+
+    def allocate(self, req: AllocationRequest,
+                 timeout: Optional[float] = None) -> AllocationResponse:
+        return self.submit(req).result(timeout)
+
+    def allocate_many(self, reqs: Sequence[AllocationRequest],
+                      timeout: Optional[float] = None
+                      ) -> List[AllocationResponse]:
+        futs = [self.submit(r) for r in reqs]
+        return [f.result(timeout) for f in futs]
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+        try:
+            self.registry.flush()   # durability backstop for deferred puts
+        except Exception:
+            self.stats.flush_errors += 1
+
+    def __enter__(self) -> "AllocationService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker -------------------------------------------------------------
+    def _ensure_worker_locked(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if not self._pending and self._closed:
+                    return
+            # coalesce: give concurrent submitters a window to land in the
+            # same batch so same-signature ladders dedup to one profile run
+            if self.batch_window_s > 0:
+                time.sleep(self.batch_window_s)
+            with self._cv:
+                batch, self._pending = self._pending, []
+            if batch:
+                self._process_batch(batch)
+
+    def _process_batch(self,
+                       batch: List[Tuple[AllocationRequest, Future]]) -> None:
+        with self._lock:
+            self.stats.batches += 1
+            self.stats.requests += len(batch)
+        # group by (signature, ladder): same-signature requests share one
+        # profiling ladder only when they actually ask for the same ladder,
+        # so coalescing never silently overrides an explicit sizes/anchor
+        groups: "OrderedDict[Tuple[str, Tuple[float, ...]], " \
+                "List[Tuple[AllocationRequest, Future]]]" = OrderedDict()
+        for req, fut in batch:
+            groups.setdefault((req.sig, self._ladder_of(req)),
+                              []).append((req, fut))
+        for (sig, _ladder), items in groups.items():
+            live = [(req, fut) for req, fut in items if not fut.cancelled()]
+            if not live:                    # whole group cancelled: don't
+                continue                    # profile for nobody
+            t0 = time.monotonic()
+            try:
+                plan = self._plan(sig, live[0][0])
+            except Exception as e:          # a failing profile_at fails its
+                for _, fut in live:         # group, never the whole batch
+                    _resolve(fut, exc=e)
+                continue
+            wall = time.monotonic() - t0
+            for req, fut in live:
+                try:
+                    resp = self._respond(plan, req, wall)
+                except Exception as e:
+                    _resolve(fut, exc=e)
+                    continue
+                _resolve(fut, result=resp)
+        # one file rewrite for however many models this batch registered;
+        # a persistence failure (disk full, read-only) must not kill the
+        # worker — models stay in memory and the next flush retries
+        try:
+            self.registry.flush()
+        except Exception:
+            with self._lock:
+                self.stats.flush_errors += 1
+
+    # -- planning -----------------------------------------------------------
+    @staticmethod
+    def _ladder_of(req: AllocationRequest) -> Tuple[float, ...]:
+        sizes = req.sizes if req.sizes is not None else \
+            ladder_from_anchor(req.anchor if req.anchor is not None
+                               else req.full_size * 0.01).sizes
+        return tuple(float(s) for s in sizes)
+
+    def _plan(self, sig: str, req: AllocationRequest) -> _Plan:
+        rec = self.registry.get(sig)
+        if rec is not None and getattr(rec.model, "confident", False):
+            with self._lock:
+                self.stats.registry_hits += 1
+            return _Plan("registry", rec.model, rec.candidate)
+
+        ladder = self._ladder_of(req)
+        sizes = list(ladder)
+        plan_key = (sig, ladder)
+        # classifier/baseline plans freeze history-derived selections, so a
+        # history mutation invalidates the whole negative cache
+        hv = self.history.version
+        if hv != self._plan_cache_hist_version:
+            self._plan_cache.clear()
+            self._plan_cache_hist_version = hv
+        cached_plan = self._plan_cache.get(plan_key)
+        if cached_plan is not None:
+            self._plan_cache.move_to_end(plan_key)
+            with self._lock:
+                self.stats.plan_cache_hits += 1
+            # this request did no profiling; don't report the original's
+            return dataclasses.replace(cached_plan, profiled=0,
+                                       cache_hits=0)
+
+        results, fresh, hits = self._profile_ladder(sig, req, sizes)
+        mems = [r.job_mem_bytes for r in results]
+        zoo = fit_zoo(sizes, mems, self.candidates)
+        with self._lock:
+            self.stats.zoo_fits += 1
+        # never discard profiling work: even gate-failing ladders feed
+        # future nearest-job classifications
+        newly_observed = not self.classifier.has(sig)
+        self.classifier.observe(sig, sizes, mems)
+        if newly_observed:
+            self._plan_cache.clear()    # a new neighbor may rescue others
+
+        if zoo.confident:
+            self.registry.put(sig, zoo.model, zoo.candidate, sizes, mems,
+                              defer_save=True)
+            self._plan_cache.clear()    # its model may rescue others too
+            with self._lock:
+                self.stats.zoo_confident += 1
+            return _Plan("zoo", zoo, zoo.candidate,
+                         profiled=fresh, cache_hits=hits)
+
+        plan = None
+        cls = self.classifier.classify(sizes, mems, exclude=(sig,))
+        if cls is not None:
+            neighbor_rec = self.registry.get(cls.neighbor, count_hit=False)
+            if neighbor_rec is not None and \
+                    getattr(neighbor_rec.model, "confident", False):
+                plan = _Plan("classifier", neighbor_rec.model,
+                             neighbor_rec.candidate, neighbor=cls.neighbor,
+                             profiled=fresh, cache_hits=hits)
+            else:
+                sel = select_like(self.catalog, self.history, cls.neighbor)
+                if sel is not None:
+                    plan = _Plan("classifier", None, None,
+                                 neighbor=cls.neighbor,
+                                 neighbor_selection=sel,
+                                 profiled=fresh, cache_hits=hits)
+        if plan is None:
+            plan = _Plan("baseline", None, None,
+                         profiled=fresh, cache_hits=hits)
+        with self._lock:
+            if plan.source == "classifier":
+                self.stats.classifier_fallbacks += 1
+            else:
+                self.stats.baseline_fallbacks += 1
+        self._plan_cache[plan_key] = plan
+        self._plan_cache.move_to_end(plan_key)
+        while len(self._plan_cache) > self._cache_cap:
+            self._plan_cache.popitem(last=False)
+        return plan
+
+    def _profile_ladder(self, sig: str, req: AllocationRequest,
+                        sizes: Sequence[float]
+                        ) -> Tuple[List[ProfileResult], int, int]:
+        results: List[ProfileResult] = []
+        fresh = hits = 0
+        for s in sizes:
+            key = (sig, float(s))
+            with self._lock:
+                cached = self._cache.get(key)
+                if cached is not None:
+                    self._cache.move_to_end(key)
+                    self.stats.cache_hits += 1
+            if cached is not None:
+                hits += 1
+                results.append(cached)
+                continue
+            r = req.profile_at(s)
+            fresh += 1
+            results.append(r)
+            with self._lock:
+                self.stats.profile_calls += 1
+                self._cache[key] = r
+                self._cache.move_to_end(key)
+                while len(self._cache) > self._cache_cap:
+                    self._cache.popitem(last=False)
+        return results, fresh, hits
+
+    def _respond(self, plan: _Plan, req: AllocationRequest,
+                 wall: float) -> AllocationResponse:
+        leeway = req.leeway if req.leeway is not None else self.leeway
+        if plan.model is not None:
+            req_gib = plan.model.requirement(req.full_size, leeway) / GiB
+            sel = select_crispy(self.catalog, self.history, req_gib,
+                                overhead_per_node_gib=self.overhead,
+                                exclude_job=req.job)
+        elif plan.neighbor_selection is not None:
+            req_gib = 0.0
+            sel = plan.neighbor_selection
+        else:
+            req_gib = 0.0
+            sel = select_crispy(self.catalog, self.history, 0.0,
+                                overhead_per_node_gib=self.overhead,
+                                exclude_job=req.job)
+        return AllocationResponse(req.job, req.sig, plan.source,
+                                  plan.candidate, plan.model, req_gib, sel,
+                                  plan.neighbor, plan.profiled,
+                                  plan.cache_hits, wall)

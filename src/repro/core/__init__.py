@@ -1,7 +1,8 @@
 from repro.core.memory_model import LinearMemoryModel, fit_memory_model, R2_GATE
-from repro.core.crispy import CrispyAllocator, CrispyReport
+from repro.core.crispy import CrispyAllocator, CrispyReport, ModelFitter
 from repro.core.selector import (Selection, select_bfa, select_crispy,
-                                 select_medium, random_expected_cost)
+                                 select_like, select_medium,
+                                 random_expected_cost)
 from repro.core.catalog import (ClusterConfig, NodeType, aws_like_catalog,
                                 tpu_catalog, medium_config)
 from repro.core.history import Execution, ExecutionHistory

@@ -4,16 +4,22 @@
 (RSS-based for local dataflow jobs, XLA-compile-based for TPU jobs via
 core/hbm_planner.py) and a full-size target, and it runs the paper's four
 steps end to end.
+
+The modeling step is pluggable: `fitter(sizes, mems)` must return an object
+with `requirement(full_size, leeway)` and `confident` (the memory-model
+interface of core/memory_model.py). The default is the paper's OLS linear
+fit; pass `repro.allocator.model_zoo.zoo_fitter()` for the multi-candidate
+model zoo.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Any, Callable, List, Optional, Sequence
 
 from repro.core.catalog import ClusterConfig
 from repro.core.history import ExecutionHistory
-from repro.core.memory_model import LinearMemoryModel, fit_memory_model
+from repro.core.memory_model import fit_memory_model
 from repro.core.profiler import ProfileResult
 from repro.core.sampling import Ladder, ladder_from_anchor
 from repro.core.selector import (DEFAULT_OVERHEAD_GIB, Selection,
@@ -21,13 +27,16 @@ from repro.core.selector import (DEFAULT_OVERHEAD_GIB, Selection,
 
 GiB = 1024 ** 3
 
+# (sizes, mems) -> memory model (predict/confident/requirement)
+ModelFitter = Callable[[Sequence[float], Sequence[float]], Any]
+
 
 @dataclass
 class CrispyReport:
     job: str
     sizes: List[float]
     mems_bytes: List[float]
-    model: LinearMemoryModel
+    model: Any                       # LinearMemoryModel or a zoo model
     requirement_gib: float
     selection: Selection
     profiling_wall_s: float
@@ -38,11 +47,13 @@ class CrispyAllocator:
     def __init__(self, catalog: List[ClusterConfig],
                  history: ExecutionHistory,
                  overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
-                 leeway: float = 0.0):
+                 leeway: float = 0.0,
+                 fitter: ModelFitter = fit_memory_model):
         self.catalog = catalog
         self.history = history
         self.overhead = overhead_per_node_gib
         self.leeway = leeway
+        self.fitter = fitter
 
     def allocate(self, job: str,
                  profile_at: Callable[[float], ProfileResult],
@@ -57,7 +68,7 @@ class CrispyAllocator:
             sizes = ladder.sizes
         results = [profile_at(s) for s in sizes]
         mems = [r.job_mem_bytes for r in results]
-        model = fit_memory_model(sizes, mems)
+        model = self.fitter(sizes, mems)
         req_gib = model.requirement(full_size, self.leeway) / GiB
         sel = select_crispy(
             self.catalog, self.history, req_gib,

@@ -6,6 +6,7 @@ metric. ``ExecutionHistory`` is what BFA averages over: records of *other*
 jobs (Crispy never assumes the job at hand recurs)."""
 from __future__ import annotations
 
+import threading
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional
@@ -24,42 +25,84 @@ class Execution:
 class ExecutionHistory:
     def __init__(self, executions: Iterable[Execution] = ()):
         self._by_job: Dict[str, Dict[str, Execution]] = defaultdict(dict)
+        # normalized_costs is the selection hot path (BFA scans every
+        # config x every job per request); memoize per job, drop on add.
+        # The RLock closes the check-then-set race with a concurrent add()
+        # (the AllocationService worker reads while submitters may record).
+        self._nc_cache: Dict[str, Dict[str, float]] = {}
+        self._lock = threading.RLock()
+        self._version = 0
         for e in executions:
             self.add(e)
 
+    @property
+    def version(self) -> int:
+        """Bumped on every add() — lets derived caches (e.g. the
+        AllocationService plan cache) detect that selections computed from
+        this history are stale."""
+        with self._lock:
+            return self._version
+
     def add(self, e: Execution) -> None:
-        self._by_job[e.job][e.config_name] = e
+        with self._lock:
+            self._by_job[e.job][e.config_name] = e
+            self._nc_cache.pop(e.job, None)
+            self._version += 1
 
     def jobs(self) -> List[str]:
-        return sorted(self._by_job)
+        with self._lock:
+            return sorted(self._by_job)
 
     def cost(self, job: str, config_name: str) -> Optional[float]:
-        e = self._by_job.get(job, {}).get(config_name)
-        return None if e is None else e.usd
+        with self._lock:
+            e = self._by_job.get(job, {}).get(config_name)
+            return None if e is None else e.usd
 
     def normalized_costs(self, job: str) -> Dict[str, float]:
-        """config name -> cost / best cost, for one job."""
-        ex = self._by_job.get(job, {})
-        if not ex:
-            return {}
-        best = min(e.usd for e in ex.values())
-        return {name: e.usd / best for name, e in ex.items()}
+        """config name -> cost / best cost, for one job. Returns a copy —
+        callers may mutate it without poisoning the memo."""
+        return dict(self._normalized_costs_cached(job))
+
+    def _normalized_costs_cached(self, job: str) -> Dict[str, float]:
+        """Internal shared dict for the BFA hot loop; do not mutate."""
+        with self._lock:
+            cached = self._nc_cache.get(job)
+            if cached is not None:
+                return cached
+            ex = self._by_job.get(job, {})
+            if not ex:
+                return {}
+            best = min(e.usd for e in ex.values())
+            nc = {name: e.usd / best for name, e in ex.items()}
+            self._nc_cache[job] = nc
+            return nc
+
+    def best_config_name(self, job: str) -> Optional[str]:
+        """Cheapest recorded config for `job` (None if the job never ran) —
+        what a Flora-style classifier transfers from a neighboring job."""
+        with self._lock:
+            ex = self._by_job.get(job, {})
+            if not ex:
+                return None
+            return min(ex, key=lambda name: ex[name].usd)
 
     def mean_normalized_cost(self, config_name: str,
                              exclude_job: Optional[str] = None) -> float:
         """Average normalized cost of `config_name` over all *other* jobs —
         the BFA ranking signal. inf if the config never ran."""
-        vals = []
-        for job in self._by_job:
-            if job == exclude_job:
-                continue
-            nc = self.normalized_costs(job)
-            if config_name in nc:
-                vals.append(nc[config_name])
-        return sum(vals) / len(vals) if vals else float("inf")
+        with self._lock:
+            vals = []
+            for job in self._by_job:
+                if job == exclude_job:
+                    continue
+                nc = self._normalized_costs_cached(job)
+                if config_name in nc:
+                    vals.append(nc[config_name])
+            return sum(vals) / len(vals) if vals else float("inf")
 
     def config_names(self) -> List[str]:
-        names = set()
-        for ex in self._by_job.values():
-            names.update(ex)
-        return sorted(names)
+        with self._lock:
+            names = set()
+            for ex in self._by_job.values():
+                names.update(ex)
+            return sorted(names)

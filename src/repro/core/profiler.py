@@ -65,6 +65,23 @@ class ProfileResult:
         execution is captured and accounted for'."""
         return max(0.0, self.peak_mem_bytes - self.base_mem_bytes)
 
+    def to_dict(self, with_trace: bool = False) -> dict:
+        """JSON-safe form (allocator registry / profile caches persist
+        these). Traces are dropped by default — they dominate the payload
+        and only the scalar summary feeds the memory models."""
+        d = {"size": self.size, "peak_mem_bytes": self.peak_mem_bytes,
+             "base_mem_bytes": self.base_mem_bytes, "wall_s": self.wall_s}
+        if with_trace:
+            d["trace"] = list(self.trace)
+            d["trace_t"] = list(self.trace_t)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProfileResult":
+        return cls(float(d["size"]), float(d["peak_mem_bytes"]),
+                   float(d["base_mem_bytes"]), float(d["wall_s"]),
+                   list(d.get("trace", [])), list(d.get("trace_t", [])))
+
 
 class RSSProfiler:
     """Profile a python callable's peak RSS with a sampler thread."""

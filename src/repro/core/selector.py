@@ -61,6 +61,20 @@ def select_crispy(catalog: List[ClusterConfig], history: ExecutionHistory,
                      fell_back or mem_requirement_gib <= 0.0)
 
 
+def select_like(catalog: List[ClusterConfig], history: ExecutionHistory,
+                neighbor_job: str) -> Optional[Selection]:
+    """Flora-style transfer (arXiv:2502.21046): when a job's own profile is
+    unusable, allocate what worked best for its nearest classified neighbor.
+    None if the neighbor has no usable record in this catalog."""
+    best = history.best_config_name(neighbor_job)
+    if best is None:
+        return None
+    cfg = next((c for c in catalog if c.name == best), None)
+    if cfg is None:
+        return None
+    return Selection(cfg, "classifier", 0.0, 1, False)
+
+
 def random_expected_cost(catalog: List[ClusterConfig],
                          history: ExecutionHistory, job: str) -> float:
     """Paper baseline 1: the expectation of a uniform random selection =

@@ -36,6 +36,7 @@ their private measurements.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass
 from typing import Callable, Dict, List
 
@@ -145,10 +146,11 @@ def build_history(jobs: List[JobSpec] = None,
 def make_profile_fn(job: JobSpec, seed: int = 0) -> Callable[[float],
                                                              ProfileResult]:
     def profile_at(size_bytes: float) -> ProfileResult:
-        # deterministic per (job, size): re-profiling the same sample gives
-        # the same reading
-        rng = np.random.default_rng(
-            abs(hash((job.name, seed, round(size_bytes)))) % (2 ** 31))
+        # deterministic per (job, size) ACROSS processes: crc32, not
+        # hash() — string hashing is randomized per interpreter
+        # (PYTHONHASHSEED), which made the noisy jobs' gate outcome flaky
+        key = f"{job.name}|{seed}|{round(size_bytes)}".encode()
+        rng = np.random.default_rng(zlib.crc32(key))
         s_gib = size_bytes / GiB
         base = JVM_BASE_GIB * GiB
         if job.mem_profile == "linear":

@@ -10,21 +10,34 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: meshes are Auto-only
+    AxisType = None
 
 from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+HAS_AXIS_TYPE = AxisType is not None
+
+
+def compat_make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """`jax.make_mesh` with Auto axis types where the installed jax supports
+    them, plain mesh otherwise (older jax is Auto-only, so semantics match)."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_mesh(cfg: MeshConfig):
-    return jax.make_mesh(cfg.shape, cfg.axes,
-                         axis_types=(AxisType.Auto,) * len(cfg.axes))
+    return compat_make_mesh(cfg.shape, cfg.axes)
 
 
 def make_local_mesh(model: int = 1, data: Optional[int] = None):
@@ -32,8 +45,7 @@ def make_local_mesh(model: int = 1, data: Optional[int] = None):
     n = len(jax.devices())
     if data is None:
         data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def mesh_config(mesh) -> MeshConfig:

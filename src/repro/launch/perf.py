@@ -19,17 +19,16 @@ import time
 import traceback
 
 import jax
-from jax.sharding import AxisType
 
 from repro.configs import SHAPES, get_arch
 from repro.configs.base import MeshConfig, RunConfig
 from repro.launch.dryrun import run_cell
+from repro.launch.mesh import compat_make_mesh
 from repro.launch.presets import preset_run
 
 
 def mesh_of(shape, axes=("data", "model")):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def ds7b_variants():

@@ -11,6 +11,12 @@ The engine keeps `slots` concurrent sequences. Each scheduler tick:
 Greedy or temperature sampling. This is the serving analogue the paper's
 "job" maps onto for decode shapes, and the engine the serve_demo example
 drives.
+
+`AllocationEndpoint` exposes the allocator subsystem
+(repro.allocator.service) on the same serving surface: dict-in/dict-out
+allocation requests, optionally attached to a `ServeEngine` via
+`attach_allocator` so one server answers both generation and
+resource-allocation traffic.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.allocator.service import (AllocationRequest, AllocationResponse,
+                                     AllocationService)
 from repro.models.model import Model
 
 
@@ -39,7 +47,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params, slots: int, max_len: int,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 allocator: Optional[AllocationService] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -52,6 +61,9 @@ class ServeEngine:
         self.finished: List[Request] = []
         self._feed: List[List[int]] = [[] for _ in range(slots)]
         self._last_token = np.zeros((slots,), np.int32)
+        self.allocation_endpoint: Optional[AllocationEndpoint] = None
+        if allocator is not None:
+            self.attach_allocator(allocator)
 
         self._step = jax.jit(
             lambda p, b, c: model.decode_step(p, b, c, None))
@@ -59,6 +71,19 @@ class ServeEngine:
     # -- public ------------------------------------------------------------
     def submit(self, req: Request):
         self.pending.append(req)
+
+    def attach_allocator(self,
+                         service: AllocationService) -> "AllocationEndpoint":
+        """Expose an AllocationService next to the generation loop."""
+        self.allocation_endpoint = AllocationEndpoint(service)
+        return self.allocation_endpoint
+
+    def allocate(self, **payload) -> Dict:
+        """Answer one allocation request (see AllocationEndpoint.handle)."""
+        if self.allocation_endpoint is None:
+            raise RuntimeError("no AllocationService attached; call "
+                               "attach_allocator() first")
+        return self.allocation_endpoint.handle(**payload)
 
     def run(self, max_ticks: int = 10000) -> List[Request]:
         ticks = 0
@@ -126,6 +151,40 @@ class ServeEngine:
 # base rank of each cache leaf kind; batch axis = ndim - base_rank
 _BATCH_RANK = {"k": 4, "v": 4, "ckv": 3, "kr": 3, "pos": 1,
                "h": 4, "conv": 3, "wkv": 4, "tm_last": 2, "cm_last": 2}
+
+
+class AllocationEndpoint:
+    """Request endpoint over an AllocationService: wire-friendly dicts in,
+    dicts out, with the service's batching/caching behind it. `submit`
+    returns the service future for async callers; `handle` blocks."""
+
+    def __init__(self, service: AllocationService):
+        self.service = service
+
+    def submit(self, *, job: str, profile_at, full_size: float,
+               anchor: Optional[float] = None,
+               sizes: Optional[List[float]] = None,
+               signature: Optional[str] = None,
+               leeway: Optional[float] = None):
+        return self.service.submit(AllocationRequest(
+            job, profile_at, full_size, anchor=anchor, sizes=sizes,
+            signature=signature, leeway=leeway))
+
+    def handle(self, timeout: Optional[float] = None, **payload) -> Dict:
+        return self.to_wire(self.submit(**payload).result(timeout))
+
+    @staticmethod
+    def to_wire(resp: AllocationResponse) -> Dict:
+        sel = resp.selection
+        return {"job": resp.job, "signature": resp.signature,
+                "source": resp.source, "candidate": resp.candidate,
+                "neighbor": resp.neighbor,
+                "requirement_gib": resp.requirement_gib,
+                "config": sel.config.name,
+                "usd_per_hour": sel.config.usd_per_hour,
+                "method": sel.method, "fell_back": sel.fell_back,
+                "profiled": resp.profiled, "cache_hits": resp.cache_hits,
+                "wall_s": resp.wall_s}
 
 
 def _reset_slot(caches, slot: int):

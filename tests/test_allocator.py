@@ -1,0 +1,387 @@
+"""Allocator subsystem: model zoo + LOOCV selection, persistent registry,
+nearest-job classifier, and the batched/cached AllocationService end to end
+(concurrent submitters, dedup, registry hits, classifier fallback)."""
+import math
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.allocator import (AllocationRequest, AllocationService,
+                             LogLinearModel, ModelRegistry,
+                             NearestJobClassifier, PiecewiseLinearModel,
+                             PowerLawModel, ZooFit, fit_zoo,
+                             model_from_dict, model_to_dict, zoo_fitter)
+from repro.core.catalog import aws_like_catalog
+from repro.core.crispy import CrispyAllocator
+from repro.core.history import ExecutionHistory
+from repro.core.memory_model import fit_memory_model
+from repro.core.profiler import ProfileResult
+from repro.core.sampling import ladder_from_anchor
+from repro.core.simulator import (GiB, build_history, make_profile_fn,
+                                  scout_like_jobs)
+from repro.serve.engine import AllocationEndpoint
+
+SIZES = [2e9, 4e9, 6e9, 8e9, 1e10]
+
+
+def _profile_fn(mem_of_size, wall=1.0):
+    def profile_at(s):
+        return ProfileResult(s, mem_of_size(s), 0.0, wall)
+    return profile_at
+
+
+# -- model zoo ----------------------------------------------------------------
+
+
+def test_zoo_linear_data_selects_linear():
+    z = fit_zoo(SIZES, [0.9 * s + 1.6e9 for s in SIZES])
+    assert z.candidate == "linear"
+    assert z.confident
+    assert z.predict(1e12) == pytest.approx(0.9e12 + 1.6e9, rel=1e-6)
+
+
+def test_zoo_powerlaw_beats_linear_extrapolation():
+    """The acceptance case: a superlinear job whose linear fit passes the
+    paper's R2 gate yet extrapolates badly; the zoo must pick power-law and
+    land near the truth."""
+    mems = [3.0e-4 * s ** 1.35 for s in SIZES]
+    z = fit_zoo(SIZES, mems)
+    lin = fit_memory_model(SIZES, mems)
+    full = 5e11
+    truth = 3.0e-4 * full ** 1.35
+    assert z.candidate == "powerlaw"
+    assert z.confident
+    zoo_err = abs(z.requirement(full) - truth) / truth
+    lin_err = abs(lin.predict(full) - truth) / truth
+    assert zoo_err < 0.01
+    assert zoo_err < lin_err    # strictly beats the paper's only model
+    assert lin_err > 0.3        # and the linear miss is material
+
+
+def test_zoo_loglinear_and_piecewise_candidates():
+    zl = fit_zoo(SIZES, [2e9 * math.log(s) + 1e9 for s in SIZES])
+    assert zl.candidate == "loglinear" and zl.confident
+
+    pw = [0.1 * s + 1e9 if s <= 6e9 else 2.0 * s - 1.04e10 for s in SIZES]
+    zp = fit_zoo(SIZES, pw)
+    assert zp.candidate == "piecewise" and zp.confident
+    # extrapolation rides the right (large-size) segment
+    assert zp.predict(2e10) == pytest.approx(2.0 * 2e10 - 1.04e10, rel=1e-6)
+
+
+def test_zoo_noisy_data_is_not_confident():
+    rng = np.random.default_rng(3)
+    mems = [s * (1 + rng.normal(0, 0.09)) for s in SIZES]
+    z = fit_zoo(SIZES, mems)
+    assert not z.confident
+    assert z.requirement(1e12) == 0.0       # degenerates like the paper
+
+
+def test_zoo_prefers_simple_candidate_within_tolerance():
+    """Near-linear data (0.2% noise) must NOT be stolen by piecewise."""
+    rng = np.random.default_rng(0)
+    mems = [(4.5 * s) * (1 + rng.normal(0, 0.002)) for s in SIZES]
+    z = fit_zoo(SIZES, mems)
+    assert z.candidate == "linear"
+    assert z.confident
+
+
+def test_zoo_fitter_is_a_crispy_drop_in():
+    catalog = aws_like_catalog()
+    history = build_history()
+    alloc = CrispyAllocator(catalog, history, overhead_per_node_gib=2.0,
+                            fitter=zoo_fitter())
+    job = scout_like_jobs()[2]              # kmeans: linear profile
+    rep = alloc.allocate(job.name, make_profile_fn(job),
+                         job.dataset_gib * GiB,
+                         anchor=job.dataset_gib * GiB * 0.01)
+    assert isinstance(rep.model, ZooFit)
+    assert rep.model.candidate == "linear"
+    assert rep.model.confident
+    assert rep.requirement_gib > 0
+
+
+def test_model_serialization_round_trip():
+    models = [fit_memory_model(SIZES, [2 * s + 1e9 for s in SIZES]),
+              LogLinearModel.fit(SIZES, [1e9 * math.log(s) for s in SIZES]),
+              PowerLawModel.fit(SIZES, [1e-3 * s ** 1.2 for s in SIZES]),
+              PiecewiseLinearModel.fit(
+                  SIZES, [s if s <= 6e9 else 3 * s - 1.2e10 for s in SIZES])]
+    for m in models:
+        d = model_to_dict(m)
+        back = model_from_dict(d)
+        assert type(back) is type(m)
+        for size in (1e9, 5e10):
+            assert back.predict(size) == pytest.approx(m.predict(size))
+        assert back.confident == m.confident
+
+
+# -- registry -----------------------------------------------------------------
+
+
+def test_registry_persistence_round_trip(tmp_path):
+    path = str(tmp_path / "models.json")
+    reg = ModelRegistry(path)
+    m = fit_memory_model(SIZES, [0.9 * s + 1.6e9 for s in SIZES])
+    reg.put("jobA", m, sizes=SIZES, mems=[0.9 * s + 1.6e9 for s in SIZES])
+    assert "jobA" in reg
+
+    reg2 = ModelRegistry(path)              # fresh process, same file
+    rec = reg2.get("jobA")
+    assert rec is not None
+    assert rec.candidate == "linear"
+    assert rec.model.confident
+    assert rec.model.predict(1e12) == pytest.approx(m.predict(1e12))
+    assert rec.sizes == [float(s) for s in SIZES]
+    assert rec.hits == 1                    # the get above counted
+
+
+def test_registry_unconfident_models_not_persisted_by_service(tmp_path):
+    """The service only registers gate-passing models."""
+    path = str(tmp_path / "models.json")
+    jobs = scout_like_jobs()
+    catalog = aws_like_catalog()
+    history = build_history(jobs, catalog)
+    noisy = jobs[6]                         # logregression: noisy profile
+    with AllocationService(catalog, history,
+                           registry=ModelRegistry(path)) as svc:
+        svc.allocate(AllocationRequest(
+            noisy.name, make_profile_fn(noisy), noisy.dataset_gib * GiB,
+            anchor=noisy.dataset_gib * GiB * 0.01))
+        assert noisy.name not in svc.registry
+
+
+# -- classifier ---------------------------------------------------------------
+
+
+def test_classifier_matches_similar_shape_rejects_different():
+    clf = NearestJobClassifier(max_distance=0.25)
+    rng = np.random.default_rng(1)
+    linear = [0.9 * s for s in SIZES]
+    clf.observe("linear-job", SIZES, linear)
+    clf.observe("flat-job", SIZES, [5e8] * 5)
+
+    near = [0.95 * s * (1 + rng.normal(0, 0.01)) for s in SIZES]
+    got = clf.classify(SIZES, near)
+    assert got is not None and got.neighbor == "linear-job"
+
+    # exclusion works (a job must not classify to itself)
+    got2 = clf.classify(SIZES, near, exclude=("linear-job",))
+    assert got2 is None or got2.neighbor != "linear-job"
+
+
+# -- service end-to-end -------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    jobs = scout_like_jobs()
+    catalog = aws_like_catalog()
+    return jobs, catalog, build_history(jobs, catalog)
+
+
+def _req(job):
+    full = job.dataset_gib * GiB
+    return AllocationRequest(job.name, make_profile_fn(job), full,
+                             anchor=full * 0.01)
+
+
+def test_service_end_to_end_concurrent(corpus, tmp_path):
+    """Acceptance: N>=8 concurrent requests, repeated + novel jobs; cache
+    hits on repeats, zoo beating pure-linear on a nonlinear job, classifier
+    fallback when nothing is confident."""
+    jobs, catalog, history = corpus
+    kmeans, naivebayes, logreg, join = jobs[2], jobs[0], jobs[6], jobs[10]
+
+    # synthetic nonlinear job: superlinear growth the linear model misses
+    nl_full = 3e11
+    nl_truth = 3.0e-4 * nl_full ** 1.35
+    nl_req = AllocationRequest(
+        "nonlinear/synthetic", _profile_fn(lambda s: 3.0e-4 * s ** 1.35),
+        nl_full, anchor=nl_full * 0.01)
+
+    # novel noisy job, shaped like the (historical) noisy logregression
+    rng = np.random.default_rng(9)
+    novel_noisy = AllocationRequest(
+        "novel-noisy/spark/gen",
+        _profile_fn(lambda s: 1.1 * s * (1 + rng.normal(0, 0.09))),
+        2e11, anchor=2e9)
+
+    with AllocationService(catalog, history,
+                           registry=ModelRegistry(
+                               str(tmp_path / "reg.json")),
+                           batch_window_s=0.02) as svc:
+        wave1 = [_req(kmeans), _req(kmeans), _req(naivebayes), _req(logreg),
+                 _req(join), nl_req, _req(naivebayes), _req(jobs[4])]
+        assert len(wave1) >= 8
+        with ThreadPoolExecutor(len(wave1)) as ex:
+            futs = [ex.submit(svc.allocate, r) for r in wave1]
+            rs = [f.result(timeout=60) for f in futs]
+
+        by_job = {}
+        for r in rs:
+            by_job.setdefault(r.job, []).append(r)
+
+        # same-batch dedup: concurrent same-signature requests share one plan
+        assert svc.stats.profile_calls <= 5 * 6     # 6 unique signatures
+
+        # the zoo rescued the nonlinear job and beat the pure-linear fit
+        nl = by_job["nonlinear/synthetic"][0]
+        assert nl.source == "zoo" and nl.candidate == "powerlaw"
+        zoo_err = abs(nl.requirement_gib * GiB - nl_truth) / nl_truth
+        lin = fit_memory_model(
+            ladder_from_anchor(nl_full * 0.01).sizes,
+            [3.0e-4 * s ** 1.35
+             for s in ladder_from_anchor(nl_full * 0.01).sizes])
+        lin_err = abs(lin.predict(nl_full) - nl_truth) / nl_truth
+        assert zoo_err < 0.01 < lin_err
+
+        # linear jobs got confident models and real requirements
+        km = by_job[kmeans.name][0]
+        assert km.source in ("zoo", "registry")
+        assert km.requirement_gib > 0
+
+        # wave 2: repeats are served from the registry with zero profiling
+        rs2 = svc.allocate_many([_req(kmeans), _req(naivebayes), nl_req])
+        for r in rs2:
+            assert r.source == "registry"
+            assert r.profiled == 0
+        assert svc.stats.registry_hits >= 3
+
+        # noisy repeat: never confident, but never re-profiled either —
+        # served from the plan cache (identical world) or refit from the
+        # ladder LRU (a new model/neighbor invalidated the cached plan)
+        hits_before = svc.stats.cache_hits
+        plan_hits_before = svc.stats.plan_cache_hits
+        r_noisy = svc.allocate(_req(logreg))
+        assert r_noisy.profiled == 0
+        assert (svc.stats.cache_hits - hits_before >= 5 or
+                svc.stats.plan_cache_hits - plan_hits_before >= 1)
+
+        # classifier fallback engaged for unconfident jobs with neighbors
+        r_novel = svc.allocate(novel_noisy)
+        assert r_novel.source == "classifier"
+        assert r_novel.neighbor is not None
+        assert svc.stats.classifier_fallbacks >= 1
+
+        stats = svc.stats
+        assert stats.requests == len(wave1) + 3 + 1 + 1
+        # some repeat was answered without fresh profiling, via either cache
+        assert stats.profile_hit_rate > 0.0 or stats.plan_cache_hits > 0
+
+
+def test_service_registry_survives_restart(corpus, tmp_path):
+    jobs, catalog, history = corpus
+    kmeans = jobs[2]
+    path = str(tmp_path / "reg.json")
+    with AllocationService(catalog, history,
+                           registry=ModelRegistry(path)) as svc:
+        first = svc.allocate(_req(kmeans))
+        assert first.source == "zoo"
+
+    # "restart": new service over the same registry file
+    with AllocationService(catalog, history,
+                           registry=ModelRegistry(path)) as svc2:
+        again = svc2.allocate(_req(kmeans))
+        assert again.source == "registry"
+        assert again.profiled == 0
+        # classifier was warm-started from the persisted ladder
+        assert kmeans.name in svc2.classifier.jobs()
+
+
+def test_service_profile_error_fails_only_its_group(corpus):
+    jobs, catalog, history = corpus
+
+    def boom(_s):
+        raise RuntimeError("profiler crashed")
+
+    with AllocationService(catalog, history) as svc:
+        bad = AllocationRequest("bad/job", boom, 1e11, anchor=1e9)
+        good = _req(jobs[0])
+        f_bad, f_good = svc.submit(bad), svc.submit(good)
+        with pytest.raises(RuntimeError, match="profiler crashed"):
+            f_bad.result(timeout=60)
+        assert f_good.result(timeout=60).selection is not None
+
+
+def test_cancelled_future_does_not_kill_worker(corpus):
+    """A caller cancelling its pending future must not crash the worker
+    thread or strand the other requests in the batch."""
+    jobs, catalog, history = corpus
+    with AllocationService(catalog, history, batch_window_s=0.2) as svc:
+        f_cancel = svc.submit(_req(jobs[2]))
+        f_live = svc.submit(_req(jobs[0]))
+        assert f_cancel.cancel()            # still pending: cancel succeeds
+        r = f_live.result(timeout=60)       # sibling must still resolve
+        assert r.selection is not None
+        # worker survived and serves subsequent traffic
+        assert svc.allocate(_req(jobs[4])).selection is not None
+
+
+def test_flush_failure_does_not_kill_worker(corpus, tmp_path):
+    """Registry persistence failing (disk full / read-only) must not take
+    the worker thread down; models stay in memory."""
+    jobs, catalog, history = corpus
+    reg = ModelRegistry(str(tmp_path / "reg.json"))
+
+    def bad_flush():
+        raise OSError("disk full")
+
+    with AllocationService(catalog, history, registry=reg) as svc:
+        reg.flush = bad_flush
+        r = svc.allocate(_req(jobs[2]))
+        assert r.source == "zoo"
+        assert svc.stats.flush_errors >= 1
+        # worker alive, model served from the in-memory registry
+        assert svc.allocate(_req(jobs[2])).source == "registry"
+
+
+def test_unconfident_repeat_uses_plan_cache(corpus):
+    """A noisy job resubmitted against an unchanged world must not redo
+    the zoo fit / classifier scan."""
+    jobs, catalog, history = corpus
+    logreg = jobs[6]
+    with AllocationService(catalog, history) as svc:
+        first = svc.allocate(_req(logreg))
+        assert first.source in ("classifier", "baseline")
+        fits_before = svc.stats.zoo_fits
+        again = svc.allocate(_req(logreg))
+        assert again.source == first.source
+        assert again.profiled == 0
+        assert svc.stats.zoo_fits == fits_before       # no refit
+        assert svc.stats.plan_cache_hits >= 1
+        # a new confident model invalidates the negative cache...
+        svc.allocate(_req(jobs[2]))                     # kmeans -> zoo put
+        fits_before = svc.stats.zoo_fits
+        third = svc.allocate(_req(logreg))
+        assert svc.stats.zoo_fits == fits_before + 1    # ...so it refits
+        assert third.profiled == 0                      # from the LRU
+
+
+def test_service_rejects_after_close(corpus):
+    jobs, catalog, history = corpus
+    svc = AllocationService(catalog, history)
+    svc.close()
+    with pytest.raises(RuntimeError):
+        svc.submit(_req(jobs[0]))
+
+
+# -- serving endpoint ---------------------------------------------------------
+
+
+def test_allocation_endpoint_wire_format(corpus):
+    jobs, catalog, history = corpus
+    kmeans = jobs[2]
+    with AllocationService(catalog, history) as svc:
+        ep = AllocationEndpoint(svc)
+        wire = ep.handle(job=kmeans.name, profile_at=make_profile_fn(kmeans),
+                         full_size=kmeans.dataset_gib * GiB,
+                         anchor=kmeans.dataset_gib * GiB * 0.01)
+    assert wire["job"] == kmeans.name
+    assert wire["source"] == "zoo"
+    assert wire["candidate"] == "linear"
+    assert wire["requirement_gib"] > 0
+    assert isinstance(wire["config"], str) and "x" in wire["config"]
+    assert wire["usd_per_hour"] > 0

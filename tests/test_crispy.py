@@ -1,10 +1,17 @@
 """Crispy core: memory model, selection, and the paper's structural claims
-on the simulated corpus. Property-based tests via hypothesis."""
+on the simulated corpus. Property-based tests via hypothesis when it is
+installed; deterministic parametrized equivalents always run, so the tier-1
+suite does not require hypothesis."""
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.catalog import aws_like_catalog, medium_config
 from repro.core.crispy import CrispyAllocator
@@ -21,10 +28,7 @@ GiB = 1024 ** 3
 # -- memory model -------------------------------------------------------------
 
 
-@given(slope=st.floats(0.01, 100), intercept=st.floats(0, 1e9),
-       anchor=st.floats(1e6, 1e12))
-@settings(max_examples=50, deadline=None)
-def test_linear_data_is_confident_and_exact(slope, intercept, anchor):
+def _check_linear_confident_and_exact(slope, intercept, anchor):
     sizes = [anchor * f for f in (0.2, 0.4, 0.6, 0.8, 1.0)]
     mems = [slope * s + intercept for s in sizes]
     m = fit_memory_model(sizes, mems)
@@ -34,9 +38,7 @@ def test_linear_data_is_confident_and_exact(slope, intercept, anchor):
                         rel_tol=1e-6)
 
 
-@given(noise=st.floats(0.08, 0.5), seed=st.integers(0, 1000))
-@settings(max_examples=30, deadline=None)
-def test_noisy_data_falls_back(noise, seed):
+def _check_noisy_falls_back(noise, seed):
     rng = np.random.default_rng(seed)
     sizes = np.array([2, 4, 6, 8, 10], dtype=float) * 1e9
     mems = sizes * (1 + rng.normal(0, noise, 5)) + 1e9
@@ -45,6 +47,33 @@ def test_noisy_data_falls_back(noise, seed):
     # requirement(.) must be 0 whenever not confident
     if not m.confident:
         assert m.requirement(1e12) == 0.0
+
+
+@pytest.mark.parametrize("slope,intercept,anchor",
+                         [(0.9, 0.0, 1e9), (4.5, 1.6e9, 1e11),
+                          (0.01, 1e9, 1e6), (100.0, 5e8, 1e12)])
+def test_linear_data_is_confident_and_exact(slope, intercept, anchor):
+    _check_linear_confident_and_exact(slope, intercept, anchor)
+
+
+@pytest.mark.parametrize("noise,seed",
+                         [(0.08, 0), (0.2, 7), (0.5, 42), (0.35, 999)])
+def test_noisy_data_falls_back(noise, seed):
+    _check_noisy_falls_back(noise, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(slope=st.floats(0.01, 100), intercept=st.floats(0, 1e9),
+           anchor=st.floats(1e6, 1e12))
+    @settings(max_examples=50, deadline=None)
+    def test_linear_data_is_confident_and_exact_prop(slope, intercept,
+                                                     anchor):
+        _check_linear_confident_and_exact(slope, intercept, anchor)
+
+    @given(noise=st.floats(0.08, 0.5), seed=st.integers(0, 1000))
+    @settings(max_examples=30, deadline=None)
+    def test_noisy_data_falls_back_prop(noise, seed):
+        _check_noisy_falls_back(noise, seed)
 
 
 def test_constant_memory_is_confident():
@@ -60,8 +89,7 @@ def test_gate_threshold_is_papers():
 # -- selection ----------------------------------------------------------------
 
 
-@given(req=st.floats(0, 5000))
-@settings(max_examples=40, deadline=None)
+@pytest.mark.parametrize("req", [0.0, 1.0, 63.9, 500.0, 2831.0, 5000.0])
 def test_crispy_selection_respects_feasibility(req):
     catalog = aws_like_catalog()
     hist = build_history()
@@ -69,6 +97,13 @@ def test_crispy_selection_respects_feasibility(req):
     usable = sel.config.usable_mem_gib(2.0)
     biggest = max(c.usable_mem_gib(2.0) for c in catalog)
     assert usable >= min(req, biggest) - 1e-9
+
+
+if HAVE_HYPOTHESIS:
+    @given(req=st.floats(0, 5000))
+    @settings(max_examples=40, deadline=None)
+    def test_crispy_selection_respects_feasibility_prop(req):
+        test_crispy_selection_respects_feasibility(req)
 
 
 def test_zero_requirement_degenerates_to_bfa():

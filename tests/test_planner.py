@@ -1,21 +1,21 @@
 """HBM planner (Crispy-for-meshes): ladder profiling, linear gate,
 extrapolation accuracy against a ground-truth full compile."""
-import jax
 import pytest
-from jax.sharding import AxisType
 
 from repro.configs import SHAPES, get_arch
 from repro.configs.base import RunConfig
 from repro.core.hbm_planner import HBMPlanner, _reduced_depth
 from repro.core.catalog import tpu_catalog
+# AxisType only exists on newer jax; the compat helper feature-detects it so
+# this module collects (and the planner tests run) on older versions too.
+from repro.launch.mesh import compat_make_mesh
 
 GiB = 1024 ** 3
 
 
 @pytest.fixture(scope="module")
 def mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def _small_shape():
