@@ -1,8 +1,20 @@
 """Benchmark harness: one module per paper table/figure (+ roofline +
-planner). Each prints human-readable results then a final
-``name,us_per_call,derived`` CSV line."""
+planner + service/profiling). Each prints human-readable results then a
+final ``name,us_per_call,derived`` CSV line.
+
+``--only SUBSTR`` (repeatable) restricts the run to modules whose name
+contains any given substring — CI smokes the fast allocation benchmarks
+with ``--only table1 --only allocation --only profiling`` instead of
+paying for the compile-heavy planner/roofline modules.
+"""
+import argparse
+import os
 import sys
 import traceback
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; the `benchmarks.<module>` imports below need the root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 MODULES = [
     "benchmarks.table1_selection_cost",
@@ -11,14 +23,24 @@ MODULES = [
     "benchmarks.fig3_profile_traces",
     "benchmarks.fig4_measurement_hygiene",
     "benchmarks.allocation_service_throughput",
+    "benchmarks.profiling_adaptive",
     "benchmarks.planner_validation",
     "benchmarks.roofline_table",
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", default=[],
+                    help="run only modules whose name contains this "
+                         "substring (repeatable)")
+    args = ap.parse_args(argv)
+    mods = [m for m in MODULES
+            if not args.only or any(s in m for s in args.only)]
+    if not mods:
+        sys.exit(f"no benchmark matches --only {args.only}")
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in mods:
         print(f"\n===== {mod_name} =====", flush=True)
         try:
             mod = __import__(mod_name, fromlist=["main"])

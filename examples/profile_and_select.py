@@ -3,6 +3,11 @@ jobs with the OS-level RSS profiler (five sample sizes each), fit the
 memory model, gate on R^2, and select an AWS-style cluster configuration —
 Crispy §III steps 1-4 with *real* measurements.
 
+A second pass re-runs the suite through the adaptive scheduler under a
+shared ProfilingBudget (the paper's ten-minute envelope, scaled to this
+demo): linear jobs stop after ~3 samples instead of 5, anything the
+budget cuts short falls back exactly like an unconfident fit.
+
   PYTHONPATH=src python examples/profile_and_select.py
 """
 from repro.core.catalog import aws_like_catalog
@@ -11,10 +16,18 @@ from repro.core.local_jobs import LOCAL_JOBS
 from repro.core.profiler import RSSProfiler
 from repro.core.sampling import ladder_from_anchor
 from repro.core.simulator import build_history
+from repro.profiling import ProfilingBudget
 
 GiB = 1024 ** 3
 ANCHOR = 48 * 1024 * 1024            # profiling sample anchor (48 MiB)
 FULL_DATASET_GIB = 64                # pretend production dataset size
+BUDGET_WALL_S = 120.0                # demo-scaled ten-minute envelope
+
+
+def _profile_fn(profiler, factory):
+    def profile_at(size):
+        return profiler.profile(factory(int(size)), size)
+    return profile_at
 
 
 def main():
@@ -23,22 +36,42 @@ def main():
     profiler = RSSProfiler(interval_s=0.002)
     alloc = CrispyAllocator(catalog, history, overhead_per_node_gib=2.0,
                             leeway=0.05)
+    print("== fixed 5-point ladders (the paper) ==")
     print(f"{'job':16s} {'R2':>9s} {'gate':>9s} {'req(GiB)':>9s} "
           f"{'selected':>16s} {'profiling(s)':>12s}")
     for name, factory in LOCAL_JOBS.items():
         ladder = ladder_from_anchor(ANCHOR)
         profiler.profile(factory(int(ladder.anchor)), ladder.anchor)  # warmup
-
-        def profile_at(size):
-            return profiler.profile(factory(int(size)), size)
-
-        rep = alloc.allocate(name, profile_at, FULL_DATASET_GIB * GiB,
+        rep = alloc.allocate(name, _profile_fn(profiler, factory),
+                             FULL_DATASET_GIB * GiB,
                              sizes=ladder.sizes, exclude_job_in_history=False)
         print(f"{name:16s} {rep.model.r2:9.5f} "
               f"{'PASS' if rep.model.confident else 'fallback':>9s} "
               f"{rep.requirement_gib:9.1f} "
               f"{rep.selection.config.name:>16s} "
               f"{rep.profiling_wall_s:12.2f}")
+
+    print(f"\n== adaptive ladders under one {BUDGET_WALL_S:.0f}s budget ==")
+    budget = ProfilingBudget(wall_s=BUDGET_WALL_S)
+    print(f"{'job':16s} {'points':>6s} {'gate':>9s} {'req(GiB)':>9s} "
+          f"{'notes':>22s}")
+    for name, factory in LOCAL_JOBS.items():
+        rep = alloc.allocate(name, _profile_fn(profiler, factory),
+                             FULL_DATASET_GIB * GiB,
+                             sizes=ladder_from_anchor(ANCHOR).sizes,
+                             exclude_job_in_history=False,
+                             adaptive=True, budget=budget)
+        notes = " ".join(n for n, on in
+                         (("early-stop", rep.early_stop),
+                          ("escalated", rep.escalated),
+                          ("budget-cut", rep.budget_exhausted)) if on)
+        print(f"{name:16s} {rep.points_profiled:6d} "
+              f"{'PASS' if rep.model.confident else 'fallback':>9s} "
+              f"{rep.requirement_gib:9.1f} {notes:>22s}")
+    snap = budget.snapshot()
+    print(f"budget: {snap['points_spent']} points, "
+          f"{snap['elapsed_s']:.1f}/{snap['wall_s']:.0f}s elapsed, "
+          f"{snap['denials']} denials")
 
 
 if __name__ == "__main__":

@@ -31,11 +31,19 @@ into a servable, stateful subsystem:
                  within a batch, serves ladder points from a ProfileResult
                  LRU across batches, and walks the fallback chain
                  registry -> zoo -> classifier -> BFA baseline.
+                 Profiling orchestration is delegated to
+                 `repro.profiling`: `adaptive=True` schedules ladders
+                 point-by-point with early stop, `budget=` enforces the
+                 paper's ten-minute envelope service-wide, `store=` backs
+                 the LRU with a file-locked multi-process JSONL store,
+                 and `executor=` profiles independent ladders and
+                 signature groups concurrently.
 
 Serving surface: `repro.serve.engine.AllocationEndpoint` adapts the
 service to dict-in/dict-out request handling next to the token-serving
 `ServeEngine`; `benchmarks/allocation_service_throughput.py` measures
-requests/sec and cache hit-rate.
+requests/sec and cache hit-rate; `benchmarks/profiling_adaptive.py`
+compares fixed-vs-adaptive profiling cost.
 """
 from repro.allocator.classifier import (Classification, NearestJobClassifier,
                                         feature_distance, profile_features)

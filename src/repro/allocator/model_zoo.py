@@ -217,6 +217,11 @@ class ZooFit(GatedMemoryModel):
     train_r2: Dict[str, float]       # kind -> train R²
     n: int
     loocv_gate: float = LOOCV_GATE
+    fits: Optional[Dict[str, object]] = None   # kind -> fitted candidate
+                                     # (all of them — the adaptive
+                                     # scheduler's disagreement check
+                                     # reads their full-size predictions
+                                     # without refitting)
 
     @property
     def loocv_score(self) -> float:
@@ -277,7 +282,7 @@ def fit_zoo(sizes: Sequence[float], mems: Sequence[float],
 
     if not fits:     # degenerate input (n < 2): paper's unconfident linear
         return ZooFit(fit_memory_model(x, y), LinearMemoryModel.kind,
-                      scores, train_r2, n, loocv_gate)
+                      scores, train_r2, n, loocv_gate, fits)
 
     eligible = [k for k in order if getattr(fits[k], "confident", False)]
     pool = eligible or order
@@ -288,7 +293,8 @@ def fit_zoo(sizes: Sequence[float], mems: Sequence[float],
     tol = best_score * 0.10 + 0.1 * loocv_gate
     chosen = next(k for k in order
                   if k in pool and scores[k] <= best_score + tol)
-    return ZooFit(fits[chosen], chosen, scores, train_r2, n, loocv_gate)
+    return ZooFit(fits[chosen], chosen, scores, train_r2, n, loocv_gate,
+                  fits)
 
 
 def zoo_fitter(candidates: Optional[Sequence] = None,

@@ -22,6 +22,28 @@ classifier.py): transfer the nearest observed neighbor's registered model,
 else the neighbor's best historical config, else the paper's BFA baseline
 (requirement 0). Profiled ladders are always `observe`d by the classifier,
 so even gate-failing jobs contribute to future classifications.
+
+Profiling orchestration (repro.profiling) is delegated, not inlined:
+
+  adaptive=True      ladders run through the AdaptiveLadderScheduler —
+                     smallest point first, refit after each, stop early
+                     once the selected model is confident and its
+                     requirement prediction has stabilized; escalate past
+                     the base ladder only when candidates disagree.
+  budget=            a shared ProfilingBudget gates every fresh profile
+                     run (adaptive or fixed) — the paper's ten-minute
+                     envelope enforced service-wide.
+  store=             a file-locked ProfileStore backs the in-process LRU:
+                     points and calibrated anchors profiled by *any*
+                     process are reused, and `_ladder_of` skips anchor
+                     guessing for signatures with a persisted anchor.
+  executor=          a ProfilingExecutor profiles fixed ladders
+                     point-concurrently and fans independent signature
+                     groups of one batch out over its pool.
+
+Pair `store=` with a `repro.profiling.store.LockedModelRegistry` as the
+`registry=` so concurrent service processes also share one model registry
+without lost writes.
 """
 from __future__ import annotations
 
@@ -69,6 +91,7 @@ class AllocationRequest:
     sizes: Optional[List[float]] = None
     signature: Optional[str] = None     # defaults to the job name
     leeway: Optional[float] = None      # overrides the service default
+    adaptive: Optional[bool] = None     # overrides the service default
 
     @property
     def sig(self) -> str:
@@ -86,8 +109,11 @@ class AllocationResponse:
     selection: Selection
     neighbor: Optional[str] = None
     profiled: int = 0            # fresh profile_at calls for this plan
-    cache_hits: int = 0          # ladder points served from the LRU
+    cache_hits: int = 0          # ladder points served from the LRU/store
     wall_s: float = 0.0
+    early_stop: bool = False     # adaptive schedule stopped before 5 points
+    escalated: bool = False      # adaptive schedule spent extra points
+    budget_exhausted: bool = False   # the budget denied at least one point
 
 
 @dataclass
@@ -103,6 +129,12 @@ class ServiceStats:
     baseline_fallbacks: int = 0
     plan_cache_hits: int = 0     # unconfident repeats answered w/o refit
     flush_errors: int = 0        # registry persistence failures survived
+    store_hits: int = 0          # ladder points served by the shared store
+    adaptive_plans: int = 0      # plans scheduled adaptively
+    early_stops: int = 0         # adaptive plans that stopped early
+    escalations: int = 0         # adaptive plans that spent extra points
+    points_saved: int = 0        # ladder points adaptive plans did not run
+    budget_denied: int = 0       # plans the budget cut short
 
     @property
     def profile_hit_rate(self) -> float:
@@ -120,6 +152,9 @@ class _Plan:
     neighbor_selection: Optional[Selection] = None
     profiled: int = 0
     cache_hits: int = 0
+    early_stop: bool = False
+    escalated: bool = False
+    budget_exhausted: bool = False
 
 
 class AllocationService:
@@ -131,7 +166,12 @@ class AllocationService:
                  overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
                  leeway: float = 0.0,
                  profile_cache_size: int = 512,
-                 batch_window_s: float = 0.005):
+                 batch_window_s: float = 0.005,
+                 adaptive: bool = False,
+                 budget=None,               # repro.profiling ProfilingBudget
+                 store=None,                # repro.profiling ProfileStore
+                 executor=None,             # repro.profiling ProfilingExecutor
+                 scheduler=None):           # AdaptiveLadderScheduler override
         self.catalog = catalog
         self.history = history
         self.registry = registry if registry is not None else ModelRegistry()
@@ -141,6 +181,11 @@ class AllocationService:
         self.overhead = overhead_per_node_gib
         self.leeway = leeway
         self.batch_window_s = batch_window_s
+        self.adaptive = adaptive
+        self.budget = budget
+        self.store = store
+        self.executor = executor
+        self._scheduler = scheduler
         self.stats = ServiceStats()
 
         self._cache: "OrderedDict[Tuple[str, float], ProfileResult]" = \
@@ -151,10 +196,12 @@ class AllocationService:
         # classifier scan N times. Cleared whenever the observable world
         # changes (new signature observed / new model registered), because
         # either can turn a baseline outcome into a classifier one.
-        # Worker-thread-only state: no lock needed.
+        # Guarded by _plan_lock: with an executor, a batch's signature
+        # groups plan concurrently.
         self._plan_cache: "OrderedDict[Tuple[str, Tuple[float, ...]], _Plan]" \
             = OrderedDict()
         self._plan_cache_hist_version = history.version
+        self._plan_lock = threading.Lock()
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._pending: List[Tuple[AllocationRequest, Future]] = []
@@ -233,6 +280,19 @@ class AllocationService:
         with self._lock:
             self.stats.batches += 1
             self.stats.requests += len(batch)
+        # pull sibling processes' work in once per batch: profile points /
+        # anchors from the shared store, models from a locked registry
+        if self.store is not None:
+            try:
+                self.store.refresh()
+            except Exception:
+                pass                        # stale view is still correct
+        refresh = getattr(self.registry, "refresh", None)
+        if refresh is not None:
+            try:
+                refresh()
+            except Exception:
+                pass
         # group by (signature, ladder): same-signature requests share one
         # profiling ladder only when they actually ask for the same ladder,
         # so coalescing never silently overrides an explicit sizes/anchor
@@ -241,17 +301,19 @@ class AllocationService:
         for req, fut in batch:
             groups.setdefault((req.sig, self._ladder_of(req)),
                               []).append((req, fut))
-        for (sig, _ladder), items in groups.items():
+
+        def handle_group(entry) -> None:
+            (sig, _ladder), items = entry
             live = [(req, fut) for req, fut in items if not fut.cancelled()]
             if not live:                    # whole group cancelled: don't
-                continue                    # profile for nobody
+                return                      # profile for nobody
             t0 = time.monotonic()
             try:
                 plan = self._plan(sig, live[0][0])
             except Exception as e:          # a failing profile_at fails its
                 for _, fut in live:         # group, never the whole batch
                     _resolve(fut, exc=e)
-                continue
+                return
             wall = time.monotonic() - t0
             for req, fut in live:
                 try:
@@ -260,6 +322,15 @@ class AllocationService:
                     _resolve(fut, exc=e)
                     continue
                 _resolve(fut, result=resp)
+
+        entries = list(groups.items())
+        if self.executor is not None and len(entries) > 1:
+            # independent signatures plan (and profile) concurrently;
+            # handle_group resolves its own futures and never raises
+            self.executor.map_tasks(handle_group, entries)
+        else:
+            for entry in entries:
+                handle_group(entry)
         # one file rewrite for however many models this batch registered;
         # a persistence failure (disk full, read-only) must not kill the
         # worker — models stay in memory and the next flush retries
@@ -270,12 +341,31 @@ class AllocationService:
                 self.stats.flush_errors += 1
 
     # -- planning -----------------------------------------------------------
-    @staticmethod
-    def _ladder_of(req: AllocationRequest) -> Tuple[float, ...]:
-        sizes = req.sizes if req.sizes is not None else \
-            ladder_from_anchor(req.anchor if req.anchor is not None
-                               else req.full_size * 0.01).sizes
-        return tuple(float(s) for s in sizes)
+    def _ladder_of(self, req: AllocationRequest) -> Tuple[float, ...]:
+        if req.sizes is not None:
+            return tuple(float(s) for s in req.sizes)
+        anchor = req.anchor
+        if anchor is None and self.store is not None:
+            # a signature any process ever calibrated skips anchor guessing
+            anchor = self.store.get_anchor(req.sig)
+        if anchor is None:
+            anchor = req.full_size * 0.01
+        elif req.anchor is not None and self.store is not None \
+                and self.store.get_anchor(req.sig) is None:
+            try:
+                self.store.put_anchor(req.sig, float(req.anchor))
+            except Exception:
+                pass            # a failed anchor write must never kill the
+                                # worker (the batch's futures would hang)
+        return tuple(float(s) for s in ladder_from_anchor(anchor).sizes)
+
+    def _make_scheduler(self):
+        if self._scheduler is None:
+            # deferred import: repro.profiling imports allocator submodules
+            from repro.profiling.scheduler import AdaptiveLadderScheduler
+            self._scheduler = AdaptiveLadderScheduler(
+                candidates=self.candidates, budget=self.budget)
+        return self._scheduler
 
     def _plan(self, sig: str, req: AllocationRequest) -> _Plan:
         rec = self.registry.get(sig)
@@ -285,100 +375,226 @@ class AllocationService:
             return _Plan("registry", rec.model, rec.candidate)
 
         ladder = self._ladder_of(req)
-        sizes = list(ladder)
         plan_key = (sig, ladder)
-        # classifier/baseline plans freeze history-derived selections, so a
-        # history mutation invalidates the whole negative cache
-        hv = self.history.version
-        if hv != self._plan_cache_hist_version:
-            self._plan_cache.clear()
-            self._plan_cache_hist_version = hv
-        cached_plan = self._plan_cache.get(plan_key)
-        if cached_plan is not None:
-            self._plan_cache.move_to_end(plan_key)
-            with self._lock:
-                self.stats.plan_cache_hits += 1
-            # this request did no profiling; don't report the original's
-            return dataclasses.replace(cached_plan, profiled=0,
-                                       cache_hits=0)
+        with self._plan_lock:
+            # classifier/baseline plans freeze history-derived selections,
+            # so a history mutation invalidates the whole negative cache
+            hv = self.history.version
+            if hv != self._plan_cache_hist_version:
+                self._plan_cache.clear()
+                self._plan_cache_hist_version = hv
+            cached_plan = self._plan_cache.get(plan_key)
+            if cached_plan is not None:
+                self._plan_cache.move_to_end(plan_key)
+                with self._lock:
+                    self.stats.plan_cache_hits += 1
+                # this request did no profiling; don't report the
+                # original's counters or adaptive-schedule flags
+                return dataclasses.replace(cached_plan, profiled=0,
+                                           cache_hits=0, early_stop=False,
+                                           escalated=False,
+                                           budget_exhausted=False)
 
-        results, fresh, hits = self._profile_ladder(sig, req, sizes)
-        mems = [r.job_mem_bytes for r in results]
-        zoo = fit_zoo(sizes, mems, self.candidates)
+        sizes, mems, zoo, flags = self._measure_and_fit(sig, req,
+                                                        list(ladder))
+        fresh, hits = flags["fresh"], flags["hits"]
         with self._lock:
             self.stats.zoo_fits += 1
-        # never discard profiling work: even gate-failing ladders feed
-        # future nearest-job classifications
-        newly_observed = not self.classifier.has(sig)
-        self.classifier.observe(sig, sizes, mems)
-        if newly_observed:
-            self._plan_cache.clear()    # a new neighbor may rescue others
+        with self._plan_lock:
+            # never discard profiling work: even gate-failing ladders feed
+            # future nearest-job classifications
+            newly_observed = not self.classifier.has(sig)
+            self.classifier.observe(sig, sizes, mems)
+            if newly_observed:
+                self._plan_cache.clear()  # a new neighbor may rescue others
 
         if zoo.confident:
-            self.registry.put(sig, zoo.model, zoo.candidate, sizes, mems,
+            model = getattr(zoo, "model", zoo)
+            candidate = getattr(zoo, "candidate",
+                                getattr(zoo, "kind", "linear"))
+            self.registry.put(sig, model, candidate, sizes, mems,
                               defer_save=True)
-            self._plan_cache.clear()    # its model may rescue others too
+            with self._plan_lock:
+                self._plan_cache.clear()  # its model may rescue others too
             with self._lock:
                 self.stats.zoo_confident += 1
-            return _Plan("zoo", zoo, zoo.candidate,
-                         profiled=fresh, cache_hits=hits)
+            return _Plan("zoo", zoo, candidate, profiled=fresh,
+                         cache_hits=hits, **flags["adaptive"])
 
         plan = None
-        cls = self.classifier.classify(sizes, mems, exclude=(sig,))
+        with self._plan_lock:
+            cls = self.classifier.classify(sizes, mems, exclude=(sig,)) \
+                if len(sizes) >= 2 else None
         if cls is not None:
             neighbor_rec = self.registry.get(cls.neighbor, count_hit=False)
             if neighbor_rec is not None and \
                     getattr(neighbor_rec.model, "confident", False):
                 plan = _Plan("classifier", neighbor_rec.model,
                              neighbor_rec.candidate, neighbor=cls.neighbor,
-                             profiled=fresh, cache_hits=hits)
+                             profiled=fresh, cache_hits=hits,
+                             **flags["adaptive"])
             else:
                 sel = select_like(self.catalog, self.history, cls.neighbor)
                 if sel is not None:
                     plan = _Plan("classifier", None, None,
                                  neighbor=cls.neighbor,
                                  neighbor_selection=sel,
-                                 profiled=fresh, cache_hits=hits)
+                                 profiled=fresh, cache_hits=hits,
+                                 **flags["adaptive"])
         if plan is None:
             plan = _Plan("baseline", None, None,
-                         profiled=fresh, cache_hits=hits)
+                         profiled=fresh, cache_hits=hits,
+                         **flags["adaptive"])
         with self._lock:
             if plan.source == "classifier":
                 self.stats.classifier_fallbacks += 1
             else:
                 self.stats.baseline_fallbacks += 1
-        self._plan_cache[plan_key] = plan
-        self._plan_cache.move_to_end(plan_key)
-        while len(self._plan_cache) > self._cache_cap:
-            self._plan_cache.popitem(last=False)
+        # cache only fully-profiled negative outcomes: a plan cut short by
+        # the budget reflects a transient denial, not a property of the
+        # job, and must not stick once the budget recovers
+        if not plan.budget_exhausted:
+            with self._plan_lock:
+                self._plan_cache[plan_key] = plan
+                self._plan_cache.move_to_end(plan_key)
+                while len(self._plan_cache) > self._cache_cap:
+                    self._plan_cache.popitem(last=False)
         return plan
+
+    def _measure_and_fit(self, sig: str, req: AllocationRequest,
+                         sizes: List[float]):
+        """Profile a ladder (adaptively or fixed) and fit the zoo over
+        whatever points materialized. Returns (sizes, mems, fit, flags)."""
+        adaptive = req.adaptive if req.adaptive is not None else self.adaptive
+        aflags = {"early_stop": False, "escalated": False,
+                  "budget_exhausted": False}
+        if adaptive:
+            ap = self._make_scheduler().run(sizes, req.full_size,
+                                            self._point_fn(sig, req))
+            aflags = {"early_stop": ap.early_stop,
+                      "escalated": ap.escalated,
+                      "budget_exhausted": ap.budget_exhausted}
+            with self._lock:
+                self.stats.adaptive_plans += 1
+                self.stats.early_stops += int(ap.early_stop)
+                self.stats.escalations += int(ap.escalated)
+                self.stats.budget_denied += int(ap.budget_exhausted)
+                self.stats.points_saved += max(0, len(sizes)
+                                               - ap.total_points)
+            return (ap.sizes, ap.mems, ap.fit,
+                    {"fresh": ap.points, "hits": ap.cache_hits,
+                     "adaptive": aflags})
+
+        results, fresh, hits, exhausted = self._profile_ladder(sig, req,
+                                                               sizes)
+        got = [(s, r) for s, r in zip(sizes, results) if r is not None]
+        used = [s for s, _ in got]
+        mems = [r.job_mem_bytes for _, r in got]
+        aflags["budget_exhausted"] = exhausted
+        if exhausted:
+            with self._lock:
+                self.stats.budget_denied += 1
+        zoo = fit_zoo(used, mems, self.candidates)
+        return used, mems, zoo, {"fresh": fresh, "hits": hits,
+                                 "adaptive": aflags}
+
+    def _point_fn(self, sig: str, req: AllocationRequest):
+        """Profile-point callback for the scheduler/executor, carrying a
+        `.peek` so budget gates can serve cached points for free."""
+        def pp(s: float) -> Tuple[ProfileResult, bool]:
+            return self._profile_point(sig, req, s)
+        pp.peek = lambda s: self._lookup_point(sig, s)
+        return pp
+
+    def _lookup_point(self, sig: str, s: float) -> Optional[ProfileResult]:
+        """Cache-hierarchy lookup only (LRU -> shared store), no profiling.
+        Thread-safe; counts hits."""
+        key = (sig, float(s))
+        with self._lock:
+            cached = self._cache.get(key)
+            if cached is not None:
+                self._cache.move_to_end(key)
+                self.stats.cache_hits += 1
+        if cached is not None:
+            return cached
+        if self.store is not None:
+            stored = self.store.get(sig, s)
+            if stored is not None:
+                with self._lock:
+                    self.stats.store_hits += 1
+                    self.stats.cache_hits += 1
+                    self._cache_put_locked(key, stored)
+                return stored
+        return None
+
+    def _profile_point(self, sig: str, req: AllocationRequest,
+                       s: float) -> Tuple[ProfileResult, bool]:
+        """One ladder point: cache hierarchy first, fresh profile run on a
+        miss (recorded in LRU + store). Returns (result, fresh)."""
+        cached = self._lookup_point(sig, s)
+        if cached is not None:
+            return cached, False
+        r = req.profile_at(s)
+        with self._lock:
+            self.stats.profile_calls += 1
+            self._cache_put_locked((sig, float(s)), r)
+        if self.store is not None:
+            try:
+                self.store.put(sig, s, r)
+            except Exception:
+                pass                    # a write-through failure costs a
+                                        # future re-profile, never the plan
+        return r, True
+
+    def _cache_put_locked(self, key: Tuple[str, float],
+                          r: ProfileResult) -> None:
+        self._cache[key] = r
+        self._cache.move_to_end(key)
+        while len(self._cache) > self._cache_cap:
+            self._cache.popitem(last=False)
 
     def _profile_ladder(self, sig: str, req: AllocationRequest,
                         sizes: Sequence[float]
-                        ) -> Tuple[List[ProfileResult], int, int]:
-        results: List[ProfileResult] = []
+                        ) -> Tuple[List[Optional[ProfileResult]], int, int,
+                                   bool]:
+        """Fixed ladder: all points, concurrently when an executor is
+        configured, each *fresh* run gated by the budget (cached points
+        are always free). Returns results aligned with `sizes` (None =
+        budget denial), fresh count, hit count, and whether the budget
+        denied anything."""
+        pp = self._point_fn(sig, req)
+        if self.executor is not None:
+            rows = self.executor.profile_ladder(sizes, pp,
+                                                budget=self.budget)
+            results = [r for _s, r, _f in rows]
+            fresh = sum(1 for _s, r, f in rows if r is not None and f)
+            hits = sum(1 for _s, r, f in rows if r is not None and not f)
+            return results, fresh, hits, any(r is None for r in results)
+
+        results: List[Optional[ProfileResult]] = []
         fresh = hits = 0
+        exhausted = False
         for s in sizes:
-            key = (sig, float(s))
-            with self._lock:
-                cached = self._cache.get(key)
-                if cached is not None:
-                    self._cache.move_to_end(key)
-                    self.stats.cache_hits += 1
+            cached = pp.peek(s)
             if cached is not None:
                 hits += 1
                 results.append(cached)
                 continue
-            r = req.profile_at(s)
-            fresh += 1
+            if self.budget is not None and not self.budget.try_spend():
+                results.append(None)
+                exhausted = True
+                continue
+            r, was_fresh = pp(s)
+            if was_fresh:
+                fresh += 1
+                if self.budget is not None:
+                    self.budget.charge(r.wall_s)
+            else:
+                hits += 1       # raced with a concurrent group's profile
+                if self.budget is not None:
+                    self.budget.refund()
             results.append(r)
-            with self._lock:
-                self.stats.profile_calls += 1
-                self._cache[key] = r
-                self._cache.move_to_end(key)
-                while len(self._cache) > self._cache_cap:
-                    self._cache.popitem(last=False)
-        return results, fresh, hits
+        return results, fresh, hits, exhausted
 
     def _respond(self, plan: _Plan, req: AllocationRequest,
                  wall: float) -> AllocationResponse:
@@ -399,4 +615,5 @@ class AllocationService:
         return AllocationResponse(req.job, req.sig, plan.source,
                                   plan.candidate, plan.model, req_gib, sel,
                                   plan.neighbor, plan.profiled,
-                                  plan.cache_hits, wall)
+                                  plan.cache_hits, wall, plan.early_stop,
+                                  plan.escalated, plan.budget_exhausted)

@@ -41,6 +41,13 @@ class CrispyReport:
     selection: Selection
     profiling_wall_s: float
     results: List[ProfileResult] = field(default_factory=list)
+    early_stop: bool = False         # adaptive: stopped before the ladder end
+    escalated: bool = False          # adaptive: spent extra points
+    budget_exhausted: bool = False   # a point was denied by the budget
+
+    @property
+    def points_profiled(self) -> int:
+        return len(self.sizes)
 
 
 class CrispyAllocator:
@@ -60,15 +67,36 @@ class CrispyAllocator:
                  full_size: float,
                  anchor: Optional[float] = None,
                  sizes: Optional[List[float]] = None,
-                 exclude_job_in_history: bool = True) -> CrispyReport:
+                 exclude_job_in_history: bool = True,
+                 adaptive: bool = False,
+                 budget=None) -> CrispyReport:
+        """Paper steps 1-4. With `adaptive=True` (or a
+        `repro.profiling.ProfilingBudget` passed as `budget=`) the ladder
+        runs through the AdaptiveLadderScheduler: smallest point first,
+        refit after each, early stop once the model is confident and its
+        requirement prediction has stabilized — strictly fewer profile
+        runs than the fixed ladder on clean jobs, same fallback behavior
+        on noisy ones."""
         t0 = time.monotonic()
         if sizes is None:
             ladder = ladder_from_anchor(anchor if anchor is not None
                                         else full_size * 0.01)
             sizes = ladder.sizes
-        results = [profile_at(s) for s in sizes]
-        mems = [r.job_mem_bytes for r in results]
-        model = self.fitter(sizes, mems)
+        if adaptive or budget is not None:
+            # deferred import: repro.profiling depends on allocator modules
+            from repro.profiling.scheduler import AdaptiveLadderScheduler
+            sched = AdaptiveLadderScheduler(fitter=self.fitter,
+                                            budget=budget)
+            ap = sched.run(sizes, full_size,
+                           lambda s: (profile_at(s), True))
+            sizes, mems, results = ap.sizes, ap.mems, ap.results
+            model = ap.fit
+            flags = (ap.early_stop, ap.escalated, ap.budget_exhausted)
+        else:
+            results = [profile_at(s) for s in sizes]
+            mems = [r.job_mem_bytes for r in results]
+            model = self.fitter(sizes, mems)
+            flags = (False, False, False)
         req_gib = model.requirement(full_size, self.leeway) / GiB
         sel = select_crispy(
             self.catalog, self.history, req_gib,
@@ -76,4 +104,4 @@ class CrispyAllocator:
             exclude_job=job if exclude_job_in_history else None)
         wall = time.monotonic() - t0
         return CrispyReport(job, list(sizes), mems, model, req_gib, sel,
-                            wall, results)
+                            wall, results, *flags)

@@ -30,6 +30,10 @@ class ExecutionHistory:
         # The RLock closes the check-then-set race with a concurrent add()
         # (the AllocationService worker reads while submitters may record).
         self._nc_cache: Dict[str, Dict[str, float]] = {}
+        # the full BFA score table (config -> mean normalized cost over all
+        # jobs but one), memoized per exclude_job: one O(jobs x configs)
+        # scan amortized over every selection until the history changes
+        self._bfa_cache: Dict[Optional[str], Dict[str, float]] = {}
         self._lock = threading.RLock()
         self._version = 0
         for e in executions:
@@ -47,6 +51,7 @@ class ExecutionHistory:
         with self._lock:
             self._by_job[e.job][e.config_name] = e
             self._nc_cache.pop(e.job, None)
+            self._bfa_cache.clear()     # every exclude_job view is stale
             self._version += 1
 
     def jobs(self) -> List[str]:
@@ -86,19 +91,34 @@ class ExecutionHistory:
                 return None
             return min(ex, key=lambda name: ex[name].usd)
 
+    def bfa_scores(self, exclude_job: Optional[str] = None
+                   ) -> Dict[str, float]:
+        """config name -> mean normalized cost over all jobs but
+        `exclude_job` — the whole BFA ranking table in one scan, memoized
+        per exclude_job and invalidated whenever the history gains a run.
+        Catalog-independent (keyed by config name), so any catalog subset
+        the selector restricts to reuses the same table. Do not mutate."""
+        with self._lock:
+            cached = self._bfa_cache.get(exclude_job)
+            if cached is not None:
+                return cached
+            sums: Dict[str, float] = defaultdict(float)
+            counts: Dict[str, int] = defaultdict(int)
+            for job in self._by_job:
+                if job == exclude_job:
+                    continue
+                for name, v in self._normalized_costs_cached(job).items():
+                    sums[name] += v
+                    counts[name] += 1
+            scores = {name: sums[name] / counts[name] for name in sums}
+            self._bfa_cache[exclude_job] = scores
+            return scores
+
     def mean_normalized_cost(self, config_name: str,
                              exclude_job: Optional[str] = None) -> float:
         """Average normalized cost of `config_name` over all *other* jobs —
         the BFA ranking signal. inf if the config never ran."""
-        with self._lock:
-            vals = []
-            for job in self._by_job:
-                if job == exclude_job:
-                    continue
-                nc = self._normalized_costs_cached(job)
-                if config_name in nc:
-                    vals.append(nc[config_name])
-            return sum(vals) / len(vals) if vals else float("inf")
+        return self.bfa_scores(exclude_job).get(config_name, float("inf"))
 
     def config_names(self) -> List[str]:
         with self._lock:

@@ -54,7 +54,7 @@ def integer_ladder(anchor: int, n: int = N_SAMPLES, lo: int = 1) -> List[int]:
     """Ladder over an integer knob (layers, microbatch rows, ...)."""
     lo = max(lo, 1)
     if anchor <= lo:
-        return [max(1, anchor)] * 0 or [anchor]
+        return [max(1, anchor)]
     step = (anchor - lo) / (n - 1)
     sizes = sorted({int(round(lo + i * step)) for i in range(n)})
     return sizes

@@ -31,9 +31,14 @@ class Selection:
 
 def select_bfa(catalog: List[ClusterConfig], history: ExecutionHistory,
                exclude_job: Optional[str] = None) -> ClusterConfig:
-    def rank(c: ClusterConfig):
-        return history.mean_normalized_cost(c.name, exclude_job=exclude_job)
-    return min(catalog, key=lambda c: (rank(c), c.usd_per_hour))
+    # one precomputed score table per (history state, exclude_job) — see
+    # ExecutionHistory.bfa_scores — then an O(catalog) argmin; the
+    # AllocationService no longer re-runs the jobs x configs scan per
+    # request, and feasibility-restricted subsets reuse the same table
+    scores = history.bfa_scores(exclude_job=exclude_job)
+    inf = float("inf")
+    return min(catalog,
+               key=lambda c: (scores.get(c.name, inf), c.usd_per_hour))
 
 
 def select_medium(catalog: List[ClusterConfig]) -> ClusterConfig:

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from repro.configs import (ARCHS, SHAPES, get_arch, shape_applicable,
                            cell_id)
 from repro.configs.base import RunConfig
-from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.launch.mesh import (compat_cost_analysis, make_production_mesh,
+                               mesh_config)
 from repro.launch.presets import preset_run
 from repro.launch.hlo_costs import analyze as hlo_analyze
 from repro.launch.roofline import model_flops, roofline_from_hlo
@@ -122,7 +123,7 @@ def run_cell(cfg, shape, mesh, run: RunConfig = None, hlo_out: str = None):
     compiled = lowered.compile()
     t_compile = time.monotonic() - t0
     ma = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat_cost_analysis(compiled)
     hlo = compiled.as_text()
     if hlo_out:
         with open(hlo_out, "w") as f:

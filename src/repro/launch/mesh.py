@@ -20,6 +20,38 @@ from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
 
 HAS_AXIS_TYPE = AxisType is not None
 
+def compat_shard_map(body, mesh, in_specs, out_specs, check_vma=None):
+    """`jax.shard_map` across jax versions: top-level API with `check_vma`
+    on new jax, `jax.experimental.shard_map.shard_map` with the older
+    `check_rep` spelling of the same knob otherwise."""
+    kw = {} if check_vma is None else {"check_vma": check_vma}
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, **kw)
+
+
+def compat_cost_analysis(compiled) -> dict:
+    """`compiled.cost_analysis()` across jax versions: newer jax returns
+    one dict, jax <= 0.4.x a list with one dict per partitioned program —
+    normalize to the first (host-local) program's dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return cost
+
+
+def compat_axis_size(axis_name: str):
+    """`lax.axis_size` inside a shard_map/pmap body across jax versions;
+    older jax uses the classic constant-folded `psum(1, axis)` idiom."""
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
 
 def compat_make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """`jax.make_mesh` with Auto axis types where the installed jax supports

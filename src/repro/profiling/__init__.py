@@ -1,0 +1,51 @@
+"""Profiling orchestration: budgeted, adaptive, concurrent, multi-process.
+
+Crispy's whole value proposition is cheap profiling — under ten minutes
+per job on a laptop — yet the PR-1 pipeline spends a fixed 5-point ladder
+serially on every new signature and keeps its caches per-process. This
+package turns profiling itself into a managed resource:
+
+  budget.py     `ProfilingBudget` — the paper's ten-minute envelope as an
+                enforced, thread-safe limit (wall clock, accounted profile
+                seconds, and point count) shared by everything below.
+
+  scheduler.py  `AdaptiveLadderScheduler` — profiles smallest-first,
+                refits the model zoo after each point, stops once the
+                selected candidate is confident and its full-size
+                requirement prediction has stabilized; escalates beyond
+                the base ladder only when candidates disagree (Ruya-style
+                iterative spend, arXiv:2211.04240). `calibrated_anchor`
+                persists per-signature anchors so repeat signatures skip
+                `calibrate_anchor` entirely.
+
+  executor.py   `ProfilingExecutor` — thread pool that profiles fixed
+                ladders point-concurrently and fans independent signature
+                groups out, all under one global budget.
+
+  store.py      `FileLock` (fcntl advisory), `ProfileStore` (append-only
+                JSONL of profile points + calibrated anchors, safe across
+                processes), and `LockedModelRegistry` (read-merge-write
+                registry flushes: concurrent services lose no records).
+
+`repro.allocator.service.AllocationService` delegates its profiling path
+here (`adaptive=True`, `budget=`, `store=`, `executor=`);
+`repro.core.crispy.CrispyAllocator.allocate` grows the same knobs for the
+one-shot path; `benchmarks/profiling_adaptive.py` measures fixed-vs-
+adaptive points, wall time and requirement error.
+"""
+from repro.profiling.budget import BudgetExhausted, ProfilingBudget
+from repro.profiling.executor import DEFAULT_WORKERS, ProfilingExecutor
+from repro.profiling.scheduler import (AdaptiveLadderScheduler,
+                                       AdaptiveProfile, DISAGREE_RTOL,
+                                       MAX_EXTRA_POINTS, MIN_POINTS,
+                                       STABILITY_RTOL, calibrated_anchor)
+from repro.profiling.store import (FileLock, HAS_FCNTL, LockedModelRegistry,
+                                   ProfileStore)
+
+__all__ = [
+    "AdaptiveLadderScheduler", "AdaptiveProfile", "BudgetExhausted",
+    "DEFAULT_WORKERS", "DISAGREE_RTOL", "FileLock", "HAS_FCNTL",
+    "LockedModelRegistry", "MAX_EXTRA_POINTS", "MIN_POINTS",
+    "ProfileStore", "ProfilingBudget", "ProfilingExecutor",
+    "STABILITY_RTOL", "calibrated_anchor",
+]

@@ -1,0 +1,138 @@
+"""ProfilingBudget: the paper's ten-minute envelope as an enforced resource.
+
+Crispy's pitch is that profiling costs "less than ten minutes per job on a
+consumer-grade laptop" (§IV-B, Table II). The follow-up allocation study
+(arXiv:2306.03672) argues profiling itself must be treated as a budgeted
+resource: every profile point spent on one job is wall time unavailable to
+another. `ProfilingBudget` makes that envelope explicit and shared — the
+adaptive scheduler, the profiling executor and the AllocationService all
+check the same budget before spending a point.
+
+Three independent limits, any of which exhausts the budget:
+
+  wall_s      real elapsed time since the budget started (monotonic clock);
+  charge_s    *accounted* profiling seconds — the sum of ProfileResult
+              wall_s values charged via `charge()`. This is the limit the
+              simulator-driven tests and benchmarks exercise: simulated
+              profile runs report minutes of "wall time" while taking
+              microseconds, so charging the reported time reproduces the
+              paper's envelope deterministically;
+  max_points  total profile runs across all jobs sharing the budget.
+
+Thread-safe: many executor workers / schedulers spend from one budget.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Dict, Optional
+
+
+class BudgetExhausted(RuntimeError):
+    """Raised by `spend()` when the budget cannot cover another point."""
+
+
+class ProfilingBudget:
+    def __init__(self, wall_s: Optional[float] = None,
+                 charge_s: Optional[float] = None,
+                 max_points: Optional[int] = None):
+        self.wall_s = wall_s
+        self.charge_s = charge_s
+        self.max_points = max_points
+        self._lock = threading.Lock()
+        self._t0 = time.monotonic()
+        self._points = 0
+        self._charged = 0.0
+        self._denials = 0
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def points_spent(self) -> int:
+        with self._lock:
+            return self._points
+
+    @property
+    def charged_s(self) -> float:
+        with self._lock:
+            return self._charged
+
+    @property
+    def denials(self) -> int:
+        with self._lock:
+            return self._denials
+
+    def elapsed_s(self) -> float:
+        return time.monotonic() - self._t0
+
+    def remaining_points(self) -> float:
+        if self.max_points is None:
+            return math.inf
+        with self._lock:
+            return max(0, self.max_points - self._points)
+
+    def remaining_s(self) -> float:
+        """Most restrictive of the two time limits (inf if neither set)."""
+        rem = math.inf
+        if self.wall_s is not None:
+            rem = min(rem, self.wall_s - self.elapsed_s())
+        if self.charge_s is not None:
+            with self._lock:
+                rem = min(rem, self.charge_s - self._charged)
+        return rem
+
+    def exhausted(self) -> bool:
+        return self.remaining_points() <= 0 or self.remaining_s() <= 0
+
+    # -- spending -----------------------------------------------------------
+    def try_spend(self, points: int = 1) -> bool:
+        """Reserve `points` profile runs; False (and a recorded denial) if
+        any limit is already crossed. Never blocks."""
+        with self._lock:
+            over_points = (self.max_points is not None
+                           and self._points + points > self.max_points)
+            over_wall = (self.wall_s is not None
+                         and self.elapsed_s() >= self.wall_s)
+            over_charge = (self.charge_s is not None
+                           and self._charged >= self.charge_s)
+            if over_points or over_wall or over_charge:
+                self._denials += 1
+                return False
+            self._points += points
+            return True
+
+    def spend(self, points: int = 1) -> None:
+        if not self.try_spend(points):
+            raise BudgetExhausted(
+                f"profiling budget exhausted after {self._points} points / "
+                f"{self._charged:.1f}s charged / {self.elapsed_s():.1f}s "
+                f"elapsed")
+
+    def refund(self, points: int = 1) -> None:
+        """Hand back a reservation that turned out not to need a profile
+        run (the point was served from a cache/store)."""
+        with self._lock:
+            self._points = max(0, self._points - points)
+
+    def charge(self, seconds: float) -> None:
+        """Account a completed profile run's (reported) wall time."""
+        with self._lock:
+            self._charged += max(0.0, float(seconds))
+
+    # -- reporting ----------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Wire-friendly state for endpoint/benchmark reporting."""
+        with self._lock:
+            return {"wall_s": self.wall_s, "charge_s": self.charge_s,
+                    "max_points": self.max_points,
+                    "points_spent": self._points,
+                    "charged_s": self._charged,
+                    "elapsed_s": self.elapsed_s(),
+                    "denials": self._denials}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        s = self.snapshot()
+        return (f"ProfilingBudget(points {s['points_spent']}"
+                f"/{s['max_points']}, charged {s['charged_s']:.1f}"
+                f"/{s['charge_s']}s, elapsed {s['elapsed_s']:.1f}"
+                f"/{s['wall_s']}s)")

@@ -1,0 +1,230 @@
+"""Adaptive ladder scheduling: stop profiling when the model is good enough.
+
+The paper profiles a fixed five-point ladder for every job. Ruya
+(arXiv:2211.04240) shows memory-aware *iterative* optimization that stops
+spending once the model is good enough; this module applies that idea to
+Crispy's profiling step. `AdaptiveLadderScheduler` walks the ladder
+smallest-first (cheapest run first — profiling wall time grows with sample
+size), refits the model zoo after every point, and stops early once
+
+  1. the selected candidate is `confident` (train-R² gate + the zoo's
+     out-of-sample LOOCV gate), and
+  2. its full-size requirement prediction has *stabilized*: the relative
+     change between the last two refits is under `stability_rtol`.
+
+A perfectly linear job therefore costs 3 points instead of 5 (LOOCV needs
+3 points to produce a finite score; the stability check compares it to the
+2-point fit). When the base ladder ends without a confident+stable fit the
+scheduler *escalates* — but only when the candidates actually disagree
+about the full-size prediction (relative spread over `disagree_rtol`);
+an unconfident fit whose candidates nevertheless agree (the profile is
+simply not memory-elastic at this scale) falls straight through to the
+classifier/baseline chain. Extra points are midpoints of the widest
+ladder gaps, so escalation densifies the measured range instead of
+profiling beyond the anchor's calibrated runtime band, and is capped at
+`max_extra_points`.
+
+Every point is gated by an optional `ProfilingBudget`; exhaustion
+mid-ladder returns whatever was measured (`budget_exhausted=True`) and the
+fit over the partial ladder — the caller's fallback chain handles an
+unconfident result exactly as it handles a noisy one.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.allocator.model_zoo import ZooFit, fit_zoo
+from repro.core.profiler import ProfileResult
+from repro.core.sampling import calibrate_anchor
+from repro.profiling.budget import ProfilingBudget
+
+MIN_POINTS = 3              # LOOCV needs 3; stability needs a predecessor
+STABILITY_RTOL = 0.05       # requirement prediction settled within 5%
+DISAGREE_RTOL = 0.25        # candidate spread that justifies extra points
+MAX_EXTRA_POINTS = 2        # escalation cap beyond the base ladder
+
+# (size) -> (result, fresh): the caller owns caching; `fresh` says whether
+# the point cost a real profile run (budget is only charged for fresh
+# ones). An optional `.peek(size)` attribute on the callable returns a
+# cached result without profiling — consulted before the budget gate, so
+# an exhausted budget never denies points that are already known.
+ProfilePointFn = Callable[[float], Tuple[ProfileResult, bool]]
+
+
+@dataclass
+class AdaptiveProfile:
+    """Outcome of one adaptive schedule over a job signature."""
+    sizes: List[float]
+    mems: List[float]
+    results: List[ProfileResult]
+    fit: object                      # ZooFit (or custom fitter output)
+    points: int                      # fresh profile runs spent
+    cache_hits: int                  # points served from caches/stores
+    early_stop: bool                 # stopped before the base ladder ended
+    escalated: bool                  # profiled beyond the base ladder
+    budget_exhausted: bool           # a point was denied by the budget
+    wall_s: float
+    requirement_trace: List[float] = field(default_factory=list)
+
+    @property
+    def total_points(self) -> int:
+        return len(self.sizes)
+
+
+class AdaptiveLadderScheduler:
+    def __init__(self, fitter: Optional[Callable] = None,
+                 candidates: Optional[Sequence] = None,
+                 min_points: int = MIN_POINTS,
+                 stability_rtol: float = STABILITY_RTOL,
+                 disagree_rtol: float = DISAGREE_RTOL,
+                 max_extra_points: int = MAX_EXTRA_POINTS,
+                 budget: Optional[ProfilingBudget] = None):
+        self.fitter = fitter
+        self.candidates = candidates
+        self.min_points = max(2, min_points)
+        self.stability_rtol = stability_rtol
+        self.disagree_rtol = disagree_rtol
+        self.max_extra_points = max_extra_points
+        self.budget = budget
+
+    # -- fitting ------------------------------------------------------------
+    def _fit(self, sizes: Sequence[float], mems: Sequence[float]):
+        if self.fitter is not None:
+            return self.fitter(sizes, mems)
+        return fit_zoo(sizes, mems, self.candidates)
+
+    def _disagreement(self, sizes, mems, fit, full_size: float) -> float:
+        if not isinstance(fit, ZooFit):
+            # custom single-model fitter: escalate only on non-confidence
+            return math.inf if not getattr(fit, "confident", False) else 0.0
+        # every candidate was fitted during the last refit — read their
+        # full-size predictions off the ZooFit instead of refitting
+        models = fit.fits or {}
+        preds = []
+        for m in models.values():
+            try:
+                p = float(m.predict(full_size))
+            except (OverflowError, ValueError):
+                p = math.inf
+            if math.isfinite(p):
+                preds.append(p)
+        if len(preds) < 2:
+            return 0.0
+        lo, hi = min(preds), max(preds)
+        scale = max(abs(hi), abs(lo), 1e-12)
+        return (hi - lo) / scale
+
+    # -- scheduling ---------------------------------------------------------
+    def run(self, ladder: Sequence[float], full_size: float,
+            profile_point: ProfilePointFn) -> AdaptiveProfile:
+        t0 = time.monotonic()
+        base = sorted(float(s) for s in ladder)
+        sizes: List[float] = []
+        mems: List[float] = []
+        results: List[ProfileResult] = []
+        trace: List[float] = []
+        fresh = hits = 0
+        fit = None
+        prev_pred: Optional[float] = None
+        early = escalated = exhausted = False
+
+        peek = getattr(profile_point, "peek", None)
+
+        def take(size: float) -> bool:
+            """Profile one point (budget-gated; cached points are free).
+            False == budget denial."""
+            nonlocal fresh, hits, exhausted
+            r = peek(size) if peek is not None else None
+            if r is not None:
+                hits += 1
+            else:
+                if self.budget is not None and not self.budget.try_spend():
+                    exhausted = True
+                    return False
+                r, was_fresh = profile_point(size)
+                if was_fresh:
+                    fresh += 1
+                    if self.budget is not None:
+                        self.budget.charge(r.wall_s)
+                else:
+                    hits += 1
+                    if self.budget is not None:
+                        self.budget.refund()    # raced: no run happened
+            sizes.append(size)
+            mems.append(r.job_mem_bytes)
+            results.append(r)
+            return True
+
+        def refit() -> None:
+            nonlocal fit, prev_pred, early
+            fit = self._fit(sizes, mems)
+            pred = float(fit.predict(full_size))
+            trace.append(pred)
+            stable = (prev_pred is not None
+                      and math.isfinite(pred) and pred != 0.0
+                      and abs(pred - prev_pred)
+                      <= self.stability_rtol * abs(pred))
+            if (len(sizes) >= self.min_points
+                    and getattr(fit, "confident", False) and stable):
+                early = True
+            prev_pred = pred
+
+        # phase 1: walk the base ladder smallest-first, refit per point
+        for i, s in enumerate(base):
+            if not take(s):
+                break
+            if len(sizes) >= 2:
+                refit()
+            if early and len(sizes) < len(base):
+                break
+
+        # phase 2: escalate only when the candidates disagree
+        if (fit is not None and not early and not exhausted
+                and self.max_extra_points > 0
+                and not getattr(fit, "confident", False)
+                and self._disagreement(sizes, mems, fit, full_size)
+                > self.disagree_rtol):
+            for s in _gap_midpoints(sizes, self.max_extra_points):
+                escalated = True
+                if not take(s):
+                    break
+                refit()
+                if getattr(fit, "confident", False):
+                    break
+
+        if fit is None:                  # budget denied even a second point
+            fit = self._fit(sizes, mems)
+        early = early and len(sizes) < len(base)
+        return AdaptiveProfile(sizes, mems, results, fit, fresh, hits,
+                               early, escalated, exhausted,
+                               time.monotonic() - t0, trace)
+
+
+def _gap_midpoints(sizes: Sequence[float], n: int) -> List[float]:
+    """Midpoints of the `n` widest gaps between measured sizes — escalation
+    densifies the calibrated range rather than extrapolating the runtime
+    band the anchor was tuned for."""
+    xs = sorted(set(sizes))
+    if len(xs) < 2 or n <= 0:
+        return []
+    gaps = sorted(((xs[i + 1] - xs[i], 0.5 * (xs[i] + xs[i + 1]))
+                   for i in range(len(xs) - 1)), reverse=True)
+    return [mid for _gap, mid in gaps[:n]]
+
+
+def calibrated_anchor(store, signature: str,
+                      run_at_size: Callable[[float], float],
+                      initial: float, **calibrate_kwargs) -> float:
+    """`calibrate_anchor` with persistence: a signature calibrated by any
+    process (or a past run) skips the measurement loop entirely."""
+    if store is not None:
+        known = store.get_anchor(signature)
+        if known is not None:
+            return known
+    anchor = calibrate_anchor(run_at_size, initial, **calibrate_kwargs)
+    if store is not None:
+        store.put_anchor(signature, anchor)
+    return anchor

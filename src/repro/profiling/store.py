@@ -1,0 +1,264 @@
+"""Persistent, file-locked profile & anchor store shared across processes.
+
+The PR-1 caches (ProfileResult LRU, ModelRegistry JSON) are per-process:
+two AllocationService processes pointed at the same jobs re-profile every
+ladder and clobber each other's registry file on flush (last-writer-wins
+drops the other's models). This module makes the profiling state a real
+multi-process resource:
+
+  FileLock             fcntl advisory lock (LOCK_EX/LOCK_SH) with a bounded
+                       busy-wait, usable as a context manager. Degrades to
+                       a process-local lock where fcntl is unavailable.
+
+  ProfileStore         append-only JSONL of profile points and calibrated
+                       anchors. Appends happen under an exclusive lock as a
+                       single O_APPEND write so concurrent writers never
+                       interleave partial lines; readers pick up other
+                       processes' rows incrementally via `refresh()`.
+                       Repeat signatures skip `calibrate_anchor` entirely:
+                       the calibrated anchor is persisted per signature.
+
+  LockedModelRegistry  a ModelRegistry whose saves are read-merge-write
+                       under the file lock: concurrent services flush
+                       without losing each other's records (newest
+                       `created_at` wins per signature), and each flush
+                       absorbs the other process's models into memory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+try:
+    import fcntl
+    HAS_FCNTL = True
+except ImportError:                      # non-POSIX: degrade gracefully
+    fcntl = None
+    HAS_FCNTL = False
+
+from repro.allocator.registry import ModelRecord, ModelRegistry
+from repro.core.profiler import ProfileResult
+
+STORE_VERSION = 1
+
+
+class FileLock:
+    """fcntl advisory lock on `path` (created on demand). Reentrant within
+    a process via a thread lock is NOT provided — hold it briefly."""
+
+    def __init__(self, path: str, shared: bool = False,
+                 timeout_s: float = 10.0, poll_s: float = 0.005):
+        self.path = path
+        self.shared = shared
+        self.timeout_s = timeout_s
+        self.poll_s = poll_s
+        self._fd: Optional[int] = None
+
+    def acquire(self) -> "FileLock":
+        self._fd = os.open(self.path, os.O_RDWR | os.O_CREAT, 0o644)
+        if not HAS_FCNTL:
+            return self
+        flag = fcntl.LOCK_SH if self.shared else fcntl.LOCK_EX
+        deadline = time.monotonic() + self.timeout_s
+        while True:
+            try:
+                fcntl.flock(self._fd, flag | fcntl.LOCK_NB)
+                return self
+            except (BlockingIOError, OSError):
+                if time.monotonic() >= deadline:
+                    os.close(self._fd)
+                    self._fd = None
+                    raise TimeoutError(
+                        f"could not lock {self.path} within "
+                        f"{self.timeout_s}s")
+                time.sleep(self.poll_s)
+
+    def release(self) -> None:
+        if self._fd is None:
+            return
+        try:
+            if HAS_FCNTL:
+                fcntl.flock(self._fd, fcntl.LOCK_UN)
+        finally:
+            os.close(self._fd)
+            self._fd = None
+
+    def __enter__(self) -> "FileLock":
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+def _lock_path(path: str) -> str:
+    return path + ".lock"
+
+
+class ProfileStore:
+    """JSONL store of (signature, size) -> ProfileResult rows plus
+    per-signature calibrated anchors.
+
+    One row per line:
+      {"kind": "profile", "sig": ..., "size": ..., "result": {...}}
+      {"kind": "anchor",  "sig": ..., "anchor": ...}
+
+    Later rows win (an anchor recalibration supersedes the old one), so the
+    file needs no compaction for correctness. In-memory index is
+    thread-safe; cross-process freshness is pull-based via `refresh()` —
+    the AllocationService refreshes once per batch, so a point profiled by
+    a sibling process is reused a batch later rather than re-measured.
+    """
+
+    def __init__(self, path: str, lock_timeout_s: float = 10.0):
+        self.path = path
+        self.lock_timeout_s = lock_timeout_s
+        self._lock = threading.Lock()
+        self._points: Dict[Tuple[str, float], ProfileResult] = {}
+        self._anchors: Dict[str, float] = {}
+        self._offset = 0                # bytes of the file already indexed
+        self.refresh()
+
+    # -- introspection ------------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._points)
+
+    def anchors(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._anchors)
+
+    # -- reads --------------------------------------------------------------
+    def get(self, signature: str, size: float) -> Optional[ProfileResult]:
+        with self._lock:
+            return self._points.get((signature, float(size)))
+
+    def get_anchor(self, signature: str) -> Optional[float]:
+        with self._lock:
+            return self._anchors.get(signature)
+
+    def refresh(self) -> int:
+        """Index rows appended (by any process) since the last read.
+        Returns the number of new rows."""
+        if not os.path.exists(self.path):
+            return 0
+        with FileLock(_lock_path(self.path), shared=True,
+                      timeout_s=self.lock_timeout_s):
+            with open(self.path, "rb") as f:
+                f.seek(self._offset)
+                data = f.read()
+        if not data:
+            return 0
+        new = 0
+        with self._lock:
+            # only consume complete lines; a torn tail (should not happen
+            # under the lock, but be paranoid) is re-read next refresh
+            end = data.rfind(b"\n") + 1
+            for line in data[:end].splitlines():
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except ValueError:
+                    continue            # skip a corrupt row, keep the rest
+                self._apply_locked(row)
+                new += 1
+            self._offset += end
+        return new
+
+    def _apply_locked(self, row: Dict) -> None:
+        kind = row.get("kind")
+        if kind == "profile":
+            key = (row["sig"], float(row["size"]))
+            self._points[key] = ProfileResult.from_dict(row["result"])
+        elif kind == "anchor":
+            self._anchors[row["sig"]] = float(row["anchor"])
+
+    # -- writes -------------------------------------------------------------
+    def put(self, signature: str, size: float,
+            result: ProfileResult) -> None:
+        self._append({"kind": "profile", "sig": signature,
+                      "size": float(size), "result": result.to_dict()})
+        with self._lock:
+            self._points[(signature, float(size))] = result
+
+    def put_anchor(self, signature: str, anchor: float) -> None:
+        self._append({"kind": "anchor", "sig": signature,
+                      "anchor": float(anchor)})
+        with self._lock:
+            self._anchors[signature] = float(anchor)
+
+    def _append(self, row: Dict) -> None:
+        line = (json.dumps(row) + "\n").encode()
+        with FileLock(_lock_path(self.path),
+                      timeout_s=self.lock_timeout_s):
+            fd = os.open(self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT,
+                         0o644)
+            try:
+                os.write(fd, line)
+            finally:
+                os.close(fd)
+
+
+class LockedModelRegistry(ModelRegistry):
+    """ModelRegistry safe to share across processes.
+
+    Saves are read-merge-write under an exclusive file lock: the on-disk
+    records are reloaded, merged with ours (newest `created_at` wins per
+    signature — concurrent flushes lose nothing), written atomically, and
+    the merged view is absorbed into memory so each flush also *imports*
+    sibling processes' confident models. `refresh()` imports without
+    writing."""
+
+    def __init__(self, path: str, autosave: bool = True,
+                 lock_timeout_s: float = 10.0):
+        self.lock_timeout_s = lock_timeout_s
+        super().__init__(path, autosave=autosave)
+
+    def _merge_locked(self, disk_records: Dict[str, ModelRecord]) -> None:
+        for sig, rec in disk_records.items():
+            mine = self._records.get(sig)
+            if mine is None or rec.created_at > mine.created_at:
+                self._records[sig] = rec
+
+    def _read_disk(self) -> Dict[str, ModelRecord]:
+        if self.path is None or not os.path.exists(self.path):
+            return {}
+        try:
+            with open(self.path) as f:
+                payload = json.load(f)
+        except ValueError:              # half-written legacy file
+            return {}
+        return {sig: ModelRecord.from_dict(sig, d)
+                for sig, d in payload.get("records", {}).items()}
+
+    def _save_locked(self, path: str) -> None:
+        with FileLock(_lock_path(path), timeout_s=self.lock_timeout_s):
+            self._merge_locked(self._read_disk())
+            super()._save_locked(path)
+
+    def load(self, path: Optional[str] = None) -> int:
+        path = path or self.path
+        if path is None:
+            raise ValueError("ModelRegistry has no path to load from")
+        with FileLock(_lock_path(path), shared=True,
+                      timeout_s=self.lock_timeout_s):
+            return super().load(path)
+
+    def refresh(self) -> int:
+        """Merge sibling processes' on-disk records into memory (no write).
+        Returns the number of records imported or updated."""
+        if self.path is None or not os.path.exists(self.path):
+            return 0
+        with FileLock(_lock_path(self.path), shared=True,
+                      timeout_s=self.lock_timeout_s):
+            disk = self._read_disk()
+        with self._lock:
+            before = {sig: rec.created_at
+                      for sig, rec in self._records.items()}
+            self._merge_locked(disk)
+            return sum(1 for sig, rec in self._records.items()
+                       if before.get(sig) != rec.created_at)

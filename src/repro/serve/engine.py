@@ -156,7 +156,9 @@ _BATCH_RANK = {"k": 4, "v": 4, "ckv": 3, "kr": 3, "pos": 1,
 class AllocationEndpoint:
     """Request endpoint over an AllocationService: wire-friendly dicts in,
     dicts out, with the service's batching/caching behind it. `submit`
-    returns the service future for async callers; `handle` blocks."""
+    returns the service future for async callers; `handle` blocks;
+    `stats` reports service counters plus adaptive-profiling/budget state
+    for monitoring dashboards."""
 
     def __init__(self, service: AllocationService):
         self.service = service
@@ -165,13 +167,35 @@ class AllocationEndpoint:
                anchor: Optional[float] = None,
                sizes: Optional[List[float]] = None,
                signature: Optional[str] = None,
-               leeway: Optional[float] = None):
+               leeway: Optional[float] = None,
+               adaptive: Optional[bool] = None):
         return self.service.submit(AllocationRequest(
             job, profile_at, full_size, anchor=anchor, sizes=sizes,
-            signature=signature, leeway=leeway))
+            signature=signature, leeway=leeway, adaptive=adaptive))
 
     def handle(self, timeout: Optional[float] = None, **payload) -> Dict:
         return self.to_wire(self.submit(**payload).result(timeout))
+
+    def stats(self) -> Dict:
+        """Service counters + profiling budget snapshot, wire-friendly."""
+        s = self.service.stats
+        out = {"requests": s.requests, "batches": s.batches,
+               "profile_calls": s.profile_calls,
+               "cache_hits": s.cache_hits, "store_hits": s.store_hits,
+               "registry_hits": s.registry_hits,
+               "plan_cache_hits": s.plan_cache_hits,
+               "zoo_fits": s.zoo_fits, "zoo_confident": s.zoo_confident,
+               "classifier_fallbacks": s.classifier_fallbacks,
+               "baseline_fallbacks": s.baseline_fallbacks,
+               "profile_hit_rate": s.profile_hit_rate,
+               "adaptive_plans": s.adaptive_plans,
+               "early_stops": s.early_stops,
+               "escalations": s.escalations,
+               "points_saved": s.points_saved,
+               "budget_denied": s.budget_denied}
+        if self.service.budget is not None:
+            out["budget"] = self.service.budget.snapshot()
+        return out
 
     @staticmethod
     def to_wire(resp: AllocationResponse) -> Dict:
@@ -184,7 +208,9 @@ class AllocationEndpoint:
                 "usd_per_hour": sel.config.usd_per_hour,
                 "method": sel.method, "fell_back": sel.fell_back,
                 "profiled": resp.profiled, "cache_hits": resp.cache_hits,
-                "wall_s": resp.wall_s}
+                "wall_s": resp.wall_s, "early_stop": resp.early_stop,
+                "escalated": resp.escalated,
+                "budget_exhausted": resp.budget_exhausted}
 
 
 def _reset_slot(caches, slot: int):

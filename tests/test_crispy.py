@@ -106,6 +106,33 @@ if HAVE_HYPOTHESIS:
         test_crispy_selection_respects_feasibility(req)
 
 
+def test_bfa_scores_precomputed_and_invalidated_on_add():
+    """The BFA scan is one memoized table per (history state, exclude_job);
+    a new execution must invalidate it, not serve stale ranks."""
+    from repro.core.history import Execution, ExecutionHistory
+    catalog = aws_like_catalog()[:4]
+    hist = ExecutionHistory([
+        Execution("j1", catalog[0].name, 100.0, 1.0),
+        Execution("j1", catalog[1].name, 100.0, 2.0),
+        Execution("j2", catalog[0].name, 100.0, 3.0),
+        Execution("j2", catalog[1].name, 100.0, 3.0),
+    ])
+    s1 = hist.bfa_scores()
+    assert hist.bfa_scores() is s1              # memoized (same table)
+    assert select_bfa(catalog[:2], hist).name == catalog[0].name
+    assert hist.mean_normalized_cost(catalog[1].name) == \
+        pytest.approx((2.0 + 1.0) / 2)
+    # j3 strongly prefers config 1 -> the ranking must flip after add()
+    hist.add(Execution("j3", catalog[0].name, 100.0, 50.0))
+    hist.add(Execution("j3", catalog[1].name, 100.0, 1.0))
+    s2 = hist.bfa_scores()
+    assert s2 is not s1                         # invalidated
+    assert select_bfa(catalog[:2], hist).name == catalog[1].name
+    # exclude_job views are cached independently and also refreshed
+    excl = hist.bfa_scores(exclude_job="j3")
+    assert excl[catalog[0].name] < excl[catalog[1].name]
+
+
 def test_zero_requirement_degenerates_to_bfa():
     catalog = aws_like_catalog()
     hist = build_history()
