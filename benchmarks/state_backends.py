@@ -1,0 +1,182 @@
+"""Shared-state backend comparison: FileBackend vs crispy-daemon under
+multi-process load.
+
+Spawns N real worker processes per backend. Each worker hammers the same
+three shared structures the allocation stack uses:
+
+  * lease reservations on ONE shared `ProfilingBudget` envelope
+    (the cross-process arbitration path — every op is a backend
+    `reserve`);
+  * appends to a shared profile log + incremental `read`s;
+  * CAS updates on a shared document (the registry-flush shape).
+
+Correctness is asserted, not assumed: across all workers the envelope
+must grant exactly `max_points` reservations (never over-granted), and
+every appended log row must be visible afterwards.
+
+The daemon section starts its own `python -m repro.state.daemon` child
+(or reuses a daemon at $CRISPY_DAEMON_SOCKET when one is already
+running, e.g. the CI smoke step) and shuts it down cleanly. Where
+unix-domain sockets are unavailable the section is skipped and only the
+file numbers are reported.
+
+Final CSV: state_backends,<us_per_op_file>,<daemon_vs_file_speedup>
+(speedup 0.0 when the daemon section was skipped).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:                  # standalone `python benchmarks/...`
+    sys.path.insert(0, _SRC)
+
+from repro.state import HAS_UNIX_SOCKETS  # noqa: E402
+
+WORKERS = 2
+OPS_PER_WORKER = 60           # reserve+charge (+append/read/cas every 4th)
+MAX_POINTS = 40               # < total attempts: contention + denials
+
+_WORKER_CODE = """
+import json, os, sys, time
+sys.path.insert(0, {src!r})
+from repro.profiling import ProfilingBudget
+from repro.state import DaemonBackend, FileBackend
+
+mode, target, ops, tag, run = (sys.argv[1], sys.argv[2], int(sys.argv[3]),
+                               sys.argv[4], sys.argv[5])
+backend = FileBackend(target) if mode == "file" else DaemonBackend(target)
+budget = ProfilingBudget(max_points={max_points}, backend=backend,
+                         namespace="bench-budget-" + run)
+granted = appended = 0
+cursor = 0
+t0 = time.monotonic()
+for i in range(ops):
+    if budget.try_spend():
+        granted += 1
+        budget.charge(0.5)
+    if i % 4 == 0:
+        backend.append("bench-log-" + run, {{"tag": tag, "i": i}})
+        appended += 1
+        _rows, cursor = backend.read("bench-log-" + run, cursor)
+        value, version = backend.load("bench-doc-" + run, "merged")
+        doc = dict(value or {{}})
+        doc[tag] = doc.get(tag, 0) + 1
+        backend.cas("bench-doc-" + run, "merged", version, doc)
+wall = time.monotonic() - t0
+print(json.dumps({{"granted": granted, "appended": appended,
+                   "wall": wall}}))
+"""
+
+# unique per benchmark invocation so a reused long-lived daemon (or a
+# persistent --root) never leaks a previous run's spent envelope into
+# this run's correctness assertions
+_RUN_ID = f"{os.getpid()}-{int(time.time() * 1000)}"
+
+
+def _run_workers(mode: str, target: str):
+    code = _WORKER_CODE.format(src=_SRC, max_points=MAX_POINTS)
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", code, mode, target, str(OPS_PER_WORKER),
+         f"w{i}", _RUN_ID],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for i in range(WORKERS)]
+    outs = [p.communicate(timeout=180) for p in procs]
+    rows = []
+    for p, (out, err) in zip(procs, outs):
+        if p.returncode != 0:
+            raise RuntimeError(f"{mode} worker failed: {err[-2000:]}")
+        rows.append(json.loads(out.strip().splitlines()[-1]))
+    return rows
+
+
+def _verify(mode: str, backend, rows) -> None:
+    granted = sum(r["granted"] for r in rows)
+    appended = sum(r["appended"] for r in rows)
+    assert granted == MAX_POINTS, \
+        f"{mode}: envelope over/under-granted: {granted} != {MAX_POINTS}"
+    log_rows, _ = backend.read(f"bench-log-{_RUN_ID}", 0)
+    assert len(log_rows) == appended, \
+        f"{mode}: lost log rows: {len(log_rows)} != {appended}"
+
+
+def _report(mode: str, rows) -> float:
+    ops = WORKERS * OPS_PER_WORKER
+    wall = max(r["wall"] for r in rows)
+    us_per_op = wall / OPS_PER_WORKER * 1e6
+    print(f"{mode}: {WORKERS} procs x {OPS_PER_WORKER} iterations in "
+          f"{wall:.2f}s ({ops / wall:.0f} iter/s aggregate, "
+          f"{us_per_op:.0f} us/iter/proc)")
+    return us_per_op
+
+
+def bench_file() -> float:
+    from repro.state import FileBackend
+    root = tempfile.mkdtemp(prefix="crispy-bench-file-")
+    rows = _run_workers("file", root)
+    _verify("file", FileBackend(root), rows)
+    return _report("file", rows)
+
+
+def bench_daemon() -> float:
+    """0.0 when skipped (no unix sockets / daemon failed to start)."""
+    if not HAS_UNIX_SOCKETS:
+        print("daemon: skipped (no unix-domain sockets on this platform)")
+        return 0.0
+    from repro.state import DaemonBackend
+    env_sock = os.environ.get("CRISPY_DAEMON_SOCKET")
+    if env_sock and DaemonBackend(env_sock, timeout_s=2.0).ping():
+        sock, child = env_sock, None
+        print(f"daemon: reusing running daemon at {sock}")
+    else:
+        tmp = tempfile.mkdtemp(prefix="crispy-bench-daemon-")
+        sock = os.path.join(tmp, "d.sock")
+        child = subprocess.Popen(
+            [sys.executable, "-m", "repro.state.daemon", "--socket", sock],
+            env={**os.environ,
+                 "PYTHONPATH": _SRC + os.pathsep
+                 + os.environ.get("PYTHONPATH", "")},
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+        client = DaemonBackend(sock, timeout_s=2.0)
+        for _ in range(100):
+            if os.path.exists(sock) and client.ping():
+                break
+            if child.poll() is not None:
+                print("daemon: skipped (failed to start: "
+                      f"{child.communicate()[0][-500:]})")
+                return 0.0
+            time.sleep(0.05)
+        else:
+            child.kill()
+            print("daemon: skipped (did not become ready)")
+            return 0.0
+    try:
+        rows = _run_workers("daemon", sock)
+        _verify("daemon", DaemonBackend(sock), rows)
+        return _report("daemon", rows)
+    finally:
+        if child is not None:
+            DaemonBackend(sock).shutdown_daemon()
+            child.wait(timeout=10)
+            assert child.returncode == 0, \
+                f"daemon did not shut down cleanly: rc={child.returncode}"
+            print("daemon: clean shutdown")
+
+
+def main() -> None:
+    us_file = bench_file()
+    us_daemon = bench_daemon()
+    speedup = us_file / us_daemon if us_daemon else 0.0
+    if us_daemon:
+        print(f"daemon vs file: {speedup:.2f}x per contended iteration")
+    print(f"state_backends,{us_file:.1f},{speedup:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,30 @@ same serving surface. Uses the reduced rwkv6 (attention-free O(1)-state)
 and deepseek-7b (KV cache) configs.
 
   PYTHONPATH=src python examples/serve_demo.py
+
+`demo_shared_state` shows the cross-process story (repro.state): a
+crispy-daemon owning the shared profile store, model registry and ONE
+profiling envelope that every allocation service arbitrates through
+atomic reservations. In production the daemon is its own process:
+
+  # start (persist state in ./crispy-state; restarts resume from it)
+  PYTHONPATH=src python -m repro.state.daemon \\
+      --socket /tmp/crispy.sock --root ./crispy-state
+  # connect any number of services to it
+  svc = AllocationService(catalog, history,
+                          backend=DaemonBackend("/tmp/crispy.sock"),
+                          budget=ProfilingBudget(charge_s=600.0,
+                              backend=DaemonBackend("/tmp/crispy.sock")))
+  # health-check / stop
+  PYTHONPATH=src python -m repro.state.daemon --socket /tmp/crispy.sock \\
+      --ping      # exits 0 iff alive
+      --shutdown  # daemon drains, unlinks the socket, exits 0
+
+The demo runs the daemon in-process (`CrispyDaemon(...).start()`) for a
+self-contained script; everything else is identical.
 """
+import os
+import tempfile
 import time
 from concurrent.futures import ThreadPoolExecutor
 
@@ -18,7 +41,9 @@ from repro.core.catalog import aws_like_catalog
 from repro.core.simulator import (GiB, build_history, make_profile_fn,
                                   scout_like_jobs)
 from repro.models.model import Model
+from repro.profiling import ProfilingBudget
 from repro.serve.engine import AllocationEndpoint, Request, ServeEngine
+from repro.state import HAS_UNIX_SOCKETS, CrispyDaemon, DaemonBackend
 
 RUN = RunConfig(attn_impl="full", remat="nothing", compute_dtype="float32")
 
@@ -58,6 +83,46 @@ def demo_allocation(n_requests: int = 16, workers: int = 8):
               f"(${a['usd_per_hour']:.2f}/h, source={a['source']})")
 
 
+def demo_shared_state(n_jobs: int = 8):
+    """Two allocation services sharing one crispy-daemon: profile points,
+    confident models and a single budget envelope are common property —
+    the second service answers from the first one's work without a single
+    fresh profile run."""
+    if not HAS_UNIX_SOCKETS:
+        print("shared state: skipped (no unix-domain sockets)")
+        return
+    jobs = scout_like_jobs()[:n_jobs]
+    catalog = aws_like_catalog()
+    history = build_history(jobs, catalog)
+    tmp = tempfile.mkdtemp(prefix="crispy-demo-")
+    sock = os.path.join(tmp, "crispy.sock")
+    with CrispyDaemon(sock, root=os.path.join(tmp, "state")):
+        def serve_all(tag):
+            backend = DaemonBackend(sock)
+            budget = ProfilingBudget(charge_s=600.0 * len(jobs),
+                                     backend=backend)
+            with AllocationService(catalog, history, backend=backend,
+                                   adaptive=True, budget=budget) as svc:
+                for j in jobs:
+                    full = j.dataset_gib * GiB
+                    AllocationEndpoint(svc).handle(
+                        job=j.name, profile_at=make_profile_fn(j),
+                        full_size=full, anchor=full * 0.01)
+                s, snap = svc.stats, budget.snapshot()
+                print(f"  service {tag} [{svc.backend_kind}]: "
+                      f"{s.profile_calls} fresh profiles, "
+                      f"{s.registry_hits} registry hits, "
+                      f"{s.store_hits} store hits; shared envelope "
+                      f"{snap['charged_s']:.0f}/{snap['charge_s']:.0f}s "
+                      f"charged")
+                return s.profile_calls
+        first = serve_all("A")
+        second = serve_all("B")          # same daemon: all reuse
+        print(f"shared state: service B re-profiled {second} points "
+              f"after A spent {first} (daemon shares store+registry+"
+              f"budget)")
+
+
 def demo(arch: str, n_requests: int = 12, slots: int = 4):
     cfg = get_arch(arch).reduced()
     model = Model(cfg, RUN)
@@ -81,6 +146,7 @@ def demo(arch: str, n_requests: int = 12, slots: int = 4):
 
 def main():
     demo_allocation()
+    demo_shared_state()
     demo("deepseek-7b")
     demo("rwkv6-7b")
 

@@ -46,7 +46,8 @@ requests/sec and cache hit-rate; `benchmarks/profiling_adaptive.py`
 compares fixed-vs-adaptive profiling cost.
 """
 from repro.allocator.classifier import (Classification, NearestJobClassifier,
-                                        feature_distance, profile_features)
+                                        feature_distance, profile_features,
+                                        runtime_features)
 from repro.allocator.model_zoo import (DEFAULT_CANDIDATES, LOOCV_GATE,
                                        LogLinearModel, MODEL_KINDS,
                                        PiecewiseLinearModel, PowerLawModel,
@@ -62,5 +63,5 @@ __all__ = [
     "MODEL_KINDS", "ModelRecord", "ModelRegistry", "NearestJobClassifier",
     "PiecewiseLinearModel", "PowerLawModel", "ServiceStats", "ZooFit",
     "feature_distance", "fit_zoo", "model_from_dict", "model_to_dict",
-    "profile_features", "zoo_fitter",
+    "profile_features", "runtime_features", "zoo_fitter",
 ]

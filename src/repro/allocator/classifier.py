@@ -13,6 +13,15 @@ terms — and answers nearest-neighbor queries under a Euclidean distance
 gate. Every job the AllocationService profiles is `observe`d here (even
 gate-failing ones), so the feature store grows with traffic and nothing is
 thrown away.
+
+Memory shape alone cannot separate jobs whose memory curves agree but
+whose *runtime* curves do not (a linear-memory scan vs a linear-memory
+quadratic join): profiling already measures per-point wall time, so the
+ladder's runtime-vs-size curve is embedded the same scale-invariant way
+(`runtime_features`) and concatenated into the distance whenever both
+sides observed it. Jobs observed without runtimes (e.g. warm-started from
+persisted registry ladders, which keep only sizes/mems) fall back to the
+memory-shape distance, so the feature store never fragments.
 """
 from __future__ import annotations
 
@@ -24,30 +33,60 @@ import numpy as np
 from repro.core.memory_model import fit_memory_model
 
 FEATURE_POINTS = 8          # resampled curve resolution
+RUNTIME_POINTS = 8          # resampled runtime-curve resolution
 DEFAULT_MAX_DISTANCE = 0.25
+
+
+def _resample_unit_curve(sizes: Sequence[float], values: Sequence[float],
+                         points: int) -> Optional[np.ndarray]:
+    """Values resampled onto a unit grid over the size span, normalized by
+    their peak magnitude — the shared scale-invariant embedding."""
+    x = np.asarray(sizes, dtype=np.float64)
+    y = np.asarray(values, dtype=np.float64)
+    keep = np.isfinite(x) & np.isfinite(y)
+    x, y = x[keep], y[keep]
+    if x.size < 2:
+        return None
+    order = np.argsort(x)
+    x, y = x[order], y[order]
+    span = x[-1] - x[0]
+    t = (x - x[0]) / span if span > 0 else np.zeros_like(x)
+    scale = float(np.abs(y).max()) or 1.0
+    grid = np.linspace(0.0, 1.0, points)
+    return np.interp(grid, t, y / scale)
 
 
 def profile_features(sizes: Sequence[float],
                      mems: Sequence[float]) -> np.ndarray:
-    """Scale-invariant embedding of a profiling ladder."""
-    x = np.asarray(sizes, dtype=np.float64)
-    y = np.asarray(mems, dtype=np.float64)
-    order = np.argsort(x)
-    x, y = x[order], y[order]
-    if x.size == 0:
+    """Scale-invariant embedding of a profiling ladder's memory curve."""
+    curve = _resample_unit_curve(sizes, mems, FEATURE_POINTS)
+    if curve is None:
         return np.zeros(FEATURE_POINTS + 3)
-    span = x[-1] - x[0]
-    t = (x - x[0]) / span if span > 0 else np.zeros_like(x)
-    scale = float(np.abs(y).max()) or 1.0
-    yn = y / scale
-    grid = np.linspace(0.0, 1.0, FEATURE_POINTS)
-    curve = np.interp(grid, t, yn)
     growth = float(curve[-1] - curve[0])
     rough = float(np.sqrt(np.mean(np.diff(curve, 2) ** 2))) \
         if curve.size >= 3 else 0.0
+    x = np.asarray(sizes, dtype=np.float64)
+    y = np.asarray(mems, dtype=np.float64)
     lin = fit_memory_model(x, y)
     r2c = float(np.clip(lin.r2, 0.0, 1.0))
     return np.concatenate([curve, [growth, rough, r2c]])
+
+
+def runtime_features(sizes: Sequence[float],
+                     runtimes: Optional[Sequence[float]]
+                     ) -> Optional[np.ndarray]:
+    """Scale-invariant embedding of the ladder's runtime-vs-size curve, or
+    None when fewer than two finite runtimes were measured. The convexity
+    term separates linear from superlinear runtime growth even when the
+    resampled curves are close."""
+    if runtimes is None or len(runtimes) != len(sizes):
+        return None
+    curve = _resample_unit_curve(sizes, runtimes, RUNTIME_POINTS)
+    if curve is None:
+        return None
+    growth = float(curve[-1] - curve[0])
+    convexity = float(np.mean(np.diff(curve, 2))) if curve.size >= 3 else 0.0
+    return np.concatenate([curve, [growth, convexity]])
 
 
 def feature_distance(a: np.ndarray, b: np.ndarray) -> float:
@@ -64,6 +103,7 @@ class NearestJobClassifier:
     def __init__(self, max_distance: float = DEFAULT_MAX_DISTANCE):
         self.max_distance = max_distance
         self._features: Dict[str, np.ndarray] = {}
+        self._runtime: Dict[str, Optional[np.ndarray]] = {}
 
     def __len__(self) -> int:
         return len(self._features)
@@ -75,20 +115,36 @@ class NearestJobClassifier:
         return signature in self._features
 
     def observe(self, signature: str, sizes: Sequence[float],
-                mems: Sequence[float]) -> None:
+                mems: Sequence[float],
+                runtimes: Optional[Sequence[float]] = None) -> None:
         if len(sizes) >= 2:
             self._features[signature] = profile_features(sizes, mems)
+            self._runtime[signature] = runtime_features(sizes, runtimes)
+
+    def _distance(self, query_mem: np.ndarray,
+                  query_rt: Optional[np.ndarray], sig: str) -> float:
+        """Memory-shape distance, extended over the runtime block when
+        both sides observed one (RMS over the concatenated vector, so the
+        gate's scale is unchanged)."""
+        cand_rt = self._runtime.get(sig)
+        if query_rt is not None and cand_rt is not None:
+            return feature_distance(
+                np.concatenate([query_mem, query_rt]),
+                np.concatenate([self._features[sig], cand_rt]))
+        return feature_distance(query_mem, self._features[sig])
 
     def classify(self, sizes: Sequence[float], mems: Sequence[float],
+                 runtimes: Optional[Sequence[float]] = None,
                  exclude: Iterable[str] = ()) -> Optional[Classification]:
         """Nearest observed job under the distance gate, or None."""
-        query = profile_features(sizes, mems)
+        query_mem = profile_features(sizes, mems)
+        query_rt = runtime_features(sizes, runtimes)
         skip = set(exclude)
         best: Optional[Classification] = None
-        for sig, feat in self._features.items():
+        for sig in self._features:
             if sig in skip:
                 continue
-            d = feature_distance(query, feat)
+            d = self._distance(query_mem, query_rt, sig)
             if best is None or d < best.distance:
                 best = Classification(sig, d)
         if best is None or best.distance > self.max_distance:

@@ -41,9 +41,19 @@ Profiling orchestration (repro.profiling) is delegated, not inlined:
                      point-concurrently and fans independent signature
                      groups of one batch out over its pool.
 
-Pair `store=` with a `repro.profiling.store.LockedModelRegistry` as the
-`registry=` so concurrent service processes also share one model registry
-without lost writes.
+Shared state (repro.state) is unified behind one knob:
+
+  backend=           a `repro.state.StateBackend` (InMemoryBackend,
+                     FileBackend directory, or DaemonBackend socket).
+                     When given, the service builds its ProfileStore and
+                     model registry over it unless explicit `store=` /
+                     `registry=` override them — so N service processes
+                     pointed at one FileBackend root or one crispy-daemon
+                     share profile points, anchors and confident models.
+                     Pair it with `ProfilingBudget(..., backend=backend)`
+                     and those N processes also arbitrate ONE profiling
+                     envelope through atomic backend reservations instead
+                     of each spending a full copy.
 """
 from __future__ import annotations
 
@@ -171,9 +181,20 @@ class AllocationService:
                  budget=None,               # repro.profiling ProfilingBudget
                  store=None,                # repro.profiling ProfileStore
                  executor=None,             # repro.profiling ProfilingExecutor
-                 scheduler=None):           # AdaptiveLadderScheduler override
+                 scheduler=None,            # AdaptiveLadderScheduler override
+                 backend=None):             # repro.state StateBackend
         self.catalog = catalog
         self.history = history
+        self.backend = backend
+        if backend is not None:
+            # deferred import: repro.profiling imports allocator submodules
+            from repro.profiling.store import (BackendModelRegistry,
+                                               ProfileStore)
+            if store is None:
+                store = ProfileStore(backend=backend, namespace="profiles")
+            if registry is None:
+                registry = BackendModelRegistry(backend,
+                                                namespace="registry")
         self.registry = registry if registry is not None else ModelRegistry()
         self.classifier = classifier if classifier is not None \
             else NearestJobClassifier()
@@ -214,6 +235,18 @@ class AllocationService:
         # re-observed as their jobs resubmit)
         for rec in self.registry.records():
             self.classifier.observe(rec.signature, rec.sizes, rec.mems)
+
+    @property
+    def backend_kind(self) -> Optional[str]:
+        """Kind of the shared-state backend this service operates over
+        ("memory" | "file" | "daemon"), from whichever shared component
+        carries one; None for a fully process-local service."""
+        for b in (self.backend, getattr(self.store, "backend", None),
+                  getattr(self.registry, "backend", None),
+                  getattr(self.budget, "backend", None)):
+            if b is not None:
+                return getattr(b, "kind", None)
+        return None
 
     # -- public -------------------------------------------------------------
     def submit(self, req: AllocationRequest) -> "Future[AllocationResponse]":
@@ -397,14 +430,14 @@ class AllocationService:
 
         sizes, mems, zoo, flags = self._measure_and_fit(sig, req,
                                                         list(ladder))
-        fresh, hits = flags["fresh"], flags["hits"]
+        fresh, hits, walls = flags["fresh"], flags["hits"], flags["walls"]
         with self._lock:
             self.stats.zoo_fits += 1
         with self._plan_lock:
             # never discard profiling work: even gate-failing ladders feed
-            # future nearest-job classifications
+            # future nearest-job classifications (memory AND runtime shape)
             newly_observed = not self.classifier.has(sig)
-            self.classifier.observe(sig, sizes, mems)
+            self.classifier.observe(sig, sizes, mems, walls)
             if newly_observed:
                 self._plan_cache.clear()  # a new neighbor may rescue others
 
@@ -423,7 +456,8 @@ class AllocationService:
 
         plan = None
         with self._plan_lock:
-            cls = self.classifier.classify(sizes, mems, exclude=(sig,)) \
+            cls = self.classifier.classify(sizes, mems, walls,
+                                           exclude=(sig,)) \
                 if len(sizes) >= 2 else None
         if cls is not None:
             neighbor_rec = self.registry.get(cls.neighbor, count_hit=False)
@@ -483,6 +517,7 @@ class AllocationService:
                                                - ap.total_points)
             return (ap.sizes, ap.mems, ap.fit,
                     {"fresh": ap.points, "hits": ap.cache_hits,
+                     "walls": [r.wall_s for r in ap.results],
                      "adaptive": aflags})
 
         results, fresh, hits, exhausted = self._profile_ladder(sig, req,
@@ -490,13 +525,14 @@ class AllocationService:
         got = [(s, r) for s, r in zip(sizes, results) if r is not None]
         used = [s for s, _ in got]
         mems = [r.job_mem_bytes for _, r in got]
+        walls = [r.wall_s for _, r in got]
         aflags["budget_exhausted"] = exhausted
         if exhausted:
             with self._lock:
                 self.stats.budget_denied += 1
         zoo = fit_zoo(used, mems, self.candidates)
         return used, mems, zoo, {"fresh": fresh, "hits": hits,
-                                 "adaptive": aflags}
+                                 "walls": walls, "adaptive": aflags}
 
     def _point_fn(self, sig: str, req: AllocationRequest):
         """Profile-point callback for the scheduler/executor, carrying a

@@ -69,31 +69,56 @@ class CrispyAllocator:
                  sizes: Optional[List[float]] = None,
                  exclude_job_in_history: bool = True,
                  adaptive: bool = False,
-                 budget=None) -> CrispyReport:
+                 budget=None,
+                 store=None) -> CrispyReport:
         """Paper steps 1-4. With `adaptive=True` (or a
         `repro.profiling.ProfilingBudget` passed as `budget=`) the ladder
         runs through the AdaptiveLadderScheduler: smallest point first,
         refit after each, early stop once the model is confident and its
         requirement prediction has stabilized — strictly fewer profile
         runs than the fixed ladder on clean jobs, same fallback behavior
-        on noisy ones."""
+        on noisy ones.
+
+        `store=` (a `repro.profiling.ProfileStore`, over any
+        `repro.state` backend) makes the one-shot path a shared-state
+        citizen too: ladder points and calibrated anchors profiled by any
+        process are reused instead of re-measured, and fresh points are
+        written back. Pass `budget=ProfilingBudget(..., backend=...)` to
+        arbitrate one cross-process envelope as well."""
         t0 = time.monotonic()
         if sizes is None:
+            if anchor is None and store is not None:
+                anchor = store.get_anchor(job)
+            elif anchor is not None and store is not None \
+                    and store.get_anchor(job) is None:
+                store.put_anchor(job, float(anchor))
             ladder = ladder_from_anchor(anchor if anchor is not None
                                         else full_size * 0.01)
             sizes = ladder.sizes
+
+        def point(s: float):
+            if store is not None:
+                cached = store.get(job, s)
+                if cached is not None:
+                    return cached, False
+            r = profile_at(s)
+            if store is not None:
+                store.put(job, s, r)
+            return r, True
+        if store is not None:
+            point.peek = lambda s: store.get(job, s)
+
         if adaptive or budget is not None:
             # deferred import: repro.profiling depends on allocator modules
             from repro.profiling.scheduler import AdaptiveLadderScheduler
             sched = AdaptiveLadderScheduler(fitter=self.fitter,
                                             budget=budget)
-            ap = sched.run(sizes, full_size,
-                           lambda s: (profile_at(s), True))
+            ap = sched.run(sizes, full_size, point)
             sizes, mems, results = ap.sizes, ap.mems, ap.results
             model = ap.fit
             flags = (ap.early_stop, ap.escalated, ap.budget_exhausted)
         else:
-            results = [profile_at(s) for s in sizes]
+            results = [point(s)[0] for s in sizes]
             mems = [r.job_mem_bytes for r in results]
             model = self.fitter(sizes, mems)
             flags = (False, False, False)

@@ -22,10 +22,13 @@ package turns profiling itself into a managed resource:
                 ladders point-concurrently and fans independent signature
                 groups out, all under one global budget.
 
-  store.py      `FileLock` (fcntl advisory), `ProfileStore` (append-only
-                JSONL of profile points + calibrated anchors, safe across
-                processes), and `LockedModelRegistry` (read-merge-write
-                registry flushes: concurrent services lose no records).
+  store.py      `ProfileStore` (profile points + calibrated anchors in a
+                backend append-only log), `BackendModelRegistry`
+                (read-merge-CAS registry flushes: concurrent services
+                lose no records) and the back-compat `LockedModelRegistry`
+                file constructor. All sharing is delegated to the
+                `repro.state` StateBackend protocol (memory / fcntl file
+                / crispy-daemon); no fcntl lives here anymore.
 
 `repro.allocator.service.AllocationService` delegates its profiling path
 here (`adaptive=True`, `budget=`, `store=`, `executor=`);
@@ -39,13 +42,14 @@ from repro.profiling.scheduler import (AdaptiveLadderScheduler,
                                        AdaptiveProfile, DISAGREE_RTOL,
                                        MAX_EXTRA_POINTS, MIN_POINTS,
                                        STABILITY_RTOL, calibrated_anchor)
-from repro.profiling.store import (FileLock, HAS_FCNTL, LockedModelRegistry,
+from repro.profiling.store import (BackendModelRegistry, FileLock,
+                                   HAS_FCNTL, LockedModelRegistry,
                                    ProfileStore)
 
 __all__ = [
-    "AdaptiveLadderScheduler", "AdaptiveProfile", "BudgetExhausted",
-    "DEFAULT_WORKERS", "DISAGREE_RTOL", "FileLock", "HAS_FCNTL",
-    "LockedModelRegistry", "MAX_EXTRA_POINTS", "MIN_POINTS",
+    "AdaptiveLadderScheduler", "AdaptiveProfile", "BackendModelRegistry",
+    "BudgetExhausted", "DEFAULT_WORKERS", "DISAGREE_RTOL", "FileLock",
+    "HAS_FCNTL", "LockedModelRegistry", "MAX_EXTRA_POINTS", "MIN_POINTS",
     "ProfileStore", "ProfilingBudget", "ProfilingExecutor",
     "STABILITY_RTOL", "calibrated_anchor",
 ]

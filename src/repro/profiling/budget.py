@@ -10,7 +10,7 @@ check the same budget before spending a point.
 
 Three independent limits, any of which exhausts the budget:
 
-  wall_s      real elapsed time since the budget started (monotonic clock);
+  wall_s      real elapsed time since the budget started;
   charge_s    *accounted* profiling seconds — the sum of ProfileResult
               wall_s values charged via `charge()`. This is the limit the
               simulator-driven tests and benchmarks exercise: simulated
@@ -19,7 +19,20 @@ Three independent limits, any of which exhausts the budget:
               paper's envelope deterministically;
   max_points  total profile runs across all jobs sharing the budget.
 
-Thread-safe: many executor workers / schedulers spend from one budget.
+Two sharing scopes:
+
+  local (default)      thread-safe within one process: many executor
+                       workers / schedulers spend from one budget.
+  shared (backend=)    the counters live in a `repro.state.StateBackend`
+                       document and every reserve/charge/refund goes
+                       through the backend's atomic lease primitive
+                       (`reserve`), so N service *processes* arbitrate ONE
+                       envelope instead of each owning a full copy. The
+                       wall clock is anchored to a shared `started_at`
+                       stamped by whichever process touches the envelope
+                       first. Pass the same backend + namespace/key to
+                       every process (a FileBackend directory or one
+                       crispy-daemon socket).
 """
 from __future__ import annotations
 
@@ -36,40 +49,78 @@ class BudgetExhausted(RuntimeError):
 class ProfilingBudget:
     def __init__(self, wall_s: Optional[float] = None,
                  charge_s: Optional[float] = None,
-                 max_points: Optional[int] = None):
+                 max_points: Optional[int] = None,
+                 backend=None,              # repro.state StateBackend
+                 namespace: str = "budget",
+                 key: str = "envelope"):
         self.wall_s = wall_s
         self.charge_s = charge_s
         self.max_points = max_points
+        self.backend = backend
+        self.namespace = namespace
+        self.key = key
         self._lock = threading.Lock()
         self._t0 = time.monotonic()
         self._points = 0
         self._charged = 0.0
         self._denials = 0
+        if backend is not None:
+            self._ensure_doc()
+
+    # -- shared-mode plumbing ------------------------------------------------
+    def _ensure_doc(self) -> Dict:
+        """Create the shared envelope document once (first toucher stamps
+        `started_at`); any raced creation keeps the winner's stamp."""
+        value, _version = self.backend.load(self.namespace, self.key)
+        if value is not None:
+            return value
+        doc = {"started_at": time.time(), "points": 0.0, "charged": 0.0,
+               "denials": 0.0}
+        won, current, _ver = self.backend.cas(self.namespace, self.key,
+                                              0, doc)
+        return doc if won else (current or doc)
+
+    def _doc(self) -> Dict:
+        value, _version = self.backend.load(self.namespace, self.key)
+        return value if value is not None else self._ensure_doc()
+
+    @property
+    def shared(self) -> bool:
+        return self.backend is not None
 
     # -- accounting ---------------------------------------------------------
     @property
     def points_spent(self) -> int:
+        if self.shared:
+            return int(self._doc().get("points", 0))
         with self._lock:
             return self._points
 
     @property
     def charged_s(self) -> float:
+        if self.shared:
+            return float(self._doc().get("charged", 0.0))
         with self._lock:
             return self._charged
 
     @property
     def denials(self) -> int:
+        if self.shared:
+            return int(self._doc().get("denials", 0))
         with self._lock:
             return self._denials
 
     def elapsed_s(self) -> float:
+        if self.shared:
+            started = self._doc().get("started_at")
+            if started is not None:
+                return max(0.0, time.time() - float(started))
         return time.monotonic() - self._t0
 
     def remaining_points(self) -> float:
         if self.max_points is None:
             return math.inf
-        with self._lock:
-            return max(0, self.max_points - self._points)
+        return max(0, self.max_points - self.points_spent)
 
     def remaining_s(self) -> float:
         """Most restrictive of the two time limits (inf if neither set)."""
@@ -77,8 +128,7 @@ class ProfilingBudget:
         if self.wall_s is not None:
             rem = min(rem, self.wall_s - self.elapsed_s())
         if self.charge_s is not None:
-            with self._lock:
-                rem = min(rem, self.charge_s - self._charged)
+            rem = min(rem, self.charge_s - self.charged_s)
         return rem
 
     def exhausted(self) -> bool:
@@ -87,12 +137,16 @@ class ProfilingBudget:
     # -- spending -----------------------------------------------------------
     def try_spend(self, points: int = 1) -> bool:
         """Reserve `points` profile runs; False (and a recorded denial) if
-        any limit is already crossed. Never blocks."""
+        any limit is already crossed. Never blocks. In shared mode the
+        reservation is an atomic backend lease, so concurrent processes
+        can never over-grant one envelope."""
+        if self.shared:
+            return self._try_spend_shared(points)
         with self._lock:
             over_points = (self.max_points is not None
                            and self._points + points > self.max_points)
             over_wall = (self.wall_s is not None
-                         and self.elapsed_s() >= self.wall_s)
+                         and time.monotonic() - self._t0 >= self.wall_s)
             over_charge = (self.charge_s is not None
                            and self._charged >= self.charge_s)
             if over_points or over_wall or over_charge:
@@ -101,38 +155,89 @@ class ProfilingBudget:
             self._points += points
             return True
 
+    def _try_spend_shared(self, points: int) -> bool:
+        if self.wall_s is not None:
+            # the only reason to read the doc up front is the shared
+            # started_at stamp; without a wall limit the reserve below is
+            # the single round trip (reserve defaults missing fields)
+            doc = self._ensure_doc()
+            started = float(doc.get("started_at", time.time()))
+            if time.time() - started >= self.wall_s:
+                # wall time is monotone — no atomicity needed for the check,
+                # only for the denial counter
+                self.backend.reserve(self.namespace, self.key,
+                                     {"denials": 1}, {})
+                return False
+        limits: Dict[str, float] = {}
+        if self.max_points is not None:
+            limits["points"] = float(self.max_points)
+        if self.charge_s is not None:
+            limits["charged"] = float(self.charge_s)
+        granted, _doc = self.backend.reserve(
+            self.namespace, self.key, {"points": float(points)}, limits)
+        if not granted:
+            self.backend.reserve(self.namespace, self.key,
+                                 {"denials": 1}, {})
+        return granted
+
     def spend(self, points: int = 1) -> None:
         if not self.try_spend(points):
             raise BudgetExhausted(
-                f"profiling budget exhausted after {self._points} points / "
-                f"{self._charged:.1f}s charged / {self.elapsed_s():.1f}s "
-                f"elapsed")
+                f"profiling budget exhausted after {self.points_spent} "
+                f"points / {self.charged_s:.1f}s charged / "
+                f"{self.elapsed_s():.1f}s elapsed")
 
     def refund(self, points: int = 1) -> None:
         """Hand back a reservation that turned out not to need a profile
         run (the point was served from a cache/store)."""
+        if self.shared:
+            # clamped decrement: a double refund must not go negative, so
+            # this is a CAS loop rather than a plain negative reserve
+            while True:
+                value, version = self.backend.load(self.namespace, self.key)
+                doc = dict(value or {})
+                doc["points"] = max(0.0,
+                                    float(doc.get("points", 0)) - points)
+                won, _cur, _ver = self.backend.cas(self.namespace, self.key,
+                                                   version, doc)
+                if won:
+                    return
         with self._lock:
             self._points = max(0, self._points - points)
 
     def charge(self, seconds: float) -> None:
         """Account a completed profile run's (reported) wall time."""
+        if self.shared:
+            self.backend.reserve(self.namespace, self.key,
+                                 {"charged": max(0.0, float(seconds))}, {})
+            return
         with self._lock:
             self._charged += max(0.0, float(seconds))
 
     # -- reporting ----------------------------------------------------------
     def snapshot(self) -> Dict:
         """Wire-friendly state for endpoint/benchmark reporting."""
+        base = {"wall_s": self.wall_s, "charge_s": self.charge_s,
+                "max_points": self.max_points,
+                "shared": self.shared,
+                "backend": getattr(self.backend, "kind", None)}
+        if self.shared:
+            doc = self._doc()
+            base.update({"points_spent": int(doc.get("points", 0)),
+                         "charged_s": float(doc.get("charged", 0.0)),
+                         "elapsed_s": self.elapsed_s(),
+                         "denials": int(doc.get("denials", 0))})
+            return base
         with self._lock:
-            return {"wall_s": self.wall_s, "charge_s": self.charge_s,
-                    "max_points": self.max_points,
-                    "points_spent": self._points,
-                    "charged_s": self._charged,
-                    "elapsed_s": self.elapsed_s(),
-                    "denials": self._denials}
+            base.update({"points_spent": self._points,
+                         "charged_s": self._charged,
+                         "elapsed_s": time.monotonic() - self._t0,
+                         "denials": self._denials})
+            return base
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         s = self.snapshot()
         return (f"ProfilingBudget(points {s['points_spent']}"
                 f"/{s['max_points']}, charged {s['charged_s']:.1f}"
                 f"/{s['charge_s']}s, elapsed {s['elapsed_s']:.1f}"
-                f"/{s['wall_s']}s)")
+                f"/{s['wall_s']}s, shared={s['shared']})")

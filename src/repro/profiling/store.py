@@ -1,124 +1,95 @@
-"""Persistent, file-locked profile & anchor store shared across processes.
+"""Profile store and model registry as thin views over a StateBackend.
 
-The PR-1 caches (ProfileResult LRU, ModelRegistry JSON) are per-process:
-two AllocationService processes pointed at the same jobs re-profile every
-ladder and clobber each other's registry file on flush (last-writer-wins
-drops the other's models). This module makes the profiling state a real
-multi-process resource:
+PR 2 gave ProfileStore and LockedModelRegistry their own fcntl JSONL
+machinery; this module now contains none of it. Both classes are views
+over the `repro.state` StateBackend protocol, so the same code shares
+state in-process (InMemoryBackend), across processes on one host
+(FileBackend), or through the single-writer crispy-daemon
+(DaemonBackend):
 
-  FileLock             fcntl advisory lock (LOCK_EX/LOCK_SH) with a bounded
-                       busy-wait, usable as a context manager. Degrades to
-                       a process-local lock where fcntl is unavailable.
+  ProfileStore           (signature, size) -> ProfileResult rows plus
+                         per-signature calibrated anchors, kept in a
+                         backend append-only log. Later rows win, so the
+                         log needs no compaction; cross-process freshness
+                         is pull-based via `refresh()` (the
+                         AllocationService refreshes once per batch).
+                         `ProfileStore(path)` keeps the PR-2 file layout:
+                         a FileBackend JSONL at exactly that path.
 
-  ProfileStore         append-only JSONL of profile points and calibrated
-                       anchors. Appends happen under an exclusive lock as a
-                       single O_APPEND write so concurrent writers never
-                       interleave partial lines; readers pick up other
-                       processes' rows incrementally via `refresh()`.
-                       Repeat signatures skip `calibrate_anchor` entirely:
-                       the calibrated anchor is persisted per signature.
+  BackendModelRegistry   a ModelRegistry persisted as one versioned
+                         backend document. Saves are read-merge-CAS:
+                         on-disk records are merged with ours (newest
+                         `created_at` wins per signature) and written only
+                         if nobody raced us — a lost race re-merges and
+                         retries, so concurrent flushes lose nothing and
+                         each flush absorbs sibling processes' models.
 
-  LockedModelRegistry  a ModelRegistry whose saves are read-merge-write
-                       under the file lock: concurrent services flush
-                       without losing each other's records (newest
-                       `created_at` wins per signature), and each flush
-                       absorbs the other process's models into memory.
+  LockedModelRegistry    back-compat constructor: BackendModelRegistry
+                         over a FileBackend rooted at the path's
+                         directory. (The on-disk JSON is now the backend
+                         document envelope; pre-StateBackend registry
+                         files are treated as empty and rewritten on the
+                         first flush.)
+
+`FileLock` and `HAS_FCNTL` are re-exported from `repro.state` for
+backward compatibility — no fcntl use remains outside `repro/state/`.
 """
 from __future__ import annotations
 
-import json
 import os
 import threading
 import time
 from typing import Dict, Optional, Tuple
 
-try:
-    import fcntl
-    HAS_FCNTL = True
-except ImportError:                      # non-POSIX: degrade gracefully
-    fcntl = None
-    HAS_FCNTL = False
-
-from repro.allocator.registry import ModelRecord, ModelRegistry
+from repro.allocator.registry import (ModelRecord, ModelRegistry,
+                                      REGISTRY_VERSION)
 from repro.core.profiler import ProfileResult
+from repro.state import FileBackend, StateBackend
+from repro.state.file_backend import FileLock, HAS_FCNTL  # noqa: F401 (compat)
 
-STORE_VERSION = 1
-
-
-class FileLock:
-    """fcntl advisory lock on `path` (created on demand). Reentrant within
-    a process via a thread lock is NOT provided — hold it briefly."""
-
-    def __init__(self, path: str, shared: bool = False,
-                 timeout_s: float = 10.0, poll_s: float = 0.005):
-        self.path = path
-        self.shared = shared
-        self.timeout_s = timeout_s
-        self.poll_s = poll_s
-        self._fd: Optional[int] = None
-
-    def acquire(self) -> "FileLock":
-        self._fd = os.open(self.path, os.O_RDWR | os.O_CREAT, 0o644)
-        if not HAS_FCNTL:
-            return self
-        flag = fcntl.LOCK_SH if self.shared else fcntl.LOCK_EX
-        deadline = time.monotonic() + self.timeout_s
-        while True:
-            try:
-                fcntl.flock(self._fd, flag | fcntl.LOCK_NB)
-                return self
-            except (BlockingIOError, OSError):
-                if time.monotonic() >= deadline:
-                    os.close(self._fd)
-                    self._fd = None
-                    raise TimeoutError(
-                        f"could not lock {self.path} within "
-                        f"{self.timeout_s}s")
-                time.sleep(self.poll_s)
-
-    def release(self) -> None:
-        if self._fd is None:
-            return
-        try:
-            if HAS_FCNTL:
-                fcntl.flock(self._fd, fcntl.LOCK_UN)
-        finally:
-            os.close(self._fd)
-            self._fd = None
-
-    def __enter__(self) -> "FileLock":
-        return self.acquire()
-
-    def __exit__(self, *exc) -> None:
-        self.release()
+STORE_VERSION = 2
 
 
-def _lock_path(path: str) -> str:
-    return path + ".lock"
+def _split_path(path: str, ext: str) -> Tuple[str, str]:
+    """(backend root, namespace) for a legacy file path: the namespace is
+    the basename minus `ext`, so FileBackend reproduces the same file."""
+    root = os.path.dirname(path) or "."
+    base = os.path.basename(path)
+    if base.endswith(ext):
+        base = base[:-len(ext)]
+    else:
+        base = os.path.splitext(base)[0] or base
+    return root, base
 
 
 class ProfileStore:
-    """JSONL store of (signature, size) -> ProfileResult rows plus
-    per-signature calibrated anchors.
+    """Backend-log store of profile points and calibrated anchors.
 
-    One row per line:
+    One record per row:
       {"kind": "profile", "sig": ..., "size": ..., "result": {...}}
       {"kind": "anchor",  "sig": ..., "anchor": ...}
 
-    Later rows win (an anchor recalibration supersedes the old one), so the
-    file needs no compaction for correctness. In-memory index is
-    thread-safe; cross-process freshness is pull-based via `refresh()` —
-    the AllocationService refreshes once per batch, so a point profiled by
-    a sibling process is reused a batch later rather than re-measured.
+    In-memory index is thread-safe; `refresh()` pulls rows appended by
+    any sibling process/client since the last read.
     """
 
-    def __init__(self, path: str, lock_timeout_s: float = 10.0):
+    def __init__(self, path: Optional[str] = None,
+                 lock_timeout_s: float = 10.0,
+                 backend: Optional[StateBackend] = None,
+                 namespace: Optional[str] = None):
+        if backend is None:
+            if path is None:
+                raise ValueError("ProfileStore needs a path or a backend")
+            root, stem = _split_path(path, ".jsonl")
+            backend = FileBackend(root, lock_timeout_s=lock_timeout_s)
+            namespace = namespace or stem
+        self.backend = backend
+        self.namespace = namespace or "profiles"
         self.path = path
-        self.lock_timeout_s = lock_timeout_s
         self._lock = threading.Lock()
         self._points: Dict[Tuple[str, float], ProfileResult] = {}
         self._anchors: Dict[str, float] = {}
-        self._offset = 0                # bytes of the file already indexed
+        self._cursor = 0
         self.refresh()
 
     # -- introspection ------------------------------------------------------
@@ -142,32 +113,14 @@ class ProfileStore:
     def refresh(self) -> int:
         """Index rows appended (by any process) since the last read.
         Returns the number of new rows."""
-        if not os.path.exists(self.path):
-            return 0
-        with FileLock(_lock_path(self.path), shared=True,
-                      timeout_s=self.lock_timeout_s):
-            with open(self.path, "rb") as f:
-                f.seek(self._offset)
-                data = f.read()
-        if not data:
-            return 0
-        new = 0
+        rows, cursor = self.backend.read(self.namespace, self._cursor)
         with self._lock:
-            # only consume complete lines; a torn tail (should not happen
-            # under the lock, but be paranoid) is re-read next refresh
-            end = data.rfind(b"\n") + 1
-            for line in data[:end].splitlines():
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    row = json.loads(line)
-                except ValueError:
-                    continue            # skip a corrupt row, keep the rest
+            for row in rows:
                 self._apply_locked(row)
-                new += 1
-            self._offset += end
-        return new
+            # rows are idempotent (later wins), so a concurrent refresh
+            # racing us to a shorter cursor only re-applies, never loses
+            self._cursor = max(self._cursor, cursor)
+        return len(rows)
 
     def _apply_locked(self, row: Dict) -> None:
         kind = row.get("kind")
@@ -180,85 +133,121 @@ class ProfileStore:
     # -- writes -------------------------------------------------------------
     def put(self, signature: str, size: float,
             result: ProfileResult) -> None:
-        self._append({"kind": "profile", "sig": signature,
-                      "size": float(size), "result": result.to_dict()})
+        self.backend.append(self.namespace,
+                            {"kind": "profile", "sig": signature,
+                             "size": float(size),
+                             "result": result.to_dict()})
         with self._lock:
             self._points[(signature, float(size))] = result
 
     def put_anchor(self, signature: str, anchor: float) -> None:
-        self._append({"kind": "anchor", "sig": signature,
-                      "anchor": float(anchor)})
+        self.backend.append(self.namespace,
+                            {"kind": "anchor", "sig": signature,
+                             "anchor": float(anchor)})
         with self._lock:
             self._anchors[signature] = float(anchor)
 
-    def _append(self, row: Dict) -> None:
-        line = (json.dumps(row) + "\n").encode()
-        with FileLock(_lock_path(self.path),
-                      timeout_s=self.lock_timeout_s):
-            fd = os.open(self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT,
-                         0o644)
-            try:
-                os.write(fd, line)
-            finally:
-                os.close(fd)
 
+class BackendModelRegistry(ModelRegistry):
+    """ModelRegistry persisted as one versioned StateBackend document.
 
-class LockedModelRegistry(ModelRegistry):
-    """ModelRegistry safe to share across processes.
+    Flushes are read-merge-CAS (see module docstring): safe for any
+    number of concurrent services sharing one backend, on any transport.
+    `refresh()` imports sibling records without writing."""
 
-    Saves are read-merge-write under an exclusive file lock: the on-disk
-    records are reloaded, merged with ours (newest `created_at` wins per
-    signature — concurrent flushes lose nothing), written atomically, and
-    the merged view is absorbed into memory so each flush also *imports*
-    sibling processes' confident models. `refresh()` imports without
-    writing."""
+    DOC_KEY = "records"
 
-    def __init__(self, path: str, autosave: bool = True,
-                 lock_timeout_s: float = 10.0):
-        self.lock_timeout_s = lock_timeout_s
-        super().__init__(path, autosave=autosave)
+    def __init__(self, backend: StateBackend, namespace: str = "registry",
+                 autosave: bool = True, path: Optional[str] = None):
+        self.backend = backend
+        self.namespace = namespace
+        # evictions this registry performed, by time: without them the
+        # merge-before-CAS in _save_locked would re-import the evicted
+        # record straight from the backend document and resurrect it
+        self._tombstones: Dict[str, float] = {}
+        super().__init__(path=None, autosave=autosave)
+        # the base class persists iff `path is not None`; backend-only
+        # registries get a descriptive sentinel so autosave still fires
+        self.path = path if path is not None \
+            else f"<{backend.kind}:{namespace}>"
+        self.refresh()
+
+    # -- codec --------------------------------------------------------------
+    def _encode_locked(self) -> Dict:
+        return {"version": REGISTRY_VERSION,
+                "records": {sig: rec.to_dict()
+                            for sig, rec in self._records.items()}}
+
+    @staticmethod
+    def _decode(value: Optional[Dict]) -> Dict[str, ModelRecord]:
+        if not value:
+            return {}
+        return {sig: ModelRecord.from_dict(sig, d)
+                for sig, d in value.get("records", {}).items()}
 
     def _merge_locked(self, disk_records: Dict[str, ModelRecord]) -> None:
         for sig, rec in disk_records.items():
+            evicted_at = self._tombstones.get(sig)
+            if evicted_at is not None:
+                if rec.created_at <= evicted_at:
+                    continue            # the copy this registry evicted
+                del self._tombstones[sig]   # newer model supersedes it
             mine = self._records.get(sig)
             if mine is None or rec.created_at > mine.created_at:
                 self._records[sig] = rec
 
-    def _read_disk(self) -> Dict[str, ModelRecord]:
-        if self.path is None or not os.path.exists(self.path):
-            return {}
-        try:
-            with open(self.path) as f:
-                payload = json.load(f)
-        except ValueError:              # half-written legacy file
-            return {}
-        return {sig: ModelRecord.from_dict(sig, d)
-                for sig, d in payload.get("records", {}).items()}
+    def evict(self, signature: str) -> bool:
+        with self._lock:
+            gone = self._records.pop(signature, None) is not None
+            if gone:
+                self._tombstones[signature] = time.time()
+                self._dirty = True
+                if self.autosave and self.path is not None:
+                    self._save_locked(self.path)
+            return gone
 
-    def _save_locked(self, path: str) -> None:
-        with FileLock(_lock_path(path), timeout_s=self.lock_timeout_s):
-            self._merge_locked(self._read_disk())
-            super()._save_locked(path)
+    # -- persistence (overrides the file I/O of the base class) -------------
+    def _save_locked(self, path: Optional[str] = None) -> None:
+        while True:
+            value, version = self.backend.load(self.namespace, self.DOC_KEY)
+            self._merge_locked(self._decode(value))
+            won, _cur, _ver = self.backend.cas(
+                self.namespace, self.DOC_KEY, version, self._encode_locked())
+            if won:
+                break
+            # lost the flush race: merge the winner's records and retry
+        self._dirty = False
 
     def load(self, path: Optional[str] = None) -> int:
-        path = path or self.path
-        if path is None:
-            raise ValueError("ModelRegistry has no path to load from")
-        with FileLock(_lock_path(path), shared=True,
-                      timeout_s=self.lock_timeout_s):
-            return super().load(path)
+        value, _version = self.backend.load(self.namespace, self.DOC_KEY)
+        records = self._decode(value)
+        with self._lock:
+            self._records = records
+            self._tombstones.clear()    # explicit reload adopts the backend
+            self._dirty = False
+            return len(self._records)
 
     def refresh(self) -> int:
-        """Merge sibling processes' on-disk records into memory (no write).
+        """Merge sibling processes' records into memory (no write).
         Returns the number of records imported or updated."""
-        if self.path is None or not os.path.exists(self.path):
-            return 0
-        with FileLock(_lock_path(self.path), shared=True,
-                      timeout_s=self.lock_timeout_s):
-            disk = self._read_disk()
+        value, _version = self.backend.load(self.namespace, self.DOC_KEY)
+        disk = self._decode(value)
         with self._lock:
             before = {sig: rec.created_at
                       for sig, rec in self._records.items()}
             self._merge_locked(disk)
             return sum(1 for sig, rec in self._records.items()
                        if before.get(sig) != rec.created_at)
+
+
+class LockedModelRegistry(BackendModelRegistry):
+    """Back-compat file-backed registry: a BackendModelRegistry over a
+    FileBackend rooted next to `path` (same concurrency guarantees as any
+    backend registry — concurrent flushes lose no records)."""
+
+    def __init__(self, path: str, autosave: bool = True,
+                 lock_timeout_s: float = 10.0):
+        self.lock_timeout_s = lock_timeout_s
+        root, stem = _split_path(path, ".json")
+        super().__init__(FileBackend(root, lock_timeout_s=lock_timeout_s),
+                         namespace=stem, autosave=autosave, path=path)

@@ -174,12 +174,18 @@ class AllocationEndpoint:
             signature=signature, leeway=leeway, adaptive=adaptive))
 
     def handle(self, timeout: Optional[float] = None, **payload) -> Dict:
-        return self.to_wire(self.submit(**payload).result(timeout))
+        wire = self.to_wire(self.submit(**payload).result(timeout))
+        # which shared-state transport served this answer ("memory" /
+        # "file" / "daemon", None for a process-local service)
+        wire["backend"] = self.service.backend_kind
+        return wire
 
     def stats(self) -> Dict:
-        """Service counters + profiling budget snapshot, wire-friendly."""
+        """Service counters + shared-state backend kind + profiling budget
+        snapshot (including shared-envelope state), wire-friendly."""
         s = self.service.stats
-        out = {"requests": s.requests, "batches": s.batches,
+        out = {"backend": self.service.backend_kind,
+               "requests": s.requests, "batches": s.batches,
                "profile_calls": s.profile_calls,
                "cache_hits": s.cache_hits, "store_hits": s.store_hits,
                "registry_hits": s.registry_hits,

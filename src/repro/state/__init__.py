@@ -1,0 +1,71 @@
+"""Unified shared-state backend for Crispy's cross-process resources.
+
+One host serving many concurrent allocation clients needs exactly three
+shared things: the profile/anchor log (`ProfileStore`), the confident-model
+registry (`LockedModelRegistry` / `BackendModelRegistry`), and the
+profiling envelope (`ProfilingBudget` in shared mode). Before this package
+each of them hand-rolled its own sharing (two copies of fcntl JSONL
+locking, and no budget sharing at all); now all three are thin views over
+one `StateBackend` protocol:
+
+  backend.py       `StateBackend` — append-only logs (`append`/`read`),
+                   versioned documents (`load`/`cas`), and lease-style
+                   `reserve` for budget arbitration — plus
+                   `InMemoryBackend` (tests/embedded).
+  file_backend.py  `FileBackend` — the fcntl implementation. The ONLY
+                   module in the repo that may import fcntl; `FileLock`
+                   lives here.
+  daemon.py        `CrispyDaemon` server + `DaemonBackend` client —
+                   single-writer state over a unix-domain socket, so
+                   contended reservations are one RPC instead of a CAS
+                   retry loop through the filesystem.
+
+Daemon lifecycle (full wire protocol in daemon.py):
+
+  start     python -m repro.state.daemon --socket /tmp/crispy.sock \
+                [--root state-dir | --memory]
+            With --root the daemon persists through a FileBackend and a
+            restart resumes from disk; --memory serves volatile state.
+            The socket path defaults to $CRISPY_DAEMON_SOCKET, else
+            <tmpdir>/crispy-daemon.sock.
+  connect   backend = DaemonBackend("/tmp/crispy.sock")
+            then AllocationService(..., backend=backend) or
+            ProfileStore(backend=backend) / ProfilingBudget(...,
+            backend=backend). Clients reconnect once on transport errors
+            (daemon restarts are transparent); a daemon that stays down
+            raises StateBackendUnavailable.
+  health    python -m repro.state.daemon --socket ... --ping
+  shutdown  python -m repro.state.daemon --socket ... --shutdown
+            (or SIGTERM/SIGINT) — the server drains, unlinks the socket,
+            and exits 0.
+
+Choosing a backend: `InMemoryBackend` for tests and single-process
+embedding; `FileBackend` for a handful of processes on one host with no
+extra moving parts; `DaemonBackend` when reservation traffic is contended
+or you want one process to own all writes.
+`benchmarks/state_backends.py` measures file vs daemon under
+multi-process load.
+"""
+from repro.state.backend import (CASConflict, InMemoryBackend, StateBackend,
+                                 StateBackendError, StateBackendUnavailable)
+from repro.state.file_backend import FileBackend, FileLock, HAS_FCNTL
+
+# daemon exports resolve lazily (PEP 562): `python -m repro.state.daemon`
+# would otherwise import the module twice (package import + runpy __main__)
+# and warn about unpredictable behaviour
+_DAEMON_EXPORTS = ("CrispyDaemon", "DaemonBackend", "HAS_UNIX_SOCKETS",
+                   "default_socket_path")
+
+__all__ = [
+    "CASConflict", "CrispyDaemon", "DaemonBackend", "FileBackend",
+    "FileLock", "HAS_FCNTL", "HAS_UNIX_SOCKETS", "InMemoryBackend",
+    "StateBackend", "StateBackendError", "StateBackendUnavailable",
+    "default_socket_path",
+]
+
+
+def __getattr__(name):
+    if name in _DAEMON_EXPORTS:
+        from repro.state import daemon
+        return getattr(daemon, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,192 @@
+"""StateBackend: the one shared-state protocol behind Crispy's stores.
+
+Before this package, every shared-state owner hand-rolled its own
+multi-process machinery: `ProfileStore` and `LockedModelRegistry` each
+carried their own fcntl JSONL/merge code, and `ProfilingBudget` was
+process-local (two service processes could each spend the full ten-minute
+envelope). `StateBackend` factors the sharing into one transport-agnostic
+protocol with exactly two storage shapes plus one arbitration primitive:
+
+  append-only logs    `append(ns, record)` / `read(ns, cursor)` — ordered
+                      JSON-safe records per namespace, read incrementally
+                      from an opaque integer cursor. This is the shape of
+                      the profile/anchor store: later rows win, so readers
+                      need no compaction.
+
+  versioned documents `load(ns, key)` / `cas(ns, key, version, value)` —
+                      a JSON document with a monotonically increasing
+                      version; `cas` succeeds only when the caller's
+                      version matches the current one. This is the shape
+                      of the model registry (read-merge-CAS flush) and the
+                      shared budget doc.
+
+  lease reservations  `reserve(ns, key, deltas, limits)` — atomically bump
+                      numeric counters in a document iff the limits hold.
+                      This is the shape of cross-process budget
+                      arbitration: N processes reserve points from one
+                      envelope and the backend guarantees the sum never
+                      exceeds it. The base implementation is a CAS retry
+                      loop so any backend gets it for free; the daemon
+                      backend forwards it as a single RPC the single-writer
+                      server applies atomically.
+
+Implementations:
+
+  InMemoryBackend     dict + threading.Lock. Tests, embedded single-process
+                      use, and the storage engine inside the daemon.
+  FileBackend         fcntl-locked JSONL logs + atomically rewritten JSON
+                      doc files (file_backend.py). The only module in the
+                      repo allowed to touch fcntl.
+  DaemonBackend       newline-JSON RPC over a unix-domain socket to a
+                      single-writer `crispy-daemon` (daemon.py).
+"""
+from __future__ import annotations
+
+import threading
+from abc import ABC, abstractmethod
+from typing import Dict, List, Optional, Tuple
+
+
+class StateBackendError(RuntimeError):
+    """Base error for backend failures."""
+
+
+class StateBackendUnavailable(StateBackendError):
+    """The backend's transport is down (daemon crashed / socket gone).
+    Callers may retry after the daemon restarts; state survives when the
+    daemon is backed by a FileBackend root."""
+
+
+class CASConflict(StateBackendError):  # pragma: no cover - debugging aid
+    """Optional strict-mode error for callers that treat a lost CAS race
+    as exceptional rather than retryable."""
+
+
+class StateBackend(ABC):
+    """Transport-agnostic shared-state protocol (see module docstring).
+
+    All values must be JSON-serializable dicts; namespaces are short
+    identifier-like strings (implementations may sanitize them into
+    filenames). Every operation is atomic with respect to every other
+    operation on the same backend, across threads and — for FileBackend
+    and DaemonBackend — across processes.
+    """
+
+    kind: str = "abstract"
+
+    # -- append-only logs ---------------------------------------------------
+    @abstractmethod
+    def append(self, ns: str, record: Dict) -> None:
+        """Append one record to the `ns` log. Concurrent appends never
+        interleave or drop records."""
+
+    @abstractmethod
+    def read(self, ns: str, cursor: int = 0) -> Tuple[List[Dict], int]:
+        """Records appended since `cursor` (0 = start), plus the new
+        cursor. Cursors are opaque ints valid only for this backend."""
+
+    # -- versioned documents ------------------------------------------------
+    @abstractmethod
+    def load(self, ns: str, key: str) -> Tuple[Optional[Dict], int]:
+        """Current (value, version) of a document; (None, 0) if absent."""
+
+    @abstractmethod
+    def cas(self, ns: str, key: str, version: int,
+            value: Dict) -> Tuple[bool, Optional[Dict], int]:
+        """Replace the document iff its version still equals `version`
+        (0 = create). Returns (won, current_value, current_version) —
+        on a lost race the current state is returned so the caller can
+        merge and retry."""
+
+    # -- lease-style reservations ------------------------------------------
+    def reserve(self, ns: str, key: str, deltas: Dict[str, float],
+                limits: Optional[Dict[str, float]] = None
+                ) -> Tuple[bool, Dict]:
+        """Atomically apply `deltas` to numeric fields of the document iff
+        every limit holds. For each (field, limit) in `limits`:
+
+          * the field is being bumped (a nonzero delta): granted iff the
+            post-apply value stays <= limit — a reservation may land
+            exactly on the ceiling;
+          * the field is a pure guard (no/zero delta): granted iff the
+            current value is strictly < limit — matches "the envelope is
+            already spent" semantics for charged-seconds checks.
+
+        Returns (granted, document-after). A denied reservation changes
+        nothing. Default implementation: CAS retry loop (correct on any
+        backend); DaemonBackend overrides with a single server-side RPC.
+        """
+        limits = limits or {}
+        while True:
+            current, version = self.load(ns, key)
+            doc = dict(current or {})
+            granted = True
+            for field, limit in limits.items():
+                if limit is None:
+                    continue
+                cur = float(doc.get(field, 0))
+                delta = float(deltas.get(field, 0))
+                ok = (cur + delta <= limit) if delta else (cur < limit)
+                if not ok:
+                    granted = False
+                    break
+            if not granted:
+                return False, doc
+            for field, delta in deltas.items():
+                doc[field] = float(doc.get(field, 0)) + float(delta)
+            won, cur_val, _v = self.cas(ns, key, version, doc)
+            if won:
+                return True, doc
+            # lost the race: re-read and re-check against fresh state
+
+    # -- lifecycle ----------------------------------------------------------
+    def ping(self) -> bool:
+        """True when the backend is reachable."""
+        return True
+
+    def close(self) -> None:
+        """Release transport resources (no-op for local backends)."""
+
+    def __enter__(self) -> "StateBackend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class InMemoryBackend(StateBackend):
+    """Process-local reference implementation: tests, embedded use, and
+    the storage engine the daemon serves when started with --memory."""
+
+    kind = "memory"
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._logs: Dict[str, List[Dict]] = {}
+        self._docs: Dict[Tuple[str, str], Tuple[Dict, int]] = {}
+
+    def append(self, ns: str, record: Dict) -> None:
+        with self._lock:
+            self._logs.setdefault(ns, []).append(dict(record))
+
+    def read(self, ns: str, cursor: int = 0) -> Tuple[List[Dict], int]:
+        with self._lock:
+            log = self._logs.get(ns, ())
+            rows = [dict(r) for r in log[cursor:]]
+            return rows, len(log)
+
+    def load(self, ns: str, key: str) -> Tuple[Optional[Dict], int]:
+        with self._lock:
+            value, version = self._docs.get((ns, key), (None, 0))
+            return (dict(value) if value is not None else None), version
+
+    def cas(self, ns: str, key: str, version: int,
+            value: Dict) -> Tuple[bool, Optional[Dict], int]:
+        with self._lock:
+            cur_val, cur_ver = self._docs.get((ns, key), (None, 0))
+            if cur_ver != version:
+                return (False,
+                        dict(cur_val) if cur_val is not None else None,
+                        cur_ver)
+            self._docs[(ns, key)] = (dict(value), cur_ver + 1)
+            return True, dict(value), cur_ver + 1

@@ -1,0 +1,425 @@
+"""crispy-daemon: a single-writer shared-state server over a unix socket.
+
+The FileBackend shares state through fcntl locks — correct, but every CAS
+is a lock/read/rewrite of a JSON file and contended reservations retry
+through the filesystem. The daemon centralizes writes the way Ruya
+centralizes its iteratively-updated memory model: ONE process owns the
+state and applies every mutation atomically under one lock, and clients
+talk to it over a newline-delimited JSON protocol on a unix-domain
+socket. `reserve` becomes a single round trip instead of a CAS retry
+loop, so N allocation-service processes arbitrate one profiling envelope
+with no lock convoys.
+
+Wire protocol (one JSON object per line, request -> response):
+
+  {"op": "ping"}                                   -> {"ok": true}
+  {"op": "append", "ns": .., "record": {..}}       -> {"ok": true}
+  {"op": "read", "ns": .., "cursor": 0}            -> {"ok": true,
+                                                       "rows": [..],
+                                                       "cursor": n}
+  {"op": "load", "ns": .., "key": ..}              -> {"ok": true,
+                                                       "value": ..,
+                                                       "version": n}
+  {"op": "cas", "ns": .., "key": .., "version": n,
+   "value": {..}}                                  -> {"ok": true,
+                                                       "won": bool, ..}
+  {"op": "reserve", "ns": .., "key": ..,
+   "deltas": {..}, "limits": {..}}                 -> {"ok": true,
+                                                       "granted": bool,
+                                                       "doc": {..}}
+  {"op": "shutdown"}                               -> {"ok": true}
+
+Lifecycle (also documented in the repro.state package docstring):
+
+  start     python -m repro.state.daemon --socket /tmp/crispy.sock \
+                [--root DIR | --memory]
+            --root persists state through a FileBackend so a restarted
+            daemon resumes where it stopped; --memory (the default when no
+            root is given) serves an InMemoryBackend.
+  health    python -m repro.state.daemon --socket /tmp/crispy.sock --ping
+            exits 0 iff the daemon answers.
+  shutdown  python -m repro.state.daemon --socket /tmp/crispy.sock \
+                --shutdown
+            asks the daemon to stop; the server drains, unlinks its
+            socket and the foreground process exits 0. SIGTERM/SIGINT do
+            the same.
+
+Clients (`DaemonBackend`) keep one connection per thread and reconnect
+once on a transport error — a daemon restarted on the same socket path is
+picked up transparently; a daemon that stays down surfaces
+`StateBackendUnavailable` with the socket path in the message.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import socket
+import socketserver
+import sys
+import tempfile
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.state.backend import (InMemoryBackend, StateBackend,
+                                 StateBackendError, StateBackendUnavailable)
+from repro.state.file_backend import FileBackend
+
+HAS_UNIX_SOCKETS = hasattr(socket, "AF_UNIX")
+
+DEFAULT_SOCKET = os.path.join(tempfile.gettempdir(), "crispy-daemon.sock")
+DEFAULT_TIMEOUT_S = 10.0
+
+
+def default_socket_path() -> str:
+    return os.environ.get("CRISPY_DAEMON_SOCKET", DEFAULT_SOCKET)
+
+
+class CrispyDaemon:
+    """Single-writer state server. Owns a local backend (InMemoryBackend
+    by default, FileBackend when constructed with `root=` for durability
+    across restarts) and serializes every mutation under one lock."""
+
+    def __init__(self, socket_path: str,
+                 backend: Optional[StateBackend] = None,
+                 root: Optional[str] = None):
+        if not HAS_UNIX_SOCKETS:       # pragma: no cover - non-POSIX
+            raise StateBackendError(
+                "unix-domain sockets are unavailable on this platform")
+        if backend is None:
+            backend = FileBackend(root) if root else InMemoryBackend()
+        self.backend = backend
+        self.socket_path = socket_path
+        self._write_lock = threading.Lock()
+        self._server: Optional[socketserver.ThreadingUnixStreamServer] = None
+        self._thread: Optional[threading.Thread] = None
+        # open client connections, severed on stop() so handler threads
+        # (daemon_threads) don't keep serving a "stopped" daemon
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+
+    # -- request dispatch ---------------------------------------------------
+    def handle_request(self, req: Dict) -> Dict:
+        op = req.get("op")
+        b = self.backend
+        if op == "ping":
+            return {"ok": True, "kind": b.kind}
+        if op == "append":
+            with self._write_lock:
+                b.append(req["ns"], req["record"])
+            return {"ok": True}
+        if op == "read":
+            rows, cursor = b.read(req["ns"], int(req.get("cursor", 0)))
+            return {"ok": True, "rows": rows, "cursor": cursor}
+        if op == "load":
+            value, version = b.load(req["ns"], req["key"])
+            return {"ok": True, "value": value, "version": version}
+        if op == "cas":
+            with self._write_lock:
+                won, value, version = b.cas(req["ns"], req["key"],
+                                            int(req["version"]),
+                                            req["value"])
+            return {"ok": True, "won": won, "value": value,
+                    "version": version}
+        if op == "reserve":
+            # the whole check-and-bump happens under the writer lock: this
+            # is the single-RPC arbitration FileBackend needs a CAS retry
+            # loop for
+            with self._write_lock:
+                granted, doc = b.reserve(req["ns"], req["key"],
+                                         req.get("deltas", {}),
+                                         req.get("limits") or {})
+            return {"ok": True, "granted": granted, "doc": doc}
+        if op == "shutdown":
+            threading.Thread(target=self.stop, daemon=True).start()
+            return {"ok": True}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self, background: bool = True) -> "CrispyDaemon":
+        if os.path.exists(self.socket_path):
+            # a crash leaves a stale socket behind (safe to reclaim), but
+            # a LIVE daemon must not be silently usurped — two daemons on
+            # one path would split "the one shared envelope" in two
+            probe = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            probe.settimeout(1.0)
+            alive = False
+            try:
+                probe.connect(self.socket_path)
+                alive = True
+            except OSError:
+                pass                         # stale: nobody listening
+            finally:
+                probe.close()
+            if alive:
+                raise StateBackendError(
+                    f"a daemon is already serving {self.socket_path}; "
+                    f"connect a DaemonBackend to it or pick another "
+                    f"--socket")
+            os.unlink(self.socket_path)
+        daemon = self
+
+        class Handler(socketserver.StreamRequestHandler):
+            def setup(self):
+                super().setup()
+                with daemon._conns_lock:
+                    daemon._conns.add(self.connection)
+
+            def finish(self):
+                with daemon._conns_lock:
+                    daemon._conns.discard(self.connection)
+                super().finish()
+
+            def handle(self):
+                for line in self.rfile:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        req = json.loads(line)
+                        resp = daemon.handle_request(req)
+                    except Exception as e:      # a bad request must never
+                        resp = {"ok": False,    # kill the server
+                                "error": f"{type(e).__name__}: {e}"}
+                    try:
+                        self.wfile.write((json.dumps(resp) + "\n").encode())
+                        self.wfile.flush()
+                    except OSError:
+                        return                  # client went away
+
+        class Server(socketserver.ThreadingUnixStreamServer):
+            daemon_threads = True
+            allow_reuse_address = True
+
+        self._server = Server(self.socket_path, Handler)
+        if background:
+            self._thread = threading.Thread(
+                target=lambda: self._server.serve_forever(poll_interval=0.05),
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        if self._server is None:
+            self.start(background=False)
+        server = self._server
+        if server is not None:          # stop() may have raced us
+            server.serve_forever(poll_interval=0.05)
+
+    def stop(self) -> None:
+        server, self._server = self._server, None
+        if server is not None:
+            server.shutdown()
+            server.server_close()
+        with self._conns_lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        if os.path.exists(self.socket_path):
+            try:
+                os.unlink(self.socket_path)
+            except OSError:
+                pass
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "CrispyDaemon":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+class DaemonBackend(StateBackend):
+    """StateBackend speaking the crispy-daemon wire protocol.
+
+    One connection per thread (the AllocationService worker, profiling
+    executor workers and direct callers each get their own); a transport
+    error drops the connection and retries once, so clients fail over to
+    a daemon restarted on the same socket path. A daemon that stays down
+    raises `StateBackendUnavailable` — callers see a clean error, never a
+    hang (socket ops are bounded by `timeout_s`)."""
+
+    kind = "daemon"
+
+    def __init__(self, socket_path: Optional[str] = None,
+                 timeout_s: float = DEFAULT_TIMEOUT_S):
+        if not HAS_UNIX_SOCKETS:       # pragma: no cover - non-POSIX
+            raise StateBackendError(
+                "unix-domain sockets are unavailable on this platform")
+        self.socket_path = socket_path or default_socket_path()
+        self.timeout_s = timeout_s
+        self._local = threading.local()
+
+    # -- transport ----------------------------------------------------------
+    def _files(self):
+        files = getattr(self._local, "files", None)
+        if files is None:
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(self.timeout_s)
+            sock.connect(self.socket_path)
+            files = (sock, sock.makefile("rwb"))
+            self._local.files = files
+        return files
+
+    def _drop(self) -> None:
+        files = getattr(self._local, "files", None)
+        self._local.files = None
+        if files is not None:
+            sock, f = files
+            for closer in (f.close, sock.close):
+                try:
+                    closer()
+                except OSError:
+                    pass
+
+    # ops safe to blindly resend: they mutate nothing server-side
+    _IDEMPOTENT_OPS = frozenset({"ping", "read", "load"})
+
+    def _call(self, payload: Dict) -> Dict:
+        op = payload.get("op")
+        last: Optional[Exception] = None
+        for attempt in range(2):        # second attempt = fresh connection
+            sent = False
+            try:
+                _sock, f = self._files()
+                f.write((json.dumps(payload) + "\n").encode())
+                f.flush()
+                sent = True
+                line = f.readline()
+                if not line:
+                    raise ConnectionError("daemon closed the connection")
+                resp = json.loads(line)
+                if not resp.get("ok"):
+                    raise StateBackendError(
+                        f"daemon rejected {op}: {resp.get('error')}")
+                return resp
+            except (OSError, ValueError, ConnectionError) as e:
+                self._drop()
+                last = e
+                # a mutating op (append/cas/reserve) whose request was
+                # fully sent may already have been applied server-side —
+                # resending could apply it twice (double-spend a budget
+                # point, duplicate a log row), so surface the ambiguity
+                # instead of retrying. Failures before the request went
+                # out (dead cached connection, connect refused) are
+                # always safe to retry on a fresh connection.
+                if sent and op not in self._IDEMPOTENT_OPS:
+                    raise StateBackendUnavailable(
+                        f"crispy-daemon connection lost mid-{op} at "
+                        f"{self.socket_path} (the operation may or may "
+                        f"not have been applied): {e}")
+        raise StateBackendUnavailable(
+            f"crispy-daemon unreachable at {self.socket_path}: {last}")
+
+    # -- protocol ------------------------------------------------------------
+    def append(self, ns: str, record: Dict) -> None:
+        self._call({"op": "append", "ns": ns, "record": record})
+
+    def read(self, ns: str, cursor: int = 0) -> Tuple[List[Dict], int]:
+        resp = self._call({"op": "read", "ns": ns, "cursor": cursor})
+        return resp["rows"], resp["cursor"]
+
+    def load(self, ns: str, key: str) -> Tuple[Optional[Dict], int]:
+        resp = self._call({"op": "load", "ns": ns, "key": key})
+        return resp["value"], resp["version"]
+
+    def cas(self, ns: str, key: str, version: int,
+            value: Dict) -> Tuple[bool, Optional[Dict], int]:
+        resp = self._call({"op": "cas", "ns": ns, "key": key,
+                           "version": version, "value": value})
+        return resp["won"], resp["value"], resp["version"]
+
+    def reserve(self, ns: str, key: str, deltas: Dict[str, float],
+                limits: Optional[Dict[str, float]] = None
+                ) -> Tuple[bool, Dict]:
+        resp = self._call({"op": "reserve", "ns": ns, "key": key,
+                           "deltas": deltas, "limits": limits or {}})
+        return resp["granted"], resp["doc"]
+
+    def ping(self) -> bool:
+        try:
+            return bool(self._call({"op": "ping"}).get("ok"))
+        except StateBackendError:
+            return False
+
+    def shutdown_daemon(self) -> None:
+        """Ask the daemon to stop (it drains and unlinks its socket)."""
+        self._call({"op": "shutdown"})
+        self._drop()
+
+    def close(self) -> None:
+        self._drop()
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.state.daemon",
+        description="crispy-daemon: shared-state server for Crispy "
+                    "allocation services (see module docstring for the "
+                    "lifecycle).")
+    ap.add_argument("--socket", default=default_socket_path(),
+                    help="unix socket path (default: $CRISPY_DAEMON_SOCKET "
+                         f"or {DEFAULT_SOCKET})")
+    ap.add_argument("--root", default=None,
+                    help="persist state in this directory (FileBackend); "
+                         "a restarted daemon resumes from it")
+    ap.add_argument("--memory", action="store_true",
+                    help="serve an in-memory backend (the default when "
+                         "--root is not given)")
+    ap.add_argument("--ping", action="store_true",
+                    help="health-check a running daemon and exit")
+    ap.add_argument("--shutdown", action="store_true",
+                    help="ask a running daemon to stop and exit")
+    args = ap.parse_args(argv)
+
+    if not HAS_UNIX_SOCKETS:           # pragma: no cover - non-POSIX
+        print("crispy-daemon: unix sockets unavailable on this platform",
+              file=sys.stderr)
+        return 2
+
+    if args.ping or args.shutdown:
+        client = DaemonBackend(args.socket, timeout_s=5.0)
+        try:
+            if args.ping:
+                ok = client.ping()
+                print("pong" if ok else "no daemon", flush=True)
+                return 0 if ok else 1
+            client.shutdown_daemon()
+            print("shutdown requested", flush=True)
+            return 0
+        except StateBackendError as e:
+            print(f"crispy-daemon: {e}", file=sys.stderr)
+            return 1
+
+    daemon = CrispyDaemon(args.socket, root=args.root)
+    # stop() blocks until serve_forever returns, so it must not run on the
+    # thread serve_forever occupies (the signal handler interrupts it)
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: threading.Thread(
+            target=daemon.stop, daemon=True).start())
+    try:
+        daemon.start(background=False)  # bind before announcing
+    except StateBackendError as e:      # e.g. live daemon on this socket
+        print(f"crispy-daemon: {e}", file=sys.stderr)
+        return 1
+    print(f"crispy-daemon: serving {daemon.backend.kind} state on "
+          f"{args.socket}", flush=True)
+    try:
+        daemon.serve_forever()
+    except OSError:                     # server socket closed by stop()
+        pass
+    # a remote "shutdown" op triggers stop() on a daemon thread; finish
+    # the cleanup (socket unlink) here so process exit never races it
+    daemon.stop()
+    print("crispy-daemon: clean shutdown", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -172,6 +172,38 @@ def test_classifier_matches_similar_shape_rejects_different():
     assert got2 is None or got2.neighbor != "linear-job"
 
 
+def test_classifier_runtime_shape_rescues_memory_tie():
+    """Two observed jobs with near-identical (linear) memory shape but
+    different runtime shape: a quadratic-runtime query is misclassified
+    by memory shape alone (the scan's memory curve matches exactly) and
+    classified correctly once the ladder's runtime curve joins the
+    feature vector."""
+    clf = NearestJobClassifier(max_distance=0.25)
+    smax = max(SIZES)
+    scan_mem = [2.0 * s for s in SIZES]               # exactly linear
+    join_mem = [2.0 * s + 0.1 * s * (s / smax) for s in SIZES]  # near-linear
+    scan_rt = [10.0 * (s / smax) for s in SIZES]          # linear runtime
+    join_rt = [10.0 * (s / smax) ** 2 for s in SIZES]     # quadratic runtime
+    clf.observe("scan", SIZES, scan_mem, scan_rt)
+    clf.observe("join", SIZES, join_mem, join_rt)
+
+    query_mem = list(scan_mem)        # memory says "scan", exactly
+    query_rt = [11.0 * (s / smax) ** 2 for s in SIZES]    # runtime says "join"
+
+    by_mem = clf.classify(SIZES, query_mem)
+    assert by_mem is not None and by_mem.neighbor == "scan"   # misclassified
+
+    by_both = clf.classify(SIZES, query_mem, query_rt)
+    assert by_both is not None and by_both.neighbor == "join"
+
+    # a neighbor observed WITHOUT runtimes still participates (memory-only
+    # distance): the feature store never fragments on mixed observations
+    clf2 = NearestJobClassifier(max_distance=0.25)
+    clf2.observe("legacy", SIZES, scan_mem)           # e.g. registry warmup
+    got = clf2.classify(SIZES, query_mem, query_rt)
+    assert got is not None and got.neighbor == "legacy"
+
+
 # -- service end-to-end -------------------------------------------------------
 
 

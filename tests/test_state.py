@@ -1,0 +1,395 @@
+"""Unified shared-state backend (repro.state): protocol semantics on every
+backend, cross-process budget arbitration (the acceptance case: N
+processes, ONE envelope) via FileBackend and via the crispy-daemon, daemon
+crash/restart behavior, and the store/registry/service views over a
+backend."""
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+import pytest
+
+from repro.allocator import AllocationRequest, AllocationService
+from repro.core.catalog import aws_like_catalog
+from repro.core.profiler import ProfileResult
+from repro.core.simulator import (GiB, build_history, make_profile_fn,
+                                  scout_like_jobs)
+from repro.profiling import (BackendModelRegistry, ProfileStore,
+                             ProfilingBudget)
+from repro.state import (CrispyDaemon, DaemonBackend, FileBackend,
+                         InMemoryBackend, StateBackendError,
+                         StateBackendUnavailable)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+needs_unix_sockets = pytest.mark.skipif(
+    not hasattr(socket, "AF_UNIX"),
+    reason="unix-domain sockets unavailable")
+
+
+def _daemon_socket(tmp_path) -> str:
+    # AF_UNIX paths are length-limited (~108 bytes); pytest tmp dirs can
+    # get long, so place sockets in a short-lived short tempdir
+    d = tempfile.mkdtemp(prefix="crispyd-")
+    return os.path.join(d, "d.sock")
+
+
+def _backends(tmp_path):
+    yield InMemoryBackend()
+    yield FileBackend(str(tmp_path / "file-backend"))
+
+
+# -- protocol semantics (every backend) ---------------------------------------
+
+
+def test_log_append_read_cursor(tmp_path):
+    for b in _backends(tmp_path):
+        b.append("log", {"x": 1})
+        b.append("log", {"x": 2})
+        rows, cur = b.read("log")
+        assert [r["x"] for r in rows] == [1, 2]
+        assert b.read("log", cur) == ([], cur)
+        b.append("log", {"x": 3})
+        rows2, cur2 = b.read("log", cur)
+        assert [r["x"] for r in rows2] == [3] and cur2 > cur
+
+
+def test_doc_load_cas_conflict(tmp_path):
+    for b in _backends(tmp_path):
+        assert b.load("docs", "k") == (None, 0)
+        won, val, ver = b.cas("docs", "k", 0, {"a": 1})
+        assert won and ver == 1
+        # stale version loses and gets the current state back to merge
+        won, val, ver = b.cas("docs", "k", 0, {"a": 99})
+        assert not won and val == {"a": 1} and ver == 1
+        won, val, ver = b.cas("docs", "k", 1, {"a": 2})
+        assert won and ver == 2
+
+
+def test_reserve_lease_semantics(tmp_path):
+    for b in _backends(tmp_path):
+        # bumped fields may land exactly on the ceiling
+        assert b.reserve("d", "bud", {"points": 1}, {"points": 2})[0]
+        assert b.reserve("d", "bud", {"points": 1}, {"points": 2})[0]
+        ok, doc = b.reserve("d", "bud", {"points": 1}, {"points": 2})
+        assert not ok and doc["points"] == 2      # denied: nothing changed
+        # guard fields (no delta) deny at >= limit
+        b.reserve("d", "bud2", {"charged": 100.0}, {})
+        assert not b.reserve("d", "bud2", {"points": 1},
+                             {"charged": 100.0})[0]
+        # unlimited deltas always land
+        assert b.reserve("d", "bud2", {"denials": 1}, {})[0]
+
+
+# -- views over a backend -----------------------------------------------------
+
+
+def test_profile_store_and_registry_share_any_backend(tmp_path):
+    from repro.core.memory_model import fit_memory_model
+    sizes = [2e9, 4e9, 6e9, 8e9, 1e10]
+    model = fit_memory_model(sizes, [2 * s + 1e9 for s in sizes])
+    for b in _backends(tmp_path):
+        s1 = ProfileStore(backend=b)
+        s2 = ProfileStore(backend=b)
+        s1.put("sigA", 1e9, ProfileResult(1e9, 2e9, 0.0, 5.0))
+        s1.put_anchor("sigA", 1e9)
+        assert s2.refresh() >= 2
+        assert s2.get("sigA", 1e9).peak_mem_bytes == 2e9
+        assert s2.get_anchor("sigA") == 1e9
+
+        r1 = BackendModelRegistry(b)
+        r2 = BackendModelRegistry(b)
+        r1.put("a", model, defer_save=True)
+        r1.flush()
+        r2.put("b", model, defer_save=True)
+        r2.flush()                        # merge-on-flush: keeps "a"
+        assert "a" in r2 and "b" in r2
+        r1.refresh()
+        assert "b" in r1
+
+
+def test_backend_registry_evict_survives_merge_on_flush(tmp_path):
+    """Regression: _save_locked's merge-before-CAS must not resurrect a
+    record this registry just evicted (tombstones beat the disk copy; a
+    genuinely newer sibling model still supersedes the eviction)."""
+    from repro.core.memory_model import fit_memory_model
+    sizes = [2e9, 4e9, 6e9, 8e9, 1e10]
+    model = fit_memory_model(sizes, [2 * s + 1e9 for s in sizes])
+    for b in _backends(tmp_path):
+        r = BackendModelRegistry(b)
+        r.put("gone", model)              # autosaved to the backend doc
+        assert "gone" in BackendModelRegistry(b)
+        assert r.evict("gone")
+        assert "gone" not in r
+        r.flush()
+        r.refresh()
+        assert "gone" not in r            # not re-imported
+        assert "gone" not in BackendModelRegistry(b)   # nor persisted
+        # a NEWER record from a sibling supersedes the tombstone
+        r2 = BackendModelRegistry(b)
+        r2.put("gone", model)
+        r.refresh()
+        assert "gone" in r
+
+
+def test_profile_store_keeps_legacy_jsonl_layout(tmp_path):
+    """ProfileStore(path) still writes the PR-2 JSONL file at exactly
+    that path (FileBackend reproduces the layout)."""
+    path = str(tmp_path / "prof.jsonl")
+    store = ProfileStore(path)
+    store.put("sig", 1e9, ProfileResult(1e9, 2e9, 0.0, 5.0))
+    rows = [json.loads(line) for line in open(path)]
+    assert rows and rows[0]["kind"] == "profile"
+    assert store.backend.kind == "file"
+
+
+def test_no_direct_fcntl_outside_state_package():
+    """Acceptance: the fcntl machinery lives only in repro/state/ —
+    nothing else imports the module (docstrings may still mention it)."""
+    import re
+    pat = re.compile(r"^\s*(import fcntl|from fcntl)", re.MULTILINE)
+    root = os.path.join(SRC, "repro")
+    offenders = []
+    for dirpath, _dirs, files in os.walk(root):
+        for name in files:
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, root)
+            if rel.startswith("state" + os.sep):
+                continue
+            with open(path) as f:
+                if pat.search(f.read()):
+                    offenders.append(rel)
+    assert not offenders, offenders
+
+
+# -- cross-process budget arbitration (acceptance) ----------------------------
+
+_SPENDER = """
+import json, sys
+sys.path.insert(0, {src!r})
+from repro.profiling import ProfilingBudget
+from repro.state import DaemonBackend, FileBackend
+mode, target, attempts = sys.argv[1], sys.argv[2], int(sys.argv[3])
+backend = FileBackend(target) if mode == "file" else DaemonBackend(target)
+budget = ProfilingBudget(max_points=20, charge_s=1000.0, backend=backend)
+granted = 0
+for _ in range(attempts):
+    if budget.try_spend():
+        granted += 1
+        budget.charge(10.0)
+print(json.dumps({{"granted": granted,
+                   "denials_seen": budget.denials}}))
+"""
+
+
+def _spend_in_processes(mode: str, target: str, procs: int = 2,
+                        attempts: int = 20):
+    code = _SPENDER.format(src=SRC)
+    ps = [subprocess.Popen([sys.executable, "-c", code, mode, target,
+                            str(attempts)], stdout=subprocess.PIPE,
+                           stderr=subprocess.PIPE, text=True)
+          for _ in range(procs)]
+    outs = [p.communicate(timeout=120) for p in ps]
+    rows = []
+    for p, (out, err) in zip(ps, outs):
+        assert p.returncode == 0, err[-3000:]
+        rows.append(json.loads(out.strip().splitlines()[-1]))
+    return rows
+
+
+def test_two_processes_share_one_envelope_via_file_backend(tmp_path):
+    """Acceptance: 2 real processes x 20 attempts against ONE
+    max_points=20 envelope grant exactly 20 in total — not 20 each, as
+    the process-local budget used to allow."""
+    root = str(tmp_path / "shared")
+    rows = _spend_in_processes("file", root)
+    total = sum(r["granted"] for r in rows)
+    assert total == 20, rows
+    # both processes read the same final shared state
+    budget = ProfilingBudget(max_points=20, backend=FileBackend(root))
+    assert budget.points_spent == 20
+    assert budget.charged_s == 200.0
+    assert budget.exhausted()
+
+
+@needs_unix_sockets
+def test_two_processes_share_one_envelope_via_daemon(tmp_path):
+    sock = _daemon_socket(tmp_path)
+    with CrispyDaemon(sock, root=str(tmp_path / "dstate")):
+        rows = _spend_in_processes("daemon", sock)
+        total = sum(r["granted"] for r in rows)
+        assert total == 20, rows
+        budget = ProfilingBudget(max_points=20,
+                                 backend=DaemonBackend(sock))
+        assert budget.points_spent == 20 and budget.exhausted()
+
+
+@needs_unix_sockets
+def test_daemon_refuses_to_usurp_a_live_socket(tmp_path):
+    """A second daemon on the same socket must refuse to start (a silent
+    takeover would split one shared envelope in two); a stale socket
+    left by a crash is reclaimed."""
+    sock = _daemon_socket(tmp_path)
+    with CrispyDaemon(sock):
+        with pytest.raises(StateBackendError):
+            CrispyDaemon(sock).start()
+    # the context exit unlinked the socket; simulate a crash leftover
+    open(sock, "w").close()
+    d = CrispyDaemon(sock).start()        # reclaims the stale path
+    try:
+        assert DaemonBackend(sock).ping()
+    finally:
+        d.stop()
+
+
+@needs_unix_sockets
+def test_daemon_crash_surfaces_clean_error_and_restart_recovers(tmp_path):
+    """Daemon dies: clients get StateBackendUnavailable (no hang, no
+    garbage). Daemon restarts on the same socket + root: the same client
+    object fails over transparently and the state is intact."""
+    sock = _daemon_socket(tmp_path)
+    root = str(tmp_path / "dstate")
+    daemon = CrispyDaemon(sock, root=root).start()
+    client = DaemonBackend(sock)
+    budget = ProfilingBudget(max_points=5, backend=client)
+    assert budget.try_spend() and budget.try_spend()
+    daemon.stop()                         # "crash"
+
+    with pytest.raises(StateBackendUnavailable):
+        client.read("anything")
+    with pytest.raises(StateBackendUnavailable):
+        budget.try_spend()                # budget surfaces it too
+
+    daemon2 = CrispyDaemon(sock, root=root).start()
+    try:
+        assert budget.points_spent == 2   # state survived via the root
+        assert budget.try_spend()
+        assert budget.points_spent == 3
+    finally:
+        daemon2.stop()
+
+
+@needs_unix_sockets
+def test_daemon_entrypoint_lifecycle(tmp_path):
+    """python -m repro.state.daemon: start, --ping, serve a client,
+    --shutdown -> foreground process exits 0 (the CI smoke contract)."""
+    sock = _daemon_socket(tmp_path)
+    env = {**os.environ,
+           "PYTHONPATH": SRC + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.state.daemon", "--socket", sock,
+         "--root", str(tmp_path / "droot")],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    try:
+        deadline = time.monotonic() + 10.0
+        client = DaemonBackend(sock, timeout_s=2.0)
+        while time.monotonic() < deadline:
+            if os.path.exists(sock) and client.ping():
+                break
+            assert proc.poll() is None, proc.communicate()[0]
+            time.sleep(0.05)
+        else:
+            pytest.fail("daemon never became ready")
+        ping = subprocess.run(
+            [sys.executable, "-m", "repro.state.daemon", "--socket", sock,
+             "--ping"], env=env, capture_output=True, text=True)
+        assert ping.returncode == 0 and "pong" in ping.stdout
+        client.append("log", {"ok": 1})
+        assert client.read("log")[0] == [{"ok": 1}]
+        down = subprocess.run(
+            [sys.executable, "-m", "repro.state.daemon", "--socket", sock,
+             "--shutdown"], env=env, capture_output=True, text=True)
+        assert down.returncode == 0
+        out, _ = proc.communicate(timeout=10)
+        assert proc.returncode == 0, out
+        assert "clean shutdown" in out
+        assert not os.path.exists(sock)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+# -- the full stack over one backend ------------------------------------------
+
+
+@needs_unix_sockets
+def test_two_service_processes_one_daemon_one_envelope(tmp_path):
+    """Acceptance, end to end: two AllocationService *processes* pointed
+    at one crispy-daemon share the profile store, the model registry AND
+    one profiling envelope; the combined fresh profile runs stay within
+    the shared max_points."""
+    sock = _daemon_socket(tmp_path)
+    code = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.allocator import AllocationRequest, AllocationService
+from repro.core.catalog import aws_like_catalog
+from repro.core.simulator import (GiB, build_history, make_profile_fn,
+                                  scout_like_jobs)
+from repro.profiling import ProfilingBudget
+from repro.state import DaemonBackend
+which = int(sys.argv[1])
+jobs = scout_like_jobs()
+catalog = aws_like_catalog()
+history = build_history(jobs, catalog)
+mine = jobs[:8] if which == 0 else jobs[4:12]   # 4 contended signatures
+backend = DaemonBackend({sock!r})
+budget = ProfilingBudget(max_points=30, backend=backend)
+with AllocationService(catalog, history, backend=backend,
+                       adaptive=True, budget=budget) as svc:
+    for j in mine:
+        full = j.dataset_gib * GiB
+        r = svc.allocate(AllocationRequest(j.name, make_profile_fn(j),
+                                           full, anchor=full * 0.01),
+                         timeout=120)
+        assert r.selection is not None
+    print("PROFILED", svc.stats.profile_calls)
+""".format(src=SRC, sock=sock)
+    with CrispyDaemon(sock, root=str(tmp_path / "dstate")):
+        procs = [subprocess.Popen([sys.executable, "-c", code, str(i)],
+                                  stdout=subprocess.PIPE,
+                                  stderr=subprocess.PIPE, text=True)
+                 for i in (0, 1)]
+        outs = [p.communicate(timeout=300) for p in procs]
+        fresh = 0
+        for p, (out, err) in zip(procs, outs):
+            assert p.returncode == 0, err[-3000:]
+            fresh += int(out.split("PROFILED")[1].strip())
+        backend = DaemonBackend(sock)
+        budget = ProfilingBudget(max_points=30, backend=backend)
+        # the shared envelope bounds COMBINED fresh runs across processes
+        assert fresh <= 30
+        assert budget.points_spent == fresh
+        # both processes' confident models landed in one registry
+        registry = BackendModelRegistry(backend)
+        jobs = scout_like_jobs()
+        linear = [j.name for j in jobs[:12] if j.mem_profile == "linear"]
+        assert any(name in registry for name in linear)
+
+
+def test_service_backend_kind_and_shared_budget_in_stats(tmp_path):
+    from repro.serve.engine import AllocationEndpoint
+    jobs = scout_like_jobs()
+    catalog = aws_like_catalog()
+    history = build_history(jobs, catalog)
+    be = InMemoryBackend()
+    budget = ProfilingBudget(max_points=50, backend=be)
+    with AllocationService(catalog, history, backend=be, adaptive=True,
+                           budget=budget) as svc:
+        ep = AllocationEndpoint(svc)
+        j = jobs[0]
+        wire = ep.handle(job=j.name, profile_at=make_profile_fn(j),
+                         full_size=j.dataset_gib * GiB,
+                         anchor=j.dataset_gib * GiB * 0.01)
+        assert wire["backend"] == "memory"
+        stats = ep.stats()
+        assert stats["backend"] == "memory"
+        assert stats["budget"]["shared"] is True
+        assert stats["budget"]["backend"] == "memory"
+        assert stats["budget"]["points_spent"] == wire["profiled"]
