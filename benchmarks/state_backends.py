@@ -1,5 +1,5 @@
 """Shared-state backend comparison: FileBackend vs crispy-daemon under
-multi-process load.
+multi-process load, over either daemon transport.
 
 Spawns N real worker processes per backend. Each worker hammers the same
 three shared structures the allocation stack uses:
@@ -14,17 +14,23 @@ Correctness is asserted, not assumed: across all workers the envelope
 must grant exactly `max_points` reservations (never over-granted), and
 every appended log row must be visible afterwards.
 
-The daemon section starts its own `python -m repro.state.daemon` child
-(or reuses a daemon at $CRISPY_DAEMON_SOCKET when one is already
-running, e.g. the CI smoke step) and shuts it down cleanly. Where
-unix-domain sockets are unavailable the section is skipped and only the
-file numbers are reported.
+`--transport unix` (default) talks to the daemon over its unix socket;
+`--transport tcp` exercises the multi-host path over loopback TCP — the
+same protocol, framed over `--listen host:port`. The daemon section
+starts its own `python -m repro.state.daemon` child (or reuses a daemon
+at $CRISPY_DAEMON_SOCKET / $CRISPY_DAEMON_TCP when one is already
+running, e.g. the CI smoke steps) and shuts it down cleanly. If
+$CRISPY_DAEMON_TOKEN is set, both the spawned daemon and every client
+inherit it, so the run exercises the auth handshake too. Where unix
+sockets are unavailable the unix section is skipped and only the file
+numbers are reported.
 
 Final CSV: state_backends,<us_per_op_file>,<daemon_vs_file_speedup>
 (speedup 0.0 when the daemon section was skipped).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -124,59 +130,96 @@ def bench_file() -> float:
     return _report("file", rows)
 
 
-def bench_daemon() -> float:
+def _spawn_daemon(transport: str):
+    """(address, child|None) for a fresh daemon on `transport`, or
+    (None, None) when it could not be started."""
+    tmp = tempfile.mkdtemp(prefix=f"crispy-bench-daemon-{transport}-")
+    env = {**os.environ,
+           "PYTHONPATH": _SRC + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    if transport == "unix":
+        addr = os.path.join(tmp, "d.sock")
+        argv = [sys.executable, "-m", "repro.state.daemon", "--socket", addr]
+        ready = lambda: os.path.exists(addr)            # noqa: E731
+    else:
+        port_file = os.path.join(tmp, "addr")
+        argv = [sys.executable, "-m", "repro.state.daemon",
+                "--listen", "127.0.0.1:0", "--port-file", port_file]
+        ready = lambda: os.path.exists(port_file)       # noqa: E731
+    child = subprocess.Popen(argv, env=env, stdout=subprocess.PIPE,
+                             stderr=subprocess.STDOUT, text=True)
+    for _ in range(100):
+        if ready():
+            break
+        if child.poll() is not None:
+            print(f"daemon({transport}): skipped (failed to start: "
+                  f"{child.communicate()[0][-500:]})")
+            return None, None
+        time.sleep(0.05)
+    else:
+        child.kill()
+        print(f"daemon({transport}): skipped (did not become ready)")
+        return None, None
+    if transport == "tcp":
+        with open(port_file) as f:
+            addr = f.read().strip()
+    from repro.state import DaemonBackend
+    client = DaemonBackend(addr, timeout_s=2.0)
+    for _ in range(100):
+        if client.ping():
+            return addr, child
+        time.sleep(0.05)
+    child.kill()
+    print(f"daemon({transport}): skipped (never answered ping)")
+    return None, None
+
+
+def bench_daemon(transport: str = "unix") -> float:
     """0.0 when skipped (no unix sockets / daemon failed to start)."""
-    if not HAS_UNIX_SOCKETS:
-        print("daemon: skipped (no unix-domain sockets on this platform)")
+    if transport == "unix" and not HAS_UNIX_SOCKETS:
+        print("daemon(unix): skipped (no unix-domain sockets on this "
+              "platform)")
         return 0.0
     from repro.state import DaemonBackend
-    env_sock = os.environ.get("CRISPY_DAEMON_SOCKET")
-    if env_sock and DaemonBackend(env_sock, timeout_s=2.0).ping():
-        sock, child = env_sock, None
-        print(f"daemon: reusing running daemon at {sock}")
+    label = f"daemon({transport})"
+    reuse_env = ("CRISPY_DAEMON_SOCKET" if transport == "unix"
+                 else "CRISPY_DAEMON_TCP")
+    env_addr = os.environ.get(reuse_env)
+    if env_addr and DaemonBackend(env_addr, timeout_s=2.0).ping():
+        addr, child = env_addr, None
+        print(f"{label}: reusing running daemon at {addr}")
     else:
-        tmp = tempfile.mkdtemp(prefix="crispy-bench-daemon-")
-        sock = os.path.join(tmp, "d.sock")
-        child = subprocess.Popen(
-            [sys.executable, "-m", "repro.state.daemon", "--socket", sock],
-            env={**os.environ,
-                 "PYTHONPATH": _SRC + os.pathsep
-                 + os.environ.get("PYTHONPATH", "")},
-            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
-        client = DaemonBackend(sock, timeout_s=2.0)
-        for _ in range(100):
-            if os.path.exists(sock) and client.ping():
-                break
-            if child.poll() is not None:
-                print("daemon: skipped (failed to start: "
-                      f"{child.communicate()[0][-500:]})")
-                return 0.0
-            time.sleep(0.05)
-        else:
-            child.kill()
-            print("daemon: skipped (did not become ready)")
+        addr, child = _spawn_daemon(transport)
+        if addr is None:
             return 0.0
     try:
-        rows = _run_workers("daemon", sock)
-        _verify("daemon", DaemonBackend(sock), rows)
-        return _report("daemon", rows)
+        rows = _run_workers("daemon", addr)
+        _verify(label, DaemonBackend(addr), rows)
+        return _report(label, rows)
     finally:
         if child is not None:
-            DaemonBackend(sock).shutdown_daemon()
+            DaemonBackend(addr).shutdown_daemon()
             child.wait(timeout=10)
             assert child.returncode == 0, \
                 f"daemon did not shut down cleanly: rc={child.returncode}"
-            print("daemon: clean shutdown")
+            print(f"{label}: clean shutdown")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--transport", choices=("unix", "tcp"), default="unix",
+                    help="daemon transport to benchmark against "
+                         "(default: unix)")
+    # argv=None means "called programmatically" (benchmarks/run.py): use
+    # defaults rather than swallowing the harness's own sys.argv
+    args = ap.parse_args(argv if argv is not None else [])
     us_file = bench_file()
-    us_daemon = bench_daemon()
+    us_daemon = bench_daemon(args.transport)
     speedup = us_file / us_daemon if us_daemon else 0.0
     if us_daemon:
-        print(f"daemon vs file: {speedup:.2f}x per contended iteration")
+        print(f"daemon({args.transport}) vs file: {speedup:.2f}x per "
+              f"contended iteration")
     print(f"state_backends,{us_file:.1f},{speedup:.2f}")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -24,6 +24,40 @@ atomic reservations. In production the daemon is its own process:
       --ping      # exits 0 iff alive
       --shutdown  # daemon drains, unlinks the socket, exits 0
 
+Transports & compaction
+-----------------------
+The unix socket serves co-located services; `--listen host:port` serves
+the SAME state over TCP so allocation services on other hosts share one
+envelope/registry/store (this demo connects service B over loopback
+TCP). TCP crosses the unix-permission boundary, so gate it with a
+shared token — `--auth-token SECRET` or $CRISPY_DAEMON_TOKEN on the
+daemon, `DaemonBackend("host:port", auth_token=...)` (or the same env
+var) on clients; the client then authenticates each connection before
+its first request:
+
+  PYTHONPATH=src python -m repro.state.daemon \\
+      --socket /tmp/crispy.sock --listen 0.0.0.0:7421 \\
+      --auth-token SECRET --root ./crispy-state
+  svc_remote = AllocationService(catalog, history,
+                                 backend=DaemonBackend(
+                                     "crispy-host:7421",
+                                     auth_token="SECRET"))
+  # health-check a tcp daemon
+  PYTHONPATH=src python -m repro.state.daemon \\
+      --listen crispy-host:7421 --ping
+
+Append-only logs grow forever under "later rows win", so the daemon
+folds them into snapshot-plus-tail form: `--compact-after N`
+auto-compacts a log namespace every N appends, `--compact-max-age S`
+additionally drops rows older than S seconds, and
+`--registry-max-records N` / `--registry-max-age S` evict the oldest
+model-registry records after each flush, tombstoning them so sibling
+services cannot resurrect the eviction. On demand:
+`ProfileStore.compact()` / `DaemonBackend.compact(ns)` /
+`DaemonBackend.evict_registry(...)` — this demo runs a compaction pass
+after the two services finish and prints how far the shared profile log
+shrank. With a FileBackend --root the shrunken log survives restarts.
+
 The demo runs the daemon in-process (`CrispyDaemon(...).start()`) for a
 self-contained script; everything else is identical.
 """
@@ -84,10 +118,12 @@ def demo_allocation(n_requests: int = 16, workers: int = 8):
 
 
 def demo_shared_state(n_jobs: int = 8):
-    """Two allocation services sharing one crispy-daemon: profile points,
-    confident models and a single budget envelope are common property —
-    the second service answers from the first one's work without a single
-    fresh profile run."""
+    """Two allocation services sharing one crispy-daemon — service A over
+    the unix socket, service B over loopback TCP (the multi-host
+    transport): profile points, confident models and a single budget
+    envelope are common property, so B answers from A's work without a
+    single fresh profile run. A final compaction pass folds the shared
+    profile log back down to one row per point."""
     if not HAS_UNIX_SOCKETS:
         print("shared state: skipped (no unix-domain sockets)")
         return
@@ -96,9 +132,10 @@ def demo_shared_state(n_jobs: int = 8):
     history = build_history(jobs, catalog)
     tmp = tempfile.mkdtemp(prefix="crispy-demo-")
     sock = os.path.join(tmp, "crispy.sock")
-    with CrispyDaemon(sock, root=os.path.join(tmp, "state")):
-        def serve_all(tag):
-            backend = DaemonBackend(sock)
+    with CrispyDaemon(sock, root=os.path.join(tmp, "state"),
+                      listen="127.0.0.1:0") as daemon:
+        def serve_all(tag, address):
+            backend = DaemonBackend(address)
             budget = ProfilingBudget(charge_s=600.0 * len(jobs),
                                      backend=backend)
             with AllocationService(catalog, history, backend=backend,
@@ -109,18 +146,23 @@ def demo_shared_state(n_jobs: int = 8):
                         job=j.name, profile_at=make_profile_fn(j),
                         full_size=full, anchor=full * 0.01)
                 s, snap = svc.stats, budget.snapshot()
-                print(f"  service {tag} [{svc.backend_kind}]: "
+                print(f"  service {tag} [{svc.backend_kind} via "
+                      f"{svc.backend_transport}:{svc.backend_address}]: "
                       f"{s.profile_calls} fresh profiles, "
                       f"{s.registry_hits} registry hits, "
                       f"{s.store_hits} store hits; shared envelope "
                       f"{snap['charged_s']:.0f}/{snap['charge_s']:.0f}s "
                       f"charged")
                 return s.profile_calls
-        first = serve_all("A")
-        second = serve_all("B")          # same daemon: all reuse
+        first = serve_all("A", sock)                 # co-located: unix
+        second = serve_all("B", daemon.tcp_address)  # "remote": tcp
         print(f"shared state: service B re-profiled {second} points "
               f"after A spent {first} (daemon shares store+registry+"
-              f"budget)")
+              f"budget across transports)")
+        stats = DaemonBackend(sock).compact("profiles")
+        print(f"  compaction: profile log {stats['before']} -> "
+              f"{stats['after']} rows ({stats['dropped']} shadowed rows "
+              f"dropped; survives --root restarts)")
 
 
 def demo(arch: str, n_requests: int = 12, slots: int = 4):

@@ -236,17 +236,33 @@ class AllocationService:
         for rec in self.registry.records():
             self.classifier.observe(rec.signature, rec.sizes, rec.mems)
 
+    def _shared_backend(self):
+        for b in (self.backend, getattr(self.store, "backend", None),
+                  getattr(self.registry, "backend", None),
+                  getattr(self.budget, "backend", None)):
+            if b is not None:
+                return b
+        return None
+
     @property
     def backend_kind(self) -> Optional[str]:
         """Kind of the shared-state backend this service operates over
         ("memory" | "file" | "daemon"), from whichever shared component
         carries one; None for a fully process-local service."""
-        for b in (self.backend, getattr(self.store, "backend", None),
-                  getattr(self.registry, "backend", None),
-                  getattr(self.budget, "backend", None)):
-            if b is not None:
-                return getattr(b, "kind", None)
-        return None
+        return getattr(self._shared_backend(), "kind", None)
+
+    @property
+    def backend_transport(self) -> Optional[str]:
+        """Transport of a daemon backend ("unix" | "tcp"); None for
+        local backends — the monitoring signal that distinguishes a
+        co-located daemon from a multi-host one."""
+        return getattr(self._shared_backend(), "transport", None)
+
+    @property
+    def backend_address(self) -> Optional[str]:
+        """Address a daemon backend connects to (unix path or host:port);
+        None for local backends."""
+        return getattr(self._shared_backend(), "address", None)
 
     # -- public -------------------------------------------------------------
     def submit(self, req: AllocationRequest) -> "Future[AllocationResponse]":

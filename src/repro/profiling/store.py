@@ -9,9 +9,15 @@ state in-process (InMemoryBackend), across processes on one host
 
   ProfileStore           (signature, size) -> ProfileResult rows plus
                          per-signature calibrated anchors, kept in a
-                         backend append-only log. Later rows win, so the
-                         log needs no compaction; cross-process freshness
-                         is pull-based via `refresh()` (the
+                         backend append-only log. Later rows win, so
+                         readers never NEED compaction — but re-profiled
+                         points and recalibrated anchors shadow earlier
+                         rows forever, so `compact()` folds the log into
+                         snapshot-plus-tail form (one row per identity,
+                         tombstoned points dropped) and `evict()`
+                         tombstones a point across every process sharing
+                         the backend. Cross-process freshness is
+                         pull-based via `refresh()` (the
                          AllocationService refreshes once per batch).
                          `ProfileStore(path)` keeps the PR-2 file layout:
                          a FileBackend JSONL at exactly that path.
@@ -39,12 +45,13 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.allocator.registry import (ModelRecord, ModelRegistry,
                                       REGISTRY_VERSION)
 from repro.core.profiler import ProfileResult
 from repro.state import FileBackend, StateBackend
+from repro.state.compaction import prune_registry_doc
 from repro.state.file_backend import FileLock, HAS_FCNTL  # noqa: F401 (compat)
 
 STORE_VERSION = 2
@@ -124,6 +131,12 @@ class ProfileStore:
 
     def _apply_locked(self, row: Dict) -> None:
         kind = row.get("kind")
+        if row.get("tombstone"):
+            if kind == "profile":
+                self._points.pop((row["sig"], float(row["size"])), None)
+            elif kind == "anchor":
+                self._anchors.pop(row["sig"], None)
+            return
         if kind == "profile":
             key = (row["sig"], float(row["size"]))
             self._points[key] = ProfileResult.from_dict(row["result"])
@@ -136,16 +149,44 @@ class ProfileStore:
         self.backend.append(self.namespace,
                             {"kind": "profile", "sig": signature,
                              "size": float(size),
-                             "result": result.to_dict()})
+                             "result": result.to_dict(),
+                             "ts": time.time()})
         with self._lock:
             self._points[(signature, float(size))] = result
 
     def put_anchor(self, signature: str, anchor: float) -> None:
         self.backend.append(self.namespace,
                             {"kind": "anchor", "sig": signature,
-                             "anchor": float(anchor)})
+                             "anchor": float(anchor), "ts": time.time()})
         with self._lock:
             self._anchors[signature] = float(anchor)
+
+    def evict(self, signature: str, size: float) -> None:
+        """Tombstone one profile point: siblings drop it on their next
+        `refresh()`, and the next `compact()` erases it (and the
+        tombstone) from the log for good."""
+        self.backend.append(self.namespace,
+                            {"kind": "profile", "sig": signature,
+                             "size": float(size), "tombstone": True,
+                             "ts": time.time()})
+        with self._lock:
+            self._points.pop((signature, float(size)), None)
+
+    # -- maintenance --------------------------------------------------------
+    KEY_FIELDS = ("kind", "sig", "size")
+
+    def compact(self, max_age_s: Optional[float] = None) -> Dict:
+        """Fold the backing log: one row per (kind, sig, size) identity —
+        the LAST appended, which for an evicted point is its tombstone
+        (kept so siblings with stale cursors still observe the
+        deletion). Given `max_age_s`, surviving rows older than that —
+        tombstones included — are evicted. Point counts are unchanged
+        unless rows are tombstoned or over-age; cursors held by sibling
+        processes stay valid. Returns the backend's
+        {"before", "after", "dropped"} stats."""
+        return self.backend.compact(self.namespace,
+                                    key_fields=self.KEY_FIELDS,
+                                    max_age_s=max_age_s)
 
 
 class BackendModelRegistry(ModelRegistry):
@@ -161,9 +202,12 @@ class BackendModelRegistry(ModelRegistry):
                  autosave: bool = True, path: Optional[str] = None):
         self.backend = backend
         self.namespace = namespace
-        # evictions this registry performed, by time: without them the
-        # merge-before-CAS in _save_locked would re-import the evicted
-        # record straight from the backend document and resurrect it
+        # evictions, by time. They are PERSISTED in the backend document
+        # ("tombstones"): without them the merge-before-CAS in
+        # _save_locked — ours or any sibling process's — would re-import
+        # the evicted record straight from the backend document and
+        # resurrect it. A genuinely newer record still supersedes its
+        # tombstone on both sides of the merge.
         self._tombstones: Dict[str, float] = {}
         super().__init__(path=None, autosave=autosave)
         # the base class persists iff `path is not None`; backend-only
@@ -172,11 +216,25 @@ class BackendModelRegistry(ModelRegistry):
             else f"<{backend.kind}:{namespace}>"
         self.refresh()
 
+    # how long a persisted eviction tombstone lives (see
+    # repro.state.compaction.DEFAULT_TOMBSTONE_TTL_S)
+    TOMBSTONE_TTL_S = 24 * 3600.0
+
     # -- codec --------------------------------------------------------------
     def _encode_locked(self) -> Dict:
+        # a tombstone superseded by a newer record of the same signature —
+        # or older than the TTL (every live sibling has long since merged
+        # the eviction) — has done its job; don't persist it forever
+        horizon = time.time() - self.TOMBSTONE_TTL_S
+        tombstones = {
+            sig: ts for sig, ts in self._tombstones.items()
+            if ts >= horizon
+            and (sig not in self._records
+                 or self._records[sig].created_at <= ts)}
         return {"version": REGISTRY_VERSION,
                 "records": {sig: rec.to_dict()
-                            for sig, rec in self._records.items()}}
+                            for sig, rec in self._records.items()},
+                "tombstones": tombstones}
 
     @staticmethod
     def _decode(value: Optional[Dict]) -> Dict[str, ModelRecord]:
@@ -185,7 +243,24 @@ class BackendModelRegistry(ModelRegistry):
         return {sig: ModelRecord.from_dict(sig, d)
                 for sig, d in value.get("records", {}).items()}
 
-    def _merge_locked(self, disk_records: Dict[str, ModelRecord]) -> None:
+    @staticmethod
+    def _decode_tombstones(value: Optional[Dict]) -> Dict[str, float]:
+        if not value:
+            return {}
+        return {sig: float(ts)
+                for sig, ts in (value.get("tombstones") or {}).items()}
+
+    def _merge_locked(self, disk_records: Dict[str, ModelRecord],
+                      disk_tombstones: Optional[Dict[str, float]] = None
+                      ) -> None:
+        # sibling evictions first: they delete any copy of ours that is
+        # not strictly newer than the eviction
+        for sig, ts in (disk_tombstones or {}).items():
+            mine = self._records.get(sig)
+            if mine is not None and mine.created_at > ts:
+                continue                # our record outlives the eviction
+            self._records.pop(sig, None)
+            self._tombstones[sig] = max(ts, self._tombstones.get(sig, ts))
         for sig, rec in disk_records.items():
             evicted_at = self._tombstones.get(sig)
             if evicted_at is not None:
@@ -195,6 +270,15 @@ class BackendModelRegistry(ModelRegistry):
             mine = self._records.get(sig)
             if mine is None or rec.created_at > mine.created_at:
                 self._records[sig] = rec
+
+    def put(self, signature: str, model, candidate: Optional[str] = None,
+            sizes=(), mems=(), defer_save: bool = False):
+        with self._lock:
+            # re-registering a signature revokes our own eviction of it
+            self._tombstones.pop(signature, None)
+            return super().put(signature, model, candidate=candidate,
+                               sizes=sizes, mems=mems,
+                               defer_save=defer_save)
 
     def evict(self, signature: str) -> bool:
         with self._lock:
@@ -206,11 +290,31 @@ class BackendModelRegistry(ModelRegistry):
                     self._save_locked(self.path)
             return gone
 
+    def prune(self, max_records: Optional[int] = None,
+              max_age_s: Optional[float] = None) -> List[str]:
+        """Evict records older than `max_age_s` and/or the oldest records
+        beyond `max_records`, tombstoning each (shared across processes)
+        with ONE flush. Same policy, same code as the daemon-side
+        eviction: both delegate to `prune_registry_doc`. Returns the
+        evicted signatures."""
+        with self._lock:
+            new_value, evicted = prune_registry_doc(
+                self._encode_locked(), max_records=max_records,
+                max_age_s=max_age_s, tombstone_ttl_s=self.TOMBSTONE_TTL_S)
+            if evicted:
+                self._records = self._decode(new_value)
+                self._tombstones = self._decode_tombstones(new_value)
+                self._dirty = True
+                if self.autosave and self.path is not None:
+                    self._save_locked(self.path)
+            return evicted
+
     # -- persistence (overrides the file I/O of the base class) -------------
     def _save_locked(self, path: Optional[str] = None) -> None:
         while True:
             value, version = self.backend.load(self.namespace, self.DOC_KEY)
-            self._merge_locked(self._decode(value))
+            self._merge_locked(self._decode(value),
+                               self._decode_tombstones(value))
             won, _cur, _ver = self.backend.cas(
                 self.namespace, self.DOC_KEY, version, self._encode_locked())
             if won:
@@ -222,20 +326,22 @@ class BackendModelRegistry(ModelRegistry):
         value, _version = self.backend.load(self.namespace, self.DOC_KEY)
         records = self._decode(value)
         with self._lock:
+            # explicit reload adopts the backend wholesale, evictions
+            # included
             self._records = records
-            self._tombstones.clear()    # explicit reload adopts the backend
+            self._tombstones = self._decode_tombstones(value)
             self._dirty = False
             return len(self._records)
 
     def refresh(self) -> int:
-        """Merge sibling processes' records into memory (no write).
-        Returns the number of records imported or updated."""
+        """Merge sibling processes' records AND evictions into memory (no
+        write). Returns the number of records imported or updated."""
         value, _version = self.backend.load(self.namespace, self.DOC_KEY)
-        disk = self._decode(value)
         with self._lock:
             before = {sig: rec.created_at
                       for sig, rec in self._records.items()}
-            self._merge_locked(disk)
+            self._merge_locked(self._decode(value),
+                               self._decode_tombstones(value))
             return sum(1 for sig, rec in self._records.items()
                        if before.get(sig) != rec.created_at)
 

@@ -175,9 +175,11 @@ class AllocationEndpoint:
 
     def handle(self, timeout: Optional[float] = None, **payload) -> Dict:
         wire = self.to_wire(self.submit(**payload).result(timeout))
-        # which shared-state transport served this answer ("memory" /
-        # "file" / "daemon", None for a process-local service)
+        # which shared-state backend served this answer ("memory" /
+        # "file" / "daemon", None for a process-local service), and for a
+        # daemon, over which transport ("unix" | "tcp")
         wire["backend"] = self.service.backend_kind
+        wire["backend_transport"] = self.service.backend_transport
         return wire
 
     def stats(self) -> Dict:
@@ -185,6 +187,8 @@ class AllocationEndpoint:
         snapshot (including shared-envelope state), wire-friendly."""
         s = self.service.stats
         out = {"backend": self.service.backend_kind,
+               "backend_transport": self.service.backend_transport,
+               "backend_address": self.service.backend_address,
                "requests": s.requests, "batches": s.batches,
                "profile_calls": s.profile_calls,
                "cache_hits": s.cache_hits, "store_hits": s.store_hits,

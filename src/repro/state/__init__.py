@@ -16,39 +16,58 @@ one `StateBackend` protocol:
                    module in the repo that may import fcntl; `FileLock`
                    lives here.
   daemon.py        `CrispyDaemon` server + `DaemonBackend` client —
-                   single-writer state over a unix-domain socket, so
-                   contended reservations are one RPC instead of a CAS
-                   retry loop through the filesystem.
+                   single-writer state over a unix-domain socket and/or
+                   TCP, so contended reservations are one RPC instead of
+                   a CAS retry loop through the filesystem, and services
+                   on OTHER hosts share the same substrate.
+  transport.py     address parsing ("/path" vs "host:port" vs
+                   "tcp://host:port"), newline-JSON framing, and the
+                   shared-token auth frame both daemon and client speak.
+  compaction.py    `fold_log` (snapshot-plus-tail log folding, tombstone
+                   and age handling) + `prune_registry_doc` (size/age
+                   registry eviction with doc tombstones). Every backend
+                   exposes them via `compact(ns, ...)`.
 
 Daemon lifecycle (full wire protocol in daemon.py):
 
   start     python -m repro.state.daemon --socket /tmp/crispy.sock \
-                [--root state-dir | --memory]
+                [--listen 0.0.0.0:7421] [--auth-token SECRET] \
+                [--root state-dir | --memory] \
+                [--compact-after N] [--registry-max-records N]
             With --root the daemon persists through a FileBackend and a
             restart resumes from disk; --memory serves volatile state.
             The socket path defaults to $CRISPY_DAEMON_SOCKET, else
-            <tmpdir>/crispy-daemon.sock.
-  connect   backend = DaemonBackend("/tmp/crispy.sock")
+            <tmpdir>/crispy-daemon.sock; --listen alone makes the daemon
+            tcp-only. TCP should carry an auth token ($CRISPY_DAEMON_TOKEN
+            or --auth-token).
+  connect   backend = DaemonBackend("/tmp/crispy.sock")        # unix
+            backend = DaemonBackend("crispy-host:7421")        # tcp
             then AllocationService(..., backend=backend) or
             ProfileStore(backend=backend) / ProfilingBudget(...,
             backend=backend). Clients reconnect once on transport errors
             (daemon restarts are transparent); a daemon that stays down
-            raises StateBackendUnavailable.
+            raises StateBackendUnavailable naming the unix path or
+            host:port it could not reach.
   health    python -m repro.state.daemon --socket ... --ping
+            (or --listen host:port --ping for a tcp daemon)
   shutdown  python -m repro.state.daemon --socket ... --shutdown
             (or SIGTERM/SIGINT) — the server drains, unlinks the socket,
             and exits 0.
 
 Choosing a backend: `InMemoryBackend` for tests and single-process
 embedding; `FileBackend` for a handful of processes on one host with no
-extra moving parts; `DaemonBackend` when reservation traffic is contended
-or you want one process to own all writes.
-`benchmarks/state_backends.py` measures file vs daemon under
-multi-process load.
+extra moving parts; `DaemonBackend` when reservation traffic is contended,
+you want one process to own all writes, or clients live on other hosts
+(tcp). `benchmarks/state_backends.py --transport {unix,tcp}` measures
+file vs daemon under multi-process load on either transport.
 """
 from repro.state.backend import (CASConflict, InMemoryBackend, StateBackend,
                                  StateBackendError, StateBackendUnavailable)
+from repro.state.compaction import (DEFAULT_KEY_FIELDS, fold_log,
+                                    prune_registry_doc)
 from repro.state.file_backend import FileBackend, FileLock, HAS_FCNTL
+from repro.state.transport import (AUTH_TOKEN_ENV, default_auth_token,
+                                   describe_address, parse_address)
 
 # daemon exports resolve lazily (PEP 562): `python -m repro.state.daemon`
 # would otherwise import the module twice (package import + runpy __main__)
@@ -57,10 +76,12 @@ _DAEMON_EXPORTS = ("CrispyDaemon", "DaemonBackend", "HAS_UNIX_SOCKETS",
                    "default_socket_path")
 
 __all__ = [
-    "CASConflict", "CrispyDaemon", "DaemonBackend", "FileBackend",
-    "FileLock", "HAS_FCNTL", "HAS_UNIX_SOCKETS", "InMemoryBackend",
-    "StateBackend", "StateBackendError", "StateBackendUnavailable",
-    "default_socket_path",
+    "AUTH_TOKEN_ENV", "CASConflict", "CrispyDaemon", "DaemonBackend",
+    "DEFAULT_KEY_FIELDS", "FileBackend", "FileLock", "HAS_FCNTL",
+    "HAS_UNIX_SOCKETS", "InMemoryBackend", "StateBackend",
+    "StateBackendError", "StateBackendUnavailable", "default_auth_token",
+    "default_socket_path", "describe_address", "fold_log", "parse_address",
+    "prune_registry_doc",
 ]
 
 

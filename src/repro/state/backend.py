@@ -44,7 +44,9 @@ from __future__ import annotations
 
 import threading
 from abc import ABC, abstractmethod
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.state.compaction import fold_log
 
 
 class StateBackendError(RuntimeError):
@@ -83,7 +85,24 @@ class StateBackend(ABC):
     @abstractmethod
     def read(self, ns: str, cursor: int = 0) -> Tuple[List[Dict], int]:
         """Records appended since `cursor` (0 = start), plus the new
-        cursor. Cursors are opaque ints valid only for this backend."""
+        cursor. Cursors are opaque ints valid only for this backend;
+        they stay monotone across `compact` — a cursor taken before a
+        compaction re-reads the folded snapshot (rows are idempotent
+        under "later wins", so re-application is harmless), never a torn
+        or partial view."""
+
+    def compact(self, ns: str,
+                key_fields: Optional[Sequence[str]] = None,
+                max_age_s: Optional[float] = None) -> Dict:
+        """Fold the `ns` log into snapshot-plus-tail form (see
+        repro.state.compaction.fold_log): keep the LAST row per identity
+        key — a tombstone row survives as its identity's last word, so
+        stale readers still observe the deletion — and drop over-age
+        survivors. Returns {"before": n, "after": m, "dropped": n - m}.
+        Pre-compaction cursors remain valid (they re-read the snapshot).
+        Backends that cannot rewrite their log raise StateBackendError."""
+        raise StateBackendError(
+            f"{self.kind} backend does not support compaction")
 
     # -- versioned documents ------------------------------------------------
     @abstractmethod
@@ -163,6 +182,10 @@ class InMemoryBackend(StateBackend):
     def __init__(self):
         self._lock = threading.Lock()
         self._logs: Dict[str, List[Dict]] = {}
+        # logical cursor = base + index into the current (possibly folded)
+        # log; compaction bumps the base past every pre-compaction cursor
+        # so stale cursors deterministically re-read the snapshot
+        self._bases: Dict[str, int] = {}
         self._docs: Dict[Tuple[str, str], Tuple[Dict, int]] = {}
 
     def append(self, ns: str, record: Dict) -> None:
@@ -172,8 +195,25 @@ class InMemoryBackend(StateBackend):
     def read(self, ns: str, cursor: int = 0) -> Tuple[List[Dict], int]:
         with self._lock:
             log = self._logs.get(ns, ())
-            rows = [dict(r) for r in log[cursor:]]
-            return rows, len(log)
+            base = self._bases.get(ns, 0)
+            start = max(0, cursor - base)
+            rows = [dict(r) for r in log[start:]]
+            return rows, base + len(log)
+
+    def compact(self, ns: str,
+                key_fields: Optional[Sequence[str]] = None,
+                max_age_s: Optional[float] = None) -> Dict:
+        with self._lock:
+            log = self._logs.get(ns, [])
+            before = len(log)
+            folded = fold_log(log, key_fields=key_fields,
+                              max_age_s=max_age_s)
+            # every pre-compaction cursor is <= base + before == new base,
+            # so each lands at snapshot start after the fold
+            self._bases[ns] = self._bases.get(ns, 0) + before
+            self._logs[ns] = folded
+            return {"before": before, "after": len(folded),
+                    "dropped": before - len(folded)}
 
     def load(self, ns: str, key: str) -> Tuple[Optional[Dict], int]:
         with self._lock:

@@ -1,17 +1,30 @@
-"""crispy-daemon: a single-writer shared-state server over a unix socket.
+"""crispy-daemon: a single-writer shared-state server, unix socket + TCP.
 
 The FileBackend shares state through fcntl locks — correct, but every CAS
 is a lock/read/rewrite of a JSON file and contended reservations retry
 through the filesystem. The daemon centralizes writes the way Ruya
 centralizes its iteratively-updated memory model: ONE process owns the
 state and applies every mutation atomically under one lock, and clients
-talk to it over a newline-delimited JSON protocol on a unix-domain
-socket. `reserve` becomes a single round trip instead of a CAS retry
-loop, so N allocation-service processes arbitrate one profiling envelope
-with no lock convoys.
+talk to it over a newline-delimited JSON protocol (framing/address
+parsing in transport.py). `reserve` becomes a single round trip instead
+of a CAS retry loop, so N allocation-service processes arbitrate one
+profiling envelope with no lock convoys.
+
+Two transports, same protocol, served simultaneously:
+
+  unix socket   --socket /tmp/crispy.sock — co-located services on one
+                host, gated by filesystem permissions.
+  tcp           --listen host:port — services on OTHER hosts share the
+                same envelope/registry/store. Port 0 binds an ephemeral
+                port; the resolved address is announced on stdout and
+                written to --port-file when given. TCP crosses the
+                unix-permission boundary, so pair it with --auth-token
+                (or $CRISPY_DAEMON_TOKEN): the first frame on every
+                connection must then be {"op": "auth", "token": ...}.
 
 Wire protocol (one JSON object per line, request -> response):
 
+  {"op": "auth", "token": ..}                      -> {"ok": true}
   {"op": "ping"}                                   -> {"ok": true}
   {"op": "append", "ns": .., "record": {..}}       -> {"ok": true}
   {"op": "read", "ns": .., "cursor": 0}            -> {"ok": true,
@@ -27,27 +40,47 @@ Wire protocol (one JSON object per line, request -> response):
    "deltas": {..}, "limits": {..}}                 -> {"ok": true,
                                                        "granted": bool,
                                                        "doc": {..}}
+  {"op": "compact", "ns": .., "key_fields": [..],
+   "max_age_s": ..}                                -> {"ok": true,
+                                                       "before": n,
+                                                       "after": m,
+                                                       "dropped": n-m}
+  {"op": "evict_registry", "ns": .., "key": ..,
+   "max_records": .., "max_age_s": ..}             -> {"ok": true,
+                                                       "evicted": [..]}
   {"op": "shutdown"}                               -> {"ok": true}
+
+Log compaction + registry eviction: append-only namespaces grow forever
+under "later rows win", so `compact` folds a log into snapshot-plus-tail
+form (repro.state.compaction) — cursors stay monotone, tombstoned
+identities stay dead, and with a FileBackend --root the shrunken log
+survives restarts. `--compact-after N` auto-compacts any log namespace
+every N appends (optionally dropping rows older than
+`--compact-max-age`); `--registry-max-records` / `--registry-max-age`
+prune the model-registry document after each registry flush, recording
+doc tombstones so sibling services cannot resurrect the eviction.
 
 Lifecycle (also documented in the repro.state package docstring):
 
   start     python -m repro.state.daemon --socket /tmp/crispy.sock \
-                [--root DIR | --memory]
+                [--listen 0.0.0.0:7421] [--root DIR | --memory]
             --root persists state through a FileBackend so a restarted
             daemon resumes where it stopped; --memory (the default when no
-            root is given) serves an InMemoryBackend.
-  health    python -m repro.state.daemon --socket /tmp/crispy.sock --ping
-            exits 0 iff the daemon answers.
-  shutdown  python -m repro.state.daemon --socket /tmp/crispy.sock \
-                --shutdown
+            root is given) serves an InMemoryBackend. With --listen and
+            no --socket the daemon is TCP-only.
+  health    python -m repro.state.daemon --socket ... --ping   (or
+            --listen host:port --ping) exits 0 iff the daemon answers.
+  shutdown  python -m repro.state.daemon --socket ... --shutdown
             asks the daemon to stop; the server drains, unlinks its
             socket and the foreground process exits 0. SIGTERM/SIGINT do
             the same.
 
-Clients (`DaemonBackend`) keep one connection per thread and reconnect
-once on a transport error — a daemon restarted on the same socket path is
-picked up transparently; a daemon that stays down surfaces
-`StateBackendUnavailable` with the socket path in the message.
+Clients (`DaemonBackend`) accept either address form ("/tmp/crispy.sock"
+or "host:port" / "tcp://host:port"), keep one connection per thread and
+reconnect once on a transport error — a daemon restarted on the same
+address is picked up transparently; a daemon that stays down surfaces
+`StateBackendUnavailable` naming the exact unix path or host:port it
+could not reach.
 """
 from __future__ import annotations
 
@@ -60,16 +93,23 @@ import socketserver
 import sys
 import tempfile
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.state.backend import (InMemoryBackend, StateBackend,
                                  StateBackendError, StateBackendUnavailable)
+from repro.state.compaction import prune_registry_doc
 from repro.state.file_backend import FileBackend
+from repro.state.transport import (auth_frame, connect, default_auth_token,
+                                   describe_address, parse_address,
+                                   recv_frame, send_frame)
 
 HAS_UNIX_SOCKETS = hasattr(socket, "AF_UNIX")
 
 DEFAULT_SOCKET = os.path.join(tempfile.gettempdir(), "crispy-daemon.sock")
 DEFAULT_TIMEOUT_S = 10.0
+
+REGISTRY_NS = "registry"
+REGISTRY_KEY = "records"
 
 
 def default_socket_path() -> str:
@@ -79,21 +119,47 @@ def default_socket_path() -> str:
 class CrispyDaemon:
     """Single-writer state server. Owns a local backend (InMemoryBackend
     by default, FileBackend when constructed with `root=` for durability
-    across restarts) and serializes every mutation under one lock."""
+    across restarts), serializes every mutation under one lock, and
+    serves it over a unix socket (`socket_path`), TCP (`listen`,
+    "host:port" — port 0 for ephemeral), or both at once."""
 
-    def __init__(self, socket_path: str,
+    def __init__(self, socket_path: Optional[str] = None,
                  backend: Optional[StateBackend] = None,
-                 root: Optional[str] = None):
-        if not HAS_UNIX_SOCKETS:       # pragma: no cover - non-POSIX
+                 root: Optional[str] = None,
+                 listen: Optional[str] = None,
+                 auth_token: Optional[str] = None,
+                 compact_after: Optional[int] = None,
+                 compact_max_age_s: Optional[float] = None,
+                 registry_max_records: Optional[int] = None,
+                 registry_max_age_s: Optional[float] = None):
+        if socket_path is None and listen is None:
             raise StateBackendError(
-                "unix-domain sockets are unavailable on this platform")
+                "CrispyDaemon needs a unix socket_path, a tcp listen "
+                "address, or both")
+        if socket_path is not None and not HAS_UNIX_SOCKETS:
+            raise StateBackendError(        # pragma: no cover - non-POSIX
+                "unix-domain sockets are unavailable on this platform; "
+                "use listen='host:port'")
         if backend is None:
             backend = FileBackend(root) if root else InMemoryBackend()
         self.backend = backend
         self.socket_path = socket_path
+        self.listen = listen
+        self.auth_token = auth_token
+        self.compact_after = compact_after
+        self.compact_max_age_s = compact_max_age_s
+        self.registry_max_records = registry_max_records
+        self.registry_max_age_s = registry_max_age_s
+        self.tcp_address: Optional[str] = None   # resolved after start()
         self._write_lock = threading.Lock()
-        self._server: Optional[socketserver.ThreadingUnixStreamServer] = None
-        self._thread: Optional[threading.Thread] = None
+        self._appends_since_compact: Dict[str, int] = {}
+        self._servers: List[socketserver.BaseServer] = []
+        # servers whose serve_forever loop was started: shutdown() on a
+        # never-served socketserver blocks forever on its is-shut-down
+        # event, so stop() must only shut these down and merely close
+        # the rest (a bound-but-unserved server from a failed start())
+        self._serving: set = set()
+        self._threads: List[threading.Thread] = []
         # open client connections, severed on stop() so handler threads
         # (daemon_threads) don't keep serving a "stopped" daemon
         self._conns: set = set()
@@ -103,11 +169,12 @@ class CrispyDaemon:
     def handle_request(self, req: Dict) -> Dict:
         op = req.get("op")
         b = self.backend
-        if op == "ping":
+        if op in ("ping", "auth"):      # auth is a no-op once admitted
             return {"ok": True, "kind": b.kind}
         if op == "append":
             with self._write_lock:
                 b.append(req["ns"], req["record"])
+                self._maybe_autocompact_locked(req["ns"])
             return {"ok": True}
         if op == "read":
             rows, cursor = b.read(req["ns"], int(req.get("cursor", 0)))
@@ -120,6 +187,9 @@ class CrispyDaemon:
                 won, value, version = b.cas(req["ns"], req["key"],
                                             int(req["version"]),
                                             req["value"])
+                if won and self._maybe_prune_registry_locked(req["ns"],
+                                                             req["key"]):
+                    value, version = b.load(req["ns"], req["key"])
             return {"ok": True, "won": won, "value": value,
                     "version": version}
         if op == "reserve":
@@ -131,13 +201,141 @@ class CrispyDaemon:
                                          req.get("deltas", {}),
                                          req.get("limits") or {})
             return {"ok": True, "granted": granted, "doc": doc}
+        if op == "compact":
+            with self._write_lock:
+                stats = b.compact(req["ns"],
+                                  key_fields=req.get("key_fields"),
+                                  max_age_s=req.get("max_age_s"))
+                self._appends_since_compact[req["ns"]] = 0
+            resp = {"ok": True}
+            resp.update(stats)
+            return resp
+        if op == "evict_registry":
+            with self._write_lock:
+                evicted = self._prune_registry_locked(
+                    req.get("ns", REGISTRY_NS),
+                    req.get("key", REGISTRY_KEY),
+                    req.get("max_records"), req.get("max_age_s"))
+            return {"ok": True, "evicted": evicted}
         if op == "shutdown":
             threading.Thread(target=self.stop, daemon=True).start()
             return {"ok": True}
         return {"ok": False, "error": f"unknown op {op!r}"}
 
+    # -- compaction / eviction thresholds -----------------------------------
+    def _maybe_autocompact_locked(self, ns: str) -> None:
+        if not self.compact_after:
+            return
+        n = self._appends_since_compact.get(ns, 0) + 1
+        if n >= self.compact_after:
+            self.backend.compact(ns, max_age_s=self.compact_max_age_s)
+            n = 0
+        self._appends_since_compact[ns] = n
+
+    def _maybe_prune_registry_locked(self, ns: str, key: str) -> bool:
+        if (self.registry_max_records is None
+                and self.registry_max_age_s is None):
+            return False
+        if ns != REGISTRY_NS or key != REGISTRY_KEY:
+            return False
+        return bool(self._prune_registry_locked(
+            ns, key, self.registry_max_records, self.registry_max_age_s))
+
+    def _prune_registry_locked(self, ns: str, key: str,
+                               max_records: Optional[int],
+                               max_age_s: Optional[float]) -> List[str]:
+        b = self.backend
+        while True:
+            value, version = b.load(ns, key)
+            new_value, evicted = prune_registry_doc(
+                value, max_records=max_records, max_age_s=max_age_s)
+            if not evicted:
+                return []
+            won, _cur, _ver = b.cas(ns, key, version, new_value)
+            if won:
+                return evicted
+            # only possible when another PROCESS shares our FileBackend
+            # root directly; re-read and retry
+
     # -- lifecycle ----------------------------------------------------------
+    def _make_handler(self):
+        daemon = self
+
+        class Handler(socketserver.StreamRequestHandler):
+            def setup(self):
+                super().setup()
+                with daemon._conns_lock:
+                    daemon._conns.add(self.connection)
+
+            def finish(self):
+                with daemon._conns_lock:
+                    daemon._conns.discard(self.connection)
+                super().finish()
+
+            def handle(self):
+                authed = daemon.auth_token is None
+                for line in self.rfile:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        req = json.loads(line)
+                        if not authed:
+                            # the first frame MUST authenticate; anything
+                            # else (including a wrong token) is answered
+                            # once and the connection is dropped
+                            if (req.get("op") == "auth" and
+                                    req.get("token") == daemon.auth_token):
+                                authed = True
+                                resp = {"ok": True,
+                                        "kind": daemon.backend.kind}
+                            else:
+                                resp = {"ok": False, "error":
+                                        "auth required: send "
+                                        '{"op": "auth", "token": ...} '
+                                        "as the first frame"}
+                        else:
+                            resp = daemon.handle_request(req)
+                    except Exception as e:      # a bad request must never
+                        resp = {"ok": False,    # kill the server
+                                "error": f"{type(e).__name__}: {e}"}
+                    try:
+                        self.wfile.write((json.dumps(resp) + "\n").encode())
+                        self.wfile.flush()
+                    except OSError:
+                        return                  # client went away
+                    if not resp.get("ok") and not authed:
+                        return                  # failed auth: hang up
+
+        return Handler
+
     def start(self, background: bool = True) -> "CrispyDaemon":
+        handler = self._make_handler()
+        try:
+            if self.socket_path is not None:
+                self._servers.append(self._start_unix(handler))
+            if self.listen is not None:
+                self._servers.append(self._start_tcp(handler))
+        except BaseException:
+            # e.g. the unix socket bound but the tcp port was taken: tear
+            # down whatever DID bind, or the half-started daemon leaks a
+            # listening-but-unserved socket that fools the liveness probe
+            self.stop()
+            raise
+        if background:
+            for server in self._servers:
+                self._serve_on_thread(server)
+        return self
+
+    def _serve_on_thread(self, server) -> None:
+        self._serving.add(server)
+        t = threading.Thread(
+            target=lambda: server.serve_forever(poll_interval=0.05),
+            daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _start_unix(self, handler) -> socketserver.BaseServer:
         if os.path.exists(self.socket_path):
             # a crash leaves a stale socket behind (safe to reclaim), but
             # a LIVE daemon must not be silently usurped — two daemons on
@@ -158,60 +356,52 @@ class CrispyDaemon:
                     f"connect a DaemonBackend to it or pick another "
                     f"--socket")
             os.unlink(self.socket_path)
-        daemon = self
 
-        class Handler(socketserver.StreamRequestHandler):
-            def setup(self):
-                super().setup()
-                with daemon._conns_lock:
-                    daemon._conns.add(self.connection)
-
-            def finish(self):
-                with daemon._conns_lock:
-                    daemon._conns.discard(self.connection)
-                super().finish()
-
-            def handle(self):
-                for line in self.rfile:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        req = json.loads(line)
-                        resp = daemon.handle_request(req)
-                    except Exception as e:      # a bad request must never
-                        resp = {"ok": False,    # kill the server
-                                "error": f"{type(e).__name__}: {e}"}
-                    try:
-                        self.wfile.write((json.dumps(resp) + "\n").encode())
-                        self.wfile.flush()
-                    except OSError:
-                        return                  # client went away
-
-        class Server(socketserver.ThreadingUnixStreamServer):
+        class UnixServer(socketserver.ThreadingUnixStreamServer):
             daemon_threads = True
             allow_reuse_address = True
 
-        self._server = Server(self.socket_path, Handler)
-        if background:
-            self._thread = threading.Thread(
-                target=lambda: self._server.serve_forever(poll_interval=0.05),
-                daemon=True)
-            self._thread.start()
-        return self
+        return UnixServer(self.socket_path, handler)
+
+    def _start_tcp(self, handler) -> socketserver.BaseServer:
+        scheme, target = parse_address(self.listen)
+        if scheme != "tcp":
+            raise StateBackendError(
+                f"listen= wants a tcp host:port address, got "
+                f"{self.listen!r}")
+
+        class TCPServer(socketserver.ThreadingTCPServer):
+            daemon_threads = True
+            allow_reuse_address = True
+            if ":" in target[0]:        # a literal IPv6 host ([::1]:port)
+                address_family = socket.AF_INET6
+
+        server = TCPServer(target, handler)
+        host, port = server.server_address[:2]
+        self.tcp_address = (f"[{host}]:{port}" if ":" in str(host)
+                            else f"{host}:{port}")   # resolves host:0
+        return server
 
     def serve_forever(self) -> None:
-        if self._server is None:
+        if not self._servers:
             self.start(background=False)
-        server = self._server
-        if server is not None:          # stop() may have raced us
-            server.serve_forever(poll_interval=0.05)
+        servers = list(self._servers)
+        if not servers:                 # stop() may have raced us
+            return
+        # extra servers run on background threads; the last one occupies
+        # the foreground so `python -m repro.state.daemon` blocks
+        for server in servers[:-1]:
+            self._serve_on_thread(server)
+        self._serving.add(servers[-1])
+        servers[-1].serve_forever(poll_interval=0.05)
 
     def stop(self) -> None:
-        server, self._server = self._server, None
-        if server is not None:
-            server.shutdown()
+        servers, self._servers = self._servers, []
+        for server in servers:
+            if server in self._serving:
+                server.shutdown()
             server.server_close()
+        self._serving.clear()
         with self._conns_lock:
             conns = list(self._conns)
         for conn in conns:
@@ -219,14 +409,14 @@ class CrispyDaemon:
                 conn.shutdown(socket.SHUT_RDWR)
             except OSError:
                 pass
-        if os.path.exists(self.socket_path):
+        if self.socket_path and os.path.exists(self.socket_path):
             try:
                 os.unlink(self.socket_path)
             except OSError:
                 pass
-        if self._thread is not None:
-            self._thread.join(timeout=5.0)
-            self._thread = None
+        threads, self._threads = self._threads, []
+        for t in threads:
+            t.join(timeout=5.0)
 
     def __enter__(self) -> "CrispyDaemon":
         return self.start()
@@ -236,36 +426,64 @@ class CrispyDaemon:
 
 
 class DaemonBackend(StateBackend):
-    """StateBackend speaking the crispy-daemon wire protocol.
+    """StateBackend speaking the crispy-daemon wire protocol over either
+    transport: `DaemonBackend("/tmp/crispy.sock")` (unix) or
+    `DaemonBackend("crispy-host:7421")` / `"tcp://host:port"` (tcp).
 
     One connection per thread (the AllocationService worker, profiling
     executor workers and direct callers each get their own); a transport
     error drops the connection and retries once, so clients fail over to
-    a daemon restarted on the same socket path. A daemon that stays down
-    raises `StateBackendUnavailable` — callers see a clean error, never a
-    hang (socket ops are bounded by `timeout_s`)."""
+    a daemon restarted on the same address. A daemon that stays down
+    raises `StateBackendUnavailable` naming the unix path or host:port —
+    callers see a clean, debuggable error, never a hang (socket ops are
+    bounded by `timeout_s`). When the daemon requires a shared token,
+    pass `auth_token=` or export $CRISPY_DAEMON_TOKEN; the client then
+    authenticates every fresh connection before its first request."""
 
     kind = "daemon"
 
-    def __init__(self, socket_path: Optional[str] = None,
-                 timeout_s: float = DEFAULT_TIMEOUT_S):
-        if not HAS_UNIX_SOCKETS:       # pragma: no cover - non-POSIX
-            raise StateBackendError(
-                "unix-domain sockets are unavailable on this platform")
-        self.socket_path = socket_path or default_socket_path()
+    def __init__(self, address: Optional[str] = None,
+                 timeout_s: float = DEFAULT_TIMEOUT_S,
+                 auth_token: Optional[str] = None):
+        self.address = address or default_socket_path()
+        self._parsed = parse_address(self.address)
+        self.transport = self._parsed[0]          # "unix" | "tcp"
+        if self.transport == "unix" and not HAS_UNIX_SOCKETS:
+            raise StateBackendError(   # pragma: no cover - non-POSIX
+                "unix-domain sockets are unavailable on this platform; "
+                "connect to a tcp daemon (host:port) instead")
+        # back-compat: unix clients historically exposed .socket_path
+        self.socket_path = (self._parsed[1]
+                            if self.transport == "unix" else None)
         self.timeout_s = timeout_s
+        self.auth_token = (auth_token if auth_token is not None
+                           else default_auth_token())
         self._local = threading.local()
+
+    def describe(self) -> str:
+        return describe_address(self._parsed)
 
     # -- transport ----------------------------------------------------------
     def _files(self):
         files = getattr(self._local, "files", None)
         if files is None:
-            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            sock.settimeout(self.timeout_s)
-            sock.connect(self.socket_path)
+            sock = connect(self._parsed, self.timeout_s)
             files = (sock, sock.makefile("rwb"))
             self._local.files = files
+            if self.auth_token is not None:
+                self._auth(files[1])
         return files
+
+    def _auth(self, f) -> None:
+        send_frame(f, auth_frame(self.auth_token))
+        resp = recv_frame(f)
+        if resp is None:
+            raise ConnectionError("daemon closed the connection during auth")
+        if not resp.get("ok"):
+            self._drop()
+            raise StateBackendError(
+                f"crispy-daemon at {self.describe()} rejected our auth "
+                f"token: {resp.get('error')}")
 
     def _drop(self) -> None:
         files = getattr(self._local, "files", None)
@@ -288,23 +506,24 @@ class DaemonBackend(StateBackend):
             sent = False
             try:
                 _sock, f = self._files()
-                f.write((json.dumps(payload) + "\n").encode())
-                f.flush()
+                send_frame(f, payload)
                 sent = True
-                line = f.readline()
-                if not line:
+                resp = recv_frame(f)
+                if resp is None:
                     raise ConnectionError("daemon closed the connection")
-                resp = json.loads(line)
                 if not resp.get("ok"):
                     raise StateBackendError(
-                        f"daemon rejected {op}: {resp.get('error')}")
+                        f"daemon at {self.describe()} rejected {op}: "
+                        f"{resp.get('error')}")
                 return resp
+            except StateBackendError:
+                raise                   # auth rejection / op rejection
             except (OSError, ValueError, ConnectionError) as e:
                 self._drop()
                 last = e
-                # a mutating op (append/cas/reserve) whose request was
-                # fully sent may already have been applied server-side —
-                # resending could apply it twice (double-spend a budget
+                # a mutating op (append/cas/reserve/compact) whose request
+                # was fully sent may already have been applied server-side
+                # — resending could apply it twice (double-spend a budget
                 # point, duplicate a log row), so surface the ambiguity
                 # instead of retrying. Failures before the request went
                 # out (dead cached connection, connect refused) are
@@ -312,10 +531,10 @@ class DaemonBackend(StateBackend):
                 if sent and op not in self._IDEMPOTENT_OPS:
                     raise StateBackendUnavailable(
                         f"crispy-daemon connection lost mid-{op} at "
-                        f"{self.socket_path} (the operation may or may "
+                        f"{self.describe()} (the operation may or may "
                         f"not have been applied): {e}")
         raise StateBackendUnavailable(
-            f"crispy-daemon unreachable at {self.socket_path}: {last}")
+            f"crispy-daemon unreachable at {self.describe()}: {last}")
 
     # -- protocol ------------------------------------------------------------
     def append(self, ns: str, record: Dict) -> None:
@@ -342,6 +561,27 @@ class DaemonBackend(StateBackend):
                            "deltas": deltas, "limits": limits or {}})
         return resp["granted"], resp["doc"]
 
+    def compact(self, ns: str,
+                key_fields: Optional[Sequence[str]] = None,
+                max_age_s: Optional[float] = None) -> Dict:
+        resp = self._call({"op": "compact", "ns": ns,
+                           "key_fields": (list(key_fields)
+                                          if key_fields is not None
+                                          else None),
+                           "max_age_s": max_age_s})
+        return {"before": resp["before"], "after": resp["after"],
+                "dropped": resp["dropped"]}
+
+    def evict_registry(self, ns: str = REGISTRY_NS, key: str = REGISTRY_KEY,
+                       max_records: Optional[int] = None,
+                       max_age_s: Optional[float] = None) -> List[str]:
+        """Daemon-side registry eviction by count/age; returns the evicted
+        signatures (tombstoned in the doc, so siblings honor it)."""
+        resp = self._call({"op": "evict_registry", "ns": ns, "key": key,
+                           "max_records": max_records,
+                           "max_age_s": max_age_s})
+        return list(resp.get("evicted", []))
+
     def ping(self) -> bool:
         try:
             return bool(self._call({"op": "ping"}).get("ok"))
@@ -363,29 +603,52 @@ def main(argv: Optional[List[str]] = None) -> int:
         description="crispy-daemon: shared-state server for Crispy "
                     "allocation services (see module docstring for the "
                     "lifecycle).")
-    ap.add_argument("--socket", default=default_socket_path(),
+    ap.add_argument("--socket", default=None,
                     help="unix socket path (default: $CRISPY_DAEMON_SOCKET "
-                         f"or {DEFAULT_SOCKET})")
+                         f"or {DEFAULT_SOCKET}, unless --listen makes the "
+                         "daemon tcp-only)")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="also serve TCP on this address (port 0 = "
+                         "ephemeral; resolved address is announced and "
+                         "written to --port-file)")
+    ap.add_argument("--port-file", default=None,
+                    help="write the resolved tcp host:port here after "
+                         "binding (for scripts that use --listen host:0)")
+    ap.add_argument("--auth-token", default=None,
+                    help="require this shared token as the first frame of "
+                         "every connection (default: $CRISPY_DAEMON_TOKEN "
+                         "when set)")
     ap.add_argument("--root", default=None,
                     help="persist state in this directory (FileBackend); "
                          "a restarted daemon resumes from it")
     ap.add_argument("--memory", action="store_true",
                     help="serve an in-memory backend (the default when "
                          "--root is not given)")
+    ap.add_argument("--compact-after", type=int, default=None, metavar="N",
+                    help="auto-compact a log namespace every N appends")
+    ap.add_argument("--compact-max-age", type=float, default=None,
+                    metavar="S", help="during compaction, drop rows whose "
+                    "'ts' is older than S seconds")
+    ap.add_argument("--registry-max-records", type=int, default=None,
+                    metavar="N", help="evict oldest registry records "
+                    "beyond N after each registry flush")
+    ap.add_argument("--registry-max-age", type=float, default=None,
+                    metavar="S", help="evict registry records older than "
+                    "S seconds after each registry flush")
     ap.add_argument("--ping", action="store_true",
                     help="health-check a running daemon and exit")
     ap.add_argument("--shutdown", action="store_true",
                     help="ask a running daemon to stop and exit")
     args = ap.parse_args(argv)
 
-    if not HAS_UNIX_SOCKETS:           # pragma: no cover - non-POSIX
-        print("crispy-daemon: unix sockets unavailable on this platform",
-              file=sys.stderr)
-        return 2
+    auth_token = args.auth_token or default_auth_token()
 
     if args.ping or args.shutdown:
-        client = DaemonBackend(args.socket, timeout_s=5.0)
+        # --listen names the tcp daemon to target; else the unix socket
+        target = args.listen or args.socket or default_socket_path()
         try:
+            client = DaemonBackend(target, timeout_s=5.0,
+                                   auth_token=auth_token)
             if args.ping:
                 ok = client.ping()
                 print("pong" if ok else "no daemon", flush=True)
@@ -397,21 +660,45 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"crispy-daemon: {e}", file=sys.stderr)
             return 1
 
-    daemon = CrispyDaemon(args.socket, root=args.root)
+    socket_path = args.socket
+    if socket_path is None and args.listen is None:
+        socket_path = default_socket_path()
+    if socket_path is not None and not HAS_UNIX_SOCKETS:
+        print("crispy-daemon: unix sockets unavailable on this platform; "
+              "use --listen host:port", file=sys.stderr)
+        return 2
+
+    daemon = CrispyDaemon(socket_path, root=args.root, listen=args.listen,
+                          auth_token=auth_token,
+                          compact_after=args.compact_after,
+                          compact_max_age_s=args.compact_max_age,
+                          registry_max_records=args.registry_max_records,
+                          registry_max_age_s=args.registry_max_age)
     # stop() blocks until serve_forever returns, so it must not run on the
     # thread serve_forever occupies (the signal handler interrupts it)
     for sig in (signal.SIGTERM, signal.SIGINT):
         signal.signal(sig, lambda *_: threading.Thread(
             target=daemon.stop, daemon=True).start())
     try:
-        daemon.start(background=False)  # bind before announcing
-    except StateBackendError as e:      # e.g. live daemon on this socket
+        daemon.start(background=True)   # bind before announcing
+    except (StateBackendError, OSError) as e:   # e.g. live daemon / EADDRINUSE
         print(f"crispy-daemon: {e}", file=sys.stderr)
         return 1
-    print(f"crispy-daemon: serving {daemon.backend.kind} state on "
-          f"{args.socket}", flush=True)
+    where = " ".join(filter(None, (
+        f"unix:{socket_path}" if socket_path else None,
+        f"tcp:{daemon.tcp_address}" if daemon.tcp_address else None)))
+    print(f"crispy-daemon: serving {daemon.backend.kind} state on {where}"
+          + (" (auth required)" if auth_token else ""), flush=True)
+    if args.port_file and daemon.tcp_address:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(daemon.tcp_address)
+        os.replace(tmp, args.port_file)
     try:
-        daemon.serve_forever()
+        # the servers run on background threads (started above so the
+        # announce/port-file happens after EVERY bind); park until stop()
+        for t in list(daemon._threads):
+            t.join()
     except OSError:                     # server socket closed by stop()
         pass
     # a remote "shutdown" op triggers stop() on a daemon thread; finish

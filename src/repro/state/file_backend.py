@@ -10,6 +10,14 @@ Layout under the backend root (one directory shared by all processes):
                     lock as a single O_APPEND write, so concurrent writers
                     never interleave partial lines; `read` consumes bytes
                     from an offset cursor and only complete lines.
+  <ns>.jsonl.meta   cursor base of a compacted log: {"base": n}. Logical
+                    cursor = base + byte offset in the current file;
+                    `compact` folds the log (tmp + rename) and bumps the
+                    base past every pre-compaction cursor, so stale
+                    cursors re-read the folded snapshot instead of
+                    landing mid-line in the rewritten file. The meta file
+                    persists with the log, which is what makes a
+                    compacted daemon --root survive restarts.
   <ns>.json         versioned documents of the namespace:
                     {"docs": {key: {"version": n, "value": {...}}}}.
                     `cas` rewrites the file atomically (tmp + rename)
@@ -26,9 +34,10 @@ import json
 import os
 import re
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.state.backend import StateBackend
+from repro.state.compaction import fold_log
 
 try:
     import fcntl
@@ -129,11 +138,15 @@ class FileBackend(StateBackend):
         if not os.path.exists(path):
             return [], cursor
         with self._lock(path, shared=True):
+            base = self._read_base(path)
+            # a cursor below the compaction base predates the last fold:
+            # restart at the snapshot head (rows are idempotent)
+            offset = max(0, cursor - base)
             with open(path, "rb") as f:
-                f.seek(cursor)
+                f.seek(offset)
                 data = f.read()
         if not data:
-            return [], cursor
+            return [], max(cursor, base + offset)
         # only consume complete lines; a torn tail (should not happen under
         # the lock, but be paranoid) is re-read by the next call
         end = data.rfind(b"\n") + 1
@@ -146,7 +159,59 @@ class FileBackend(StateBackend):
                 rows.append(json.loads(line))
             except ValueError:
                 continue            # skip a corrupt row, keep the rest
-        return rows, cursor + end
+        return rows, base + offset + end
+
+    def compact(self, ns: str,
+                key_fields: Optional[Sequence[str]] = None,
+                max_age_s: Optional[float] = None) -> Dict:
+        path = self.log_path(ns)
+        if not os.path.exists(path):
+            return {"before": 0, "after": 0, "dropped": 0}
+        with self._lock(path):
+            with open(path, "rb") as f:
+                data = f.read()
+            old_base = self._read_base(path)
+            rows = []
+            for line in data.splitlines():
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rows.append(json.loads(line))
+                except ValueError:
+                    continue
+            folded = fold_log(rows, key_fields=key_fields,
+                              max_age_s=max_age_s)
+            # bump the base FIRST: a crash between the two writes leaves
+            # base past every handed-out cursor with the old log intact —
+            # readers re-read from the head, nothing tears. (No reader
+            # runs in between anyway: both writes happen under the
+            # exclusive lock `read` takes shared.)
+            self._write_base(path, old_base + len(data))
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                for row in folded:
+                    f.write((json.dumps(row) + "\n").encode())
+            os.replace(tmp, path)
+            return {"before": len(rows), "after": len(folded),
+                    "dropped": len(rows) - len(folded)}
+
+    def _meta_path(self, log_path: str) -> str:
+        return log_path + ".meta"
+
+    def _read_base(self, log_path: str) -> int:
+        try:
+            with open(self._meta_path(log_path)) as f:
+                return int(json.load(f).get("base", 0))
+        except (OSError, ValueError):
+            return 0
+
+    def _write_base(self, log_path: str, base: int) -> None:
+        meta = self._meta_path(log_path)
+        tmp = meta + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"base": base}, f)
+        os.replace(tmp, meta)
 
     # -- versioned documents ------------------------------------------------
     def _read_docs(self, path: str) -> Dict[str, Dict]:

@@ -1,0 +1,125 @@
+"""Shared transport machinery for crispy-daemon and DaemonBackend.
+
+The daemon originally spoke newline-JSON over a unix-domain socket only,
+with the framing inlined in daemon.py. Multi-host support needs the same
+framing over TCP, so this module owns everything both transports share:
+
+  addresses   `parse_address` maps one string form onto either transport:
+
+                /tmp/crispy.sock          unix (anything with a path
+                unix:///tmp/crispy.sock    separator, or no ':')
+                127.0.0.1:7421            tcp  (host:port, numeric port)
+                tcp://crispy-host:7421    tcp
+                [::1]:7421                tcp  (bracketed IPv6)
+
+              `describe_address` renders the parsed form back into the
+              human string every connect error must carry — "unix socket
+              '/tmp/crispy.sock'" vs "tcp address 127.0.0.1:7421" — so a
+              misconfigured multi-host client names exactly what it
+              failed to reach.
+
+  framing     one JSON object per line, request -> response
+              (`send_frame` / `recv_frame` over a socket makefile).
+
+  auth        TCP exposes the daemon beyond the unix-permission boundary,
+              so connections may be gated by a shared token: the FIRST
+              frame on a connection must then be
+              {"op": "auth", "token": ...}. `default_auth_token` reads
+              $CRISPY_DAEMON_TOKEN so daemon and clients agree without
+              plumbing the secret through every constructor.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+from typing import Dict, Optional, Tuple, Union
+
+AUTH_TOKEN_ENV = "CRISPY_DAEMON_TOKEN"
+
+# parsed address forms: ("unix", path) | ("tcp", (host, port))
+Address = Tuple[str, Union[str, Tuple[str, int]]]
+
+
+def default_auth_token() -> Optional[str]:
+    return os.environ.get(AUTH_TOKEN_ENV) or None
+
+
+def parse_address(address: str) -> Address:
+    """Classify an address string as unix or tcp (see module docstring)."""
+    addr = address.strip()
+    if addr.startswith("unix://"):
+        return "unix", addr[len("unix://"):]
+    if addr.startswith("tcp://"):
+        addr = addr[len("tcp://"):]
+        return "tcp", _host_port(addr)
+    if addr.startswith("[") or (":" in addr and os.sep not in addr
+                                and addr.rsplit(":", 1)[1].isdigit()):
+        return "tcp", _host_port(addr)
+    return "unix", addr
+
+
+def _host_port(addr: str) -> Tuple[str, int]:
+    if addr.startswith("["):                 # bracketed IPv6: [::1]:7421
+        host, _, rest = addr[1:].partition("]")
+        port = rest.lstrip(":")
+    else:
+        host, _, port = addr.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(
+            f"not a host:port tcp address: {addr!r} (use host:port, "
+            f"tcp://host:port or a unix socket path)")
+    return host, int(port)
+
+
+def describe_address(parsed: Address) -> str:
+    """Human form for error messages: names the transport AND the target
+    so unix-path vs host:port misconfiguration is obvious at a glance."""
+    scheme, target = parsed
+    if scheme == "unix":
+        return f"unix socket '{target}'"
+    host, port = target
+    return f"tcp address {host}:{port}"
+
+
+def connect(parsed: Address, timeout_s: float) -> socket.socket:
+    """Open a connected stream socket for either transport."""
+    scheme, target = parsed
+    if scheme == "unix":
+        if not hasattr(socket, "AF_UNIX"):   # pragma: no cover - non-POSIX
+            raise OSError("unix-domain sockets unavailable on this platform")
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(timeout_s)
+        try:
+            sock.connect(target)
+        except BaseException:
+            sock.close()
+            raise
+        return sock
+    host, port = target
+    sock = socket.create_connection((host, port), timeout=timeout_s)
+    sock.settimeout(timeout_s)
+    return sock
+
+
+# -- framing ------------------------------------------------------------------
+
+def send_frame(wfile, payload: Dict) -> None:
+    wfile.write((json.dumps(payload) + "\n").encode())
+    wfile.flush()
+
+
+def recv_frame(rfile) -> Optional[Dict]:
+    """Next frame, or None on a clean EOF. Raises ValueError on garbage
+    (the caller drops the connection — framing never resynchronizes)."""
+    line = rfile.readline()
+    if not line:
+        return None
+    obj = json.loads(line)
+    if not isinstance(obj, dict):
+        raise ValueError(f"frame is not a JSON object: {obj!r}")
+    return obj
+
+
+def auth_frame(token: str) -> Dict:
+    return {"op": "auth", "token": token}

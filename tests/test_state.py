@@ -168,6 +168,126 @@ def test_no_direct_fcntl_outside_state_package():
     assert not offenders, offenders
 
 
+# -- compaction + eviction (regression: daemon restart survival) --------------
+
+
+def _fitted_model():
+    from repro.core.memory_model import fit_memory_model
+    sizes = [2e9, 4e9, 6e9, 8e9, 1e10]
+    return fit_memory_model(sizes, [2 * s + 1e9 for s in sizes])
+
+
+@needs_unix_sockets
+def test_compaction_mid_session_survives_daemon_restart(tmp_path):
+    """Regression (the tentpole's acceptance case): a compaction pass on
+    a daemon with shadowed log entries shrinks the on-disk log, does NOT
+    resurrect an evicted registry record, and after a daemon restart
+    from the same --root every non-tombstoned point is readable with
+    byte-identical contents."""
+    model = _fitted_model()
+    sock = _daemon_socket(tmp_path)
+    root = str(tmp_path / "dstate")
+    with CrispyDaemon(sock, root=root):
+        client = DaemonBackend(sock)
+        store = ProfileStore(backend=client)
+        for gen in range(6):            # 6 shadowed rewrites per point
+            for i in range(4):
+                store.put("sigA", float(i + 1) * 1e9,
+                          ProfileResult(1e9, (gen + 1) * 1e9, 0.0, 5.0))
+        store.put_anchor("sigA", 1e9)
+        # a sibling that indexed everything BEFORE the eviction: the
+        # compacted snapshot must still deliver it the deletion
+        sibling = ProfileStore(backend=DaemonBackend(sock))
+        assert sibling.get("sigA", 4e9) is not None
+        store.evict("sigA", 4e9)        # tombstone one point
+        registry = BackendModelRegistry(client)
+        registry.put("keep-me", model)
+        registry.put("evict-me", model)
+        assert registry.evict("evict-me")
+
+        log_path = FileBackend(root).log_path("profiles")
+        size_before = os.path.getsize(log_path)
+        stats = store.compact()         # mid-session: daemon stays up
+        assert stats["dropped"] >= 15   # 5 shadowed gens x 3 points + more
+        assert os.path.getsize(log_path) < size_before
+        # the evicted registry record did not come back from the compact
+        registry.refresh()
+        assert "evict-me" not in registry and "keep-me" in registry
+        # the stale sibling observes the point eviction post-compaction
+        sibling.refresh()
+        assert sibling.get("sigA", 4e9) is None
+        points_before = {
+            (sig, size): store.get(sig, size).to_dict()
+            for sig, size in [("sigA", float(i + 1) * 1e9)
+                              for i in range(4) if i + 1 != 4]}
+        assert len(store) == 3          # 4 points - 1 tombstoned
+
+    # daemon restart from the same root: compacted state is durable
+    with CrispyDaemon(sock, root=root):
+        client2 = DaemonBackend(sock)
+        store2 = ProfileStore(backend=client2)
+        assert len(store2) == len(points_before) == 3
+        for (sig, size), before in points_before.items():
+            assert store2.get(sig, size).to_dict() == before
+        assert store2.get("sigA", 4e9) is None      # stays tombstoned
+        assert store2.get_anchor("sigA") == 1e9
+        registry2 = BackendModelRegistry(client2)
+        assert "evict-me" not in registry2 and "keep-me" in registry2
+        # and a sibling's forced merge-write cannot resurrect it either
+        registry2.save()
+        assert "evict-me" not in BackendModelRegistry(client2)
+
+
+@needs_unix_sockets
+def test_daemon_auto_compaction_bounds_the_log(tmp_path):
+    """--compact-after N: the on-disk log stays bounded while a client
+    rewrites the same points over and over."""
+    sock = _daemon_socket(tmp_path)
+    root = str(tmp_path / "dstate")
+    with CrispyDaemon(sock, root=root, compact_after=10):
+        client = DaemonBackend(sock)
+        store = ProfileStore(backend=client)
+        for gen in range(50):
+            store.put("sig", 1e9, ProfileResult(1e9, (gen + 1) * 1e9,
+                                                0.0, 5.0))
+        rows, _ = client.read("profiles", 0)
+        assert len(rows) <= 10          # 50 appends folded down en route
+        assert len(store) == 1
+        # the surviving row is the LAST generation
+        fresh = ProfileStore(backend=DaemonBackend(sock))
+        assert fresh.get("sig", 1e9).peak_mem_bytes == 50 * 1e9
+
+
+@needs_unix_sockets
+def test_daemon_registry_eviction_thresholds(tmp_path):
+    """--registry-max-records N: the daemon prunes the registry document
+    after each flush, tombstoning the oldest records so sibling
+    registries adopt (not resurrect) the eviction."""
+    import time as _time
+    model = _fitted_model()
+    sock = _daemon_socket(tmp_path)
+    with CrispyDaemon(sock, registry_max_records=2):
+        client = DaemonBackend(sock)
+        registry = BackendModelRegistry(client)
+        for name in ("oldest", "middle", "newest"):
+            registry.put(name, model)
+            _time.sleep(0.01)           # distinct created_at ordering
+        # the flush that inserted "newest" tripped the daemon-side prune
+        sibling = BackendModelRegistry(client)
+        assert len(sibling) == 2
+        assert "oldest" not in sibling
+        assert "middle" in sibling and "newest" in sibling
+        # the writer itself adopts the eviction on refresh...
+        registry.refresh()
+        assert "oldest" not in registry
+        # ...and its own forced merge-write does not resurrect the record
+        registry.save()
+        assert "oldest" not in BackendModelRegistry(client)
+        # daemon-side eviction can also be invoked explicitly
+        assert client.evict_registry(max_records=1) == ["middle"]
+        assert len(BackendModelRegistry(client)) == 1
+
+
 # -- cross-process budget arbitration (acceptance) ----------------------------
 
 _SPENDER = """
@@ -246,6 +366,30 @@ def test_daemon_refuses_to_usurp_a_live_socket(tmp_path):
         assert DaemonBackend(sock).ping()
     finally:
         d.stop()
+
+
+@needs_unix_sockets
+def test_failed_tcp_bind_tears_down_the_bound_unix_socket(tmp_path):
+    """Regression: when --listen can't bind (port taken), start() must
+    release the unix socket it already bound — a half-started daemon
+    would otherwise leave a listening-but-unserved socket that fools
+    the liveness probe forever."""
+    blocker = socket.socket()
+    blocker.bind(("127.0.0.1", 0))
+    blocker.listen(1)
+    port = blocker.getsockname()[1]
+    sock = _daemon_socket(tmp_path)
+    try:
+        with pytest.raises(OSError):
+            CrispyDaemon(sock, listen=f"127.0.0.1:{port}").start()
+        assert not os.path.exists(sock)
+        d = CrispyDaemon(sock).start()      # the path is reusable
+        try:
+            assert DaemonBackend(sock).ping()
+        finally:
+            d.stop()
+    finally:
+        blocker.close()
 
 
 @needs_unix_sockets

@@ -1,0 +1,412 @@
+"""Cross-backend StateBackend conformance suite.
+
+ONE contract, four implementations: every test in this file runs
+identically against `InMemoryBackend`, `FileBackend`, `DaemonBackend`
+over a unix socket, and `DaemonBackend` over TCP (with the shared-token
+auth handshake) — the guarantee that lets every view (ProfileStore,
+BackendModelRegistry, shared ProfilingBudget) treat the transport as an
+implementation detail. Covered contract:
+
+  * append/read ordering + incremental cursor semantics;
+  * versioned-document CAS conflict behavior (stale writers lose and get
+    the current state back; versions are strictly monotone);
+  * `reserve` never over-grants an envelope, under thread contention;
+  * compaction: folding keeps the LAST row per identity, tombstoned
+    identities stay dead (through compaction AND for stale cursors),
+    generic rows never fold, cursors stay monotone across a compact.
+
+Property-based variants run when hypothesis is installed; deterministic
+seeded equivalents always run, so tier-1 does not require hypothesis.
+"""
+import os
+import random
+import socket
+import tempfile
+import threading
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.state import (CrispyDaemon, DaemonBackend, FileBackend,
+                         InMemoryBackend, StateBackendError,
+                         StateBackendUnavailable)
+
+HAS_UNIX = hasattr(socket, "AF_UNIX")
+BACKENDS = ("memory", "file", "daemon-unix", "daemon-tcp")
+AUTH_TOKEN = "conformance-secret"
+
+
+def _short_socket() -> str:
+    # AF_UNIX paths are length-limited (~108 bytes); pytest tmp dirs can
+    # get long, so place sockets in a short-lived short tempdir
+    return os.path.join(tempfile.mkdtemp(prefix="crispyd-"), "d.sock")
+
+
+@pytest.fixture(params=BACKENDS)
+def backend(request, tmp_path):
+    """One StateBackend per param — the same contract must hold on all."""
+    kind = request.param
+    if kind == "memory":
+        yield InMemoryBackend()
+    elif kind == "file":
+        yield FileBackend(str(tmp_path / "file-backend"))
+    elif kind == "daemon-unix":
+        if not HAS_UNIX:
+            pytest.skip("unix-domain sockets unavailable")
+        sock = _short_socket()
+        with CrispyDaemon(sock):
+            client = DaemonBackend(sock, timeout_s=10.0)
+            yield client
+            client.close()
+    else:                                   # daemon-tcp, auth required
+        with CrispyDaemon(listen="127.0.0.1:0",
+                          auth_token=AUTH_TOKEN) as daemon:
+            client = DaemonBackend(daemon.tcp_address, timeout_s=10.0,
+                                   auth_token=AUTH_TOKEN)
+            yield client
+            client.close()
+
+
+# -- append/read ordering -----------------------------------------------------
+
+
+def test_append_read_ordering_and_cursors(backend):
+    assert backend.read("log") == ([], 0) or backend.read("log")[0] == []
+    for i in range(5):
+        backend.append("log", {"i": i})
+    rows, cur = backend.read("log")
+    assert [r["i"] for r in rows] == [0, 1, 2, 3, 4]
+    # caught-up cursor sees nothing new
+    assert backend.read("log", cur)[0] == []
+    backend.append("log", {"i": 5})
+    rows2, cur2 = backend.read("log", cur)
+    assert [r["i"] for r in rows2] == [5]
+    assert cur2 > cur
+    # namespaces are independent
+    assert backend.read("other-log")[0] == []
+
+
+def test_concurrent_appends_never_drop_or_interleave(backend):
+    n, threads = 25, 4
+
+    def writer(tag):
+        for i in range(n):
+            backend.append("clog", {"tag": tag, "i": i})
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    rows, _ = backend.read("clog")
+    assert len(rows) == n * threads
+    # per-writer order is preserved even though writers interleave
+    for tag in range(threads):
+        mine = [r["i"] for r in rows if r["tag"] == tag]
+        assert mine == list(range(n))
+
+
+# -- versioned documents ------------------------------------------------------
+
+
+def test_cas_conflict_returns_current_state(backend):
+    assert backend.load("docs", "k") == (None, 0)
+    won, val, ver = backend.cas("docs", "k", 0, {"a": 1})
+    assert won and ver == 1
+    # stale version loses and gets the current state back to merge
+    won, val, ver = backend.cas("docs", "k", 0, {"a": 99})
+    assert not won and val == {"a": 1} and ver == 1
+    won, val, ver = backend.cas("docs", "k", 1, {"a": 2})
+    assert won and ver == 2
+    assert backend.load("docs", "k") == ({"a": 2}, 2)
+
+
+def test_cas_versions_strictly_monotone_under_retries(backend):
+    """N threads CAS-increment one counter; every won version is unique,
+    the version sequence is gapless, and no increment is lost."""
+    wins_per_thread, threads = 10, 3
+    won_versions = []
+    lock = threading.Lock()
+
+    def bump():
+        for _ in range(wins_per_thread):
+            while True:
+                value, version = backend.load("docs", "ctr")
+                doc = dict(value or {"n": 0})
+                doc["n"] += 1
+                won, _cur, new_ver = backend.cas("docs", "ctr", version, doc)
+                if won:
+                    with lock:
+                        won_versions.append(new_ver)
+                    break
+
+    ts = [threading.Thread(target=bump) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    total = wins_per_thread * threads
+    assert sorted(won_versions) == list(range(1, total + 1))
+    value, version = backend.load("docs", "ctr")
+    assert value["n"] == total and version == total
+
+
+# -- lease reservations -------------------------------------------------------
+
+
+def test_reserve_semantics(backend):
+    # bumped fields may land exactly on the ceiling
+    assert backend.reserve("d", "bud", {"points": 1}, {"points": 2})[0]
+    assert backend.reserve("d", "bud", {"points": 1}, {"points": 2})[0]
+    ok, doc = backend.reserve("d", "bud", {"points": 1}, {"points": 2})
+    assert not ok and doc["points"] == 2      # denied: nothing changed
+    # guard fields (no delta) deny at >= limit
+    backend.reserve("d", "bud2", {"charged": 100.0}, {})
+    assert not backend.reserve("d", "bud2", {"points": 1},
+                               {"charged": 100.0})[0]
+    # unlimited deltas always land
+    assert backend.reserve("d", "bud2", {"denials": 1}, {})[0]
+
+
+def test_reserve_never_overgrants_under_contention(backend):
+    limit, threads, attempts = 17, 4, 10
+    granted = [0] * threads
+
+    def spender(idx):
+        for _ in range(attempts):
+            ok, _doc = backend.reserve("d", "env", {"points": 1},
+                                       {"points": float(limit)})
+            if ok:
+                granted[idx] += 1
+
+    ts = [threading.Thread(target=spender, args=(i,))
+          for i in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert sum(granted) == limit              # == not <=: no lost grants
+    value, _ = backend.load("d", "env")
+    assert value["points"] == limit
+
+
+# -- compaction ---------------------------------------------------------------
+
+
+def _fill_profile_log(backend, ns="prof"):
+    """5 shadowed rewrites of (a, 1.0), a live (a, 2.0), an anchor, a
+    tombstoned (b, 9.0), and two generic (unfoldable) rows."""
+    for i in range(5):
+        backend.append(ns, {"kind": "profile", "sig": "a", "size": 1.0,
+                            "gen": i})
+    backend.append(ns, {"kind": "profile", "sig": "a", "size": 2.0})
+    backend.append(ns, {"kind": "anchor", "sig": "a", "anchor": 3.0})
+    backend.append(ns, {"kind": "profile", "sig": "b", "size": 9.0})
+    backend.append(ns, {"kind": "profile", "sig": "b", "size": 9.0,
+                        "tombstone": True})
+    backend.append(ns, {"note": "generic-1"})
+    backend.append(ns, {"note": "generic-2"})
+
+
+def test_compaction_folds_keeps_last_and_drops_tombstoned(backend):
+    _fill_profile_log(backend)
+    stats = backend.compact("prof")
+    assert stats["before"] == 11
+    # survivors: (a,1.0) last rewrite, (a,2.0), anchor, (b,9.0)'s
+    # TOMBSTONE (the identity's last word — kept so stale readers still
+    # observe the deletion), 2 generic rows
+    assert stats["after"] == 6 and stats["dropped"] == 5
+    rows, _ = backend.read("prof")
+    assert len(rows) == 6
+    a1 = [r for r in rows if r.get("sig") == "a" and r.get("size") == 1.0]
+    assert len(a1) == 1 and a1[0]["gen"] == 4       # the LAST rewrite won
+    b_rows = [r for r in rows if r.get("sig") == "b"]
+    assert [bool(r.get("tombstone")) for r in b_rows] == [True]
+    assert [r["note"] for r in rows if "note" in r] == \
+        ["generic-1", "generic-2"]                  # generic rows never fold
+    # compaction is idempotent
+    assert backend.compact("prof")["dropped"] == 0
+
+
+def test_stale_reader_still_observes_tombstone_after_compaction(backend):
+    """Regression: a sibling that indexed a point BEFORE it was evicted
+    and compacted must still see the deletion when its stale cursor
+    re-reads the folded snapshot — folding must not erase tombstones."""
+    backend.append("prof", {"kind": "profile", "sig": "b", "size": 9.0})
+    _rows, stale = backend.read("prof")     # sibling is now caught up
+    backend.append("prof", {"kind": "profile", "sig": "b", "size": 9.0,
+                            "tombstone": True})
+    backend.compact("prof")
+    rows, _ = backend.read("prof", stale)   # pre-compaction cursor
+    dead = [r for r in rows if r.get("sig") == "b"]
+    assert dead and all(r.get("tombstone") for r in dead)
+    # a re-put AFTER the tombstone shadows it again
+    backend.append("prof", {"kind": "profile", "sig": "b", "size": 9.0,
+                            "back": True})
+    backend.compact("prof")
+    rows2, _ = backend.read("prof")
+    assert [bool(r.get("back")) for r in rows2
+            if r.get("sig") == "b"] == [True]
+
+
+def test_compaction_keeps_cursors_monotone(backend):
+    _fill_profile_log(backend)
+    rows, cur = backend.read("prof")
+    backend.compact("prof")
+    # a pre-compaction cursor re-reads the folded snapshot — idempotent
+    # under "later rows win" — and advances; it never tears or loses rows
+    rows2, cur2 = backend.read("prof", cur)
+    assert cur2 >= cur
+    assert len(rows2) == 6
+    # rows appended after the compact are visible from the new cursor
+    backend.append("prof", {"kind": "profile", "sig": "c", "size": 4.0})
+    rows3, cur3 = backend.read("prof", cur2)
+    assert [r.get("sig") for r in rows3] == ["c"] and cur3 > cur2
+
+
+def test_compaction_of_missing_namespace_is_empty(backend):
+    assert backend.compact("never-written") == \
+        {"before": 0, "after": 0, "dropped": 0}
+
+
+# -- random interleavings (property-based + deterministic equivalent) ---------
+
+
+def _run_reserve_release_schedule(backend, schedule_a, schedule_b,
+                                  limit=7, ns="d", key="prop"):
+    """Two threads interleave reserve/release ops; returns total granted
+    minus released. The envelope invariant: the doc's `points` never
+    exceeds `limit` and equals grants - releases at quiescence."""
+    outstanding = [0, 0]
+
+    def runner(idx, schedule):
+        for op in schedule:
+            if op == "reserve":
+                ok, _doc = backend.reserve(ns, key, {"points": 1},
+                                           {"points": float(limit)})
+                if ok:
+                    outstanding[idx] += 1
+            elif outstanding[idx] > 0:      # release via negative delta
+                backend.reserve(ns, key, {"points": -1}, {})
+                outstanding[idx] -= 1
+
+    ts = [threading.Thread(target=runner, args=(i, s))
+          for i, s in enumerate((schedule_a, schedule_b))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    value, _ = backend.load(ns, key)
+    points = value["points"] if value else 0
+    assert 0 <= points <= limit
+    assert points == sum(outstanding)
+    return points
+
+
+def test_reserve_release_interleavings_never_exceed_limit(backend):
+    rng = random.Random(1234)
+    for trial in range(3):
+        key = f"prop-{trial}"
+        schedules = [[rng.choice(("reserve", "reserve", "release"))
+                      for _ in range(12)] for _ in range(2)]
+        _run_reserve_release_schedule(backend, *schedules, key=key)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_reserve_release_interleavings_hypothesis():
+    ops = st.lists(st.sampled_from(("reserve", "release")),
+                   min_size=1, max_size=16)
+
+    @settings(max_examples=25, deadline=None)
+    @given(a=ops, b=ops)
+    def run(a, b):
+        _run_reserve_release_schedule(InMemoryBackend(), a, b)
+
+    run()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_cas_versions_monotone_hypothesis():
+    @settings(max_examples=20, deadline=None)
+    @given(increments=st.lists(st.integers(1, 5), min_size=1, max_size=8))
+    def run(increments):
+        b = InMemoryBackend()
+        versions = []
+        for inc in increments:
+            value, version = b.load("docs", "k")
+            doc = dict(value or {"n": 0})
+            doc["n"] += inc
+            won, _c, new_ver = b.cas("docs", "k", version, doc)
+            assert won
+            versions.append(new_ver)
+        assert versions == sorted(set(versions))    # strictly monotone
+        assert b.load("docs", "k")[0]["n"] == sum(increments)
+
+    run()
+
+
+# -- daemon-transport specifics ----------------------------------------------
+
+
+def test_daemon_connect_error_names_the_unix_path():
+    missing = os.path.join(tempfile.mkdtemp(prefix="crispyd-"), "gone.sock")
+    client = DaemonBackend(missing, timeout_s=1.0)
+    with pytest.raises(StateBackendUnavailable) as e:
+        client.read("log")
+    assert missing in str(e.value) and "unix socket" in str(e.value)
+
+
+def test_daemon_connect_error_names_the_tcp_address():
+    # a bound-then-closed ephemeral port: nothing is listening there
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    host, port = probe.getsockname()
+    probe.close()
+    client = DaemonBackend(f"{host}:{port}", timeout_s=1.0)
+    with pytest.raises(StateBackendUnavailable) as e:
+        client.read("log")
+    msg = str(e.value)
+    assert f"{host}:{port}" in msg and "tcp address" in msg
+
+
+def test_tcp_daemon_rejects_wrong_or_missing_token():
+    with CrispyDaemon(listen="127.0.0.1:0", auth_token=AUTH_TOKEN) as d:
+        good = DaemonBackend(d.tcp_address, auth_token=AUTH_TOKEN)
+        good.append("log", {"ok": 1})
+        assert good.read("log")[0] == [{"ok": 1}]
+        for bad_token in ("wrong", None):
+            bad = DaemonBackend(d.tcp_address, auth_token=bad_token)
+            # an unauthenticated connection gets exactly one error frame
+            with pytest.raises(StateBackendError):
+                bad.append("log", {"sneak": 1})
+            bad.close()
+        assert good.read("log", 0)[0] == [{"ok": 1}]    # nothing snuck in
+
+
+def test_tcp_and_unix_clients_share_one_daemon(tmp_path):
+    """The tentpole in one assertion: the SAME daemon state is visible
+    over both transports at once."""
+    if not HAS_UNIX:
+        pytest.skip("unix-domain sockets unavailable")
+    sock = _short_socket()
+    with CrispyDaemon(sock, listen="127.0.0.1:0") as d:
+        over_unix = DaemonBackend(sock)
+        over_tcp = DaemonBackend(d.tcp_address)
+        assert over_unix.transport == "unix" and over_tcp.transport == "tcp"
+        over_unix.append("log", {"from": "unix"})
+        over_tcp.append("log", {"from": "tcp"})
+        rows, _ = over_unix.read("log")
+        assert [r["from"] for r in rows] == ["unix", "tcp"]
+        won, _v, ver = over_tcp.cas("docs", "k", 0, {"via": "tcp"})
+        assert won
+        assert over_unix.load("docs", "k") == ({"via": "tcp"}, 1)
+        # one envelope across transports
+        assert over_unix.reserve("d", "b", {"points": 1}, {"points": 2})[0]
+        assert over_tcp.reserve("d", "b", {"points": 1}, {"points": 2})[0]
+        assert not over_tcp.reserve("d", "b", {"points": 1},
+                                    {"points": 2})[0]
