@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.fig4_measurement_hygiene",
     "benchmarks.allocation_service_throughput",
     "benchmarks.profiling_adaptive",
+    "benchmarks.point_placement",
     "benchmarks.state_backends",
     "benchmarks.planner_validation",
     "benchmarks.roofline_table",

@@ -1,21 +1,27 @@
 """The paper, end to end, on this machine: profile the seven HiBench-family
 jobs with the OS-level RSS profiler (five sample sizes each), fit the
 memory model, gate on R^2, and select an AWS-style cluster configuration —
-Crispy §III steps 1-4 with *real* measurements.
+Crispy §III steps 1-4 with *real* measurements, driven through the unified
+`repro.pipeline.AllocationPipeline` (the same staged path the batched
+AllocationService serves; see repro/pipeline/__init__.py for the diagram).
 
-A second pass re-runs the suite through the adaptive scheduler under a
-shared ProfilingBudget (the paper's ten-minute envelope, scaled to this
-demo): linear jobs stop after ~3 samples instead of 5, anything the
-budget cuts short falls back exactly like an unconfident fit.
+A second pass re-runs the suite adaptively under a shared ProfilingBudget
+(the paper's ten-minute envelope, scaled to this demo), comparing both
+point-placement strategies: the PR-2 ladder prefix and the
+information-optimal default — `placement="infogain"` profiles whichever
+size is expected to shrink candidate-model disagreement at full size the
+most, and stops when more measurement would not change the answer.
 
   PYTHONPATH=src python examples/profile_and_select.py
 """
+from repro.allocator.model_zoo import zoo_fitter
 from repro.core.catalog import aws_like_catalog
-from repro.core.crispy import CrispyAllocator
+from repro.core.memory_model import fit_memory_model
 from repro.core.local_jobs import LOCAL_JOBS
 from repro.core.profiler import RSSProfiler
 from repro.core.sampling import ladder_from_anchor
 from repro.core.simulator import build_history
+from repro.pipeline import AllocationPipeline, PipelineRequest
 from repro.profiling import ProfilingBudget
 
 GiB = 1024 ** 3
@@ -34,44 +40,56 @@ def main():
     catalog = aws_like_catalog()
     history = build_history()         # cost history of unrelated jobs (BFA)
     profiler = RSSProfiler(interval_s=0.002)
-    alloc = CrispyAllocator(catalog, history, overhead_per_node_gib=2.0,
-                            leeway=0.05)
+    ladder = ladder_from_anchor(ANCHOR)
+
+    # one staged decision path; the fixed pass uses the paper's OLS linear
+    # fit, the adaptive passes the model zoo (placement needs candidates
+    # that can disagree)
+    pipeline = AllocationPipeline(catalog, history, fitter=fit_memory_model,
+                                  overhead_per_node_gib=2.0, leeway=0.05)
     print("== fixed 5-point ladders (the paper) ==")
     print(f"{'job':16s} {'R2':>9s} {'gate':>9s} {'req(GiB)':>9s} "
           f"{'selected':>16s} {'profiling(s)':>12s}")
     for name, factory in LOCAL_JOBS.items():
-        ladder = ladder_from_anchor(ANCHOR)
         profiler.profile(factory(int(ladder.anchor)), ladder.anchor)  # warmup
-        rep = alloc.allocate(name, _profile_fn(profiler, factory),
-                             FULL_DATASET_GIB * GiB,
-                             sizes=ladder.sizes, exclude_job_in_history=False)
-        print(f"{name:16s} {rep.model.r2:9.5f} "
-              f"{'PASS' if rep.model.confident else 'fallback':>9s} "
-              f"{rep.requirement_gib:9.1f} "
-              f"{rep.selection.config.name:>16s} "
-              f"{rep.profiling_wall_s:12.2f}")
+        trace = pipeline.run(PipelineRequest(
+            name, _profile_fn(profiler, factory), FULL_DATASET_GIB * GiB,
+            sizes=ladder.sizes, exclude_job_in_history=False))
+        model = trace.plan.fit
+        print(f"{name:16s} {model.r2:9.5f} "
+              f"{'PASS' if model.confident else 'fallback':>9s} "
+              f"{trace.requirement_gib:9.1f} "
+              f"{trace.selection.config.name:>16s} "
+              f"{trace.wall_s:12.2f}")
 
-    print(f"\n== adaptive ladders under one {BUDGET_WALL_S:.0f}s budget ==")
-    budget = ProfilingBudget(wall_s=BUDGET_WALL_S)
-    print(f"{'job':16s} {'points':>6s} {'gate':>9s} {'req(GiB)':>9s} "
-          f"{'notes':>22s}")
-    for name, factory in LOCAL_JOBS.items():
-        rep = alloc.allocate(name, _profile_fn(profiler, factory),
-                             FULL_DATASET_GIB * GiB,
-                             sizes=ladder_from_anchor(ANCHOR).sizes,
-                             exclude_job_in_history=False,
-                             adaptive=True, budget=budget)
-        notes = " ".join(n for n, on in
-                         (("early-stop", rep.early_stop),
-                          ("escalated", rep.escalated),
-                          ("budget-cut", rep.budget_exhausted)) if on)
-        print(f"{name:16s} {rep.points_profiled:6d} "
-              f"{'PASS' if rep.model.confident else 'fallback':>9s} "
-              f"{rep.requirement_gib:9.1f} {notes:>22s}")
-    snap = budget.snapshot()
-    print(f"budget: {snap['points_spent']} points, "
-          f"{snap['elapsed_s']:.1f}/{snap['wall_s']:.0f}s elapsed, "
-          f"{snap['denials']} denials")
+    for placement in ("ladder", "infogain"):
+        print(f"\n== adaptive ({placement}) under one "
+              f"{BUDGET_WALL_S:.0f}s budget ==")
+        budget = ProfilingBudget(wall_s=BUDGET_WALL_S)
+        adaptive = AllocationPipeline(catalog, history,
+                                      overhead_per_node_gib=2.0,
+                                      leeway=0.05, fitter=zoo_fitter(),
+                                      adaptive=True, placement=placement,
+                                      budget=budget)
+        print(f"{'job':16s} {'points':>6s} {'gate':>9s} {'req(GiB)':>9s} "
+              f"{'notes':>22s}")
+        for name, factory in LOCAL_JOBS.items():
+            trace = adaptive.run(PipelineRequest(
+                name, _profile_fn(profiler, factory),
+                FULL_DATASET_GIB * GiB, sizes=ladder.sizes,
+                exclude_job_in_history=False))
+            plan = trace.plan
+            notes = " ".join(n for n, on in
+                             (("early-stop", plan.early_stop),
+                              ("escalated", plan.escalated),
+                              ("budget-cut", plan.budget_exhausted)) if on)
+            print(f"{name:16s} {plan.total_points:6d} "
+                  f"{'PASS' if plan.fit.confident else 'fallback':>9s} "
+                  f"{trace.requirement_gib:9.1f} {notes:>22s}")
+        snap = budget.snapshot()
+        print(f"budget: {snap['points_spent']} points, "
+              f"{snap['elapsed_s']:.1f}/{snap['wall_s']:.0f}s elapsed, "
+              f"{snap['denials']} denials")
 
 
 if __name__ == "__main__":

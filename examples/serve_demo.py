@@ -4,6 +4,15 @@ staggered arrivals, per-request latency stats, plus the allocation endpoint
 same serving surface. Uses the reduced rwkv6 (attention-free O(1)-state)
 and deepseek-7b (KV cache) configs.
 
+Every allocation answer is produced by the unified
+`repro.pipeline.AllocationPipeline` (one staged path: warm-start ->
+acquisition -> fit -> extrapolate -> select; see
+repro/pipeline/__init__.py) — the AllocationService adds only batching,
+caching and this wire surface. Adaptive requests default to
+information-optimal point placement (`placement="infogain"`; the PR-2
+ladder prefix remains as `placement="ladder"`), and the wire response
+reports which strategy planned the profile.
+
   PYTHONPATH=src python examples/serve_demo.py
 
 `demo_shared_state` shows the cross-process story (repro.state): a
@@ -122,8 +131,11 @@ def demo_shared_state(n_jobs: int = 8):
     the unix socket, service B over loopback TCP (the multi-host
     transport): profile points, confident models and a single budget
     envelope are common property, so B answers from A's work without a
-    single fresh profile run. A final compaction pass folds the shared
-    profile log back down to one row per point."""
+    single fresh profile run — and without charging the shared envelope a
+    second time (stored points are free by construction in the pipeline's
+    acquisition stage). Both services plan adaptively with the default
+    infogain placement. A final compaction pass folds the shared profile
+    log back down to one row per point."""
     if not HAS_UNIX_SOCKETS:
         print("shared state: skipped (no unix-domain sockets)")
         return

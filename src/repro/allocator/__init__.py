@@ -21,23 +21,27 @@ into a servable, stateful subsystem:
 
   classifier.py  Flora-style nearest-job classification
                  (arXiv:2502.21046): scale-invariant features of a
-                 profiling ladder, nearest-neighbor under a distance gate.
-                 Rescues jobs whose own profile fails every model gate by
-                 transferring the neighbor's model or best-known config.
+                 profiling ladder (memory shape, runtime shape, and
+                 categorical input-format/operator tags), nearest-neighbor
+                 under a distance gate. Rescues jobs whose own profile
+                 fails every model gate by transferring the neighbor's
+                 model or best-known config.
 
-  service.py     `AllocationService` — accepts many concurrent requests
-                 (worker thread + futures), coalesces a drain window into
-                 batches, dedups profiling ladders per job signature
-                 within a batch, serves ladder points from a ProfileResult
-                 LRU across batches, and walks the fallback chain
-                 registry -> zoo -> classifier -> BFA baseline.
-                 Profiling orchestration is delegated to
-                 `repro.profiling`: `adaptive=True` schedules ladders
-                 point-by-point with early stop, `budget=` enforces the
-                 paper's ten-minute envelope service-wide, `store=` backs
-                 the LRU with a file-locked multi-process JSONL store,
-                 and `executor=` profiles independent ladders and
-                 signature groups concurrently.
+  service.py     `AllocationService` — the batched/concurrent front over
+                 the unified `repro.pipeline.AllocationPipeline` (the ONE
+                 staged decision path, shared with the one-shot
+                 `CrispyAllocator`): worker thread + futures, drain-window
+                 batching, per-signature plan dedup, a cross-batch
+                 ProfileResult LRU the pipeline's acquisition stage reads
+                 through, and wire-facing stats. All ladder/fit/selection
+                 logic lives in `repro.pipeline`; `adaptive=True` plans
+                 with information-optimal point placement by default
+                 (`placement="infogain"`, "ladder" keeps the PR-2
+                 prefix), `budget=` enforces the paper's ten-minute
+                 envelope service-wide (cached points are never charged),
+                 `store=`/`backend=` share state across processes, and
+                 `executor=` profiles ladders and signature groups
+                 concurrently.
 
 Serving surface: `repro.serve.engine.AllocationEndpoint` adapts the
 service to dict-in/dict-out request handling next to the token-serving
@@ -46,8 +50,9 @@ requests/sec and cache hit-rate; `benchmarks/profiling_adaptive.py`
 compares fixed-vs-adaptive profiling cost.
 """
 from repro.allocator.classifier import (Classification, NearestJobClassifier,
-                                        feature_distance, profile_features,
-                                        runtime_features)
+                                        TAG_WEIGHT, feature_distance,
+                                        profile_features, runtime_features,
+                                        tag_distance)
 from repro.allocator.model_zoo import (DEFAULT_CANDIDATES, LOOCV_GATE,
                                        LogLinearModel, MODEL_KINDS,
                                        PiecewiseLinearModel, PowerLawModel,
@@ -61,7 +66,8 @@ __all__ = [
     "AllocationRequest", "AllocationResponse", "AllocationService",
     "Classification", "DEFAULT_CANDIDATES", "LOOCV_GATE", "LogLinearModel",
     "MODEL_KINDS", "ModelRecord", "ModelRegistry", "NearestJobClassifier",
-    "PiecewiseLinearModel", "PowerLawModel", "ServiceStats", "ZooFit",
-    "feature_distance", "fit_zoo", "model_from_dict", "model_to_dict",
-    "profile_features", "runtime_features", "zoo_fitter",
+    "PiecewiseLinearModel", "PowerLawModel", "ServiceStats", "TAG_WEIGHT",
+    "ZooFit", "feature_distance", "fit_zoo", "model_from_dict",
+    "model_to_dict", "profile_features", "runtime_features", "tag_distance",
+    "zoo_fitter",
 ]

@@ -22,11 +22,20 @@ ladder's runtime-vs-size curve is embedded the same scale-invariant way
 sides observed it. Jobs observed without runtimes (e.g. warm-started from
 persisted registry ladders, which keep only sizes/mems) fall back to the
 memory-shape distance, so the feature store never fragments.
+
+Flora additionally classifies on *categorical* job descriptors — input
+format, operator palette — because two jobs can tie on every measured
+curve yet be different programs. `observe`/`classify` accept an optional
+set of string tags (e.g. ``{"format:parquet", "op:join"}``); when both
+sides carry tags, their Jaccard distance joins the numeric blocks as
+`TAG_WEIGHT` virtual feature components in the same RMS pooling, so the
+distance gate's scale is unchanged and tags act as a tie-breaker rather
+than a veto. Sides without tags participate exactly as before.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -34,6 +43,14 @@ from repro.core.memory_model import fit_memory_model
 
 FEATURE_POINTS = 8          # resampled curve resolution
 RUNTIME_POINTS = 8          # resampled runtime-curve resolution
+# virtual components the categorical block adds to the RMS pooling. The
+# tie-breaker contract bounds it: even a fully disjoint palette (Jaccard
+# distance 1) over byte-identical curves must stay under the distance
+# gate, i.e. sqrt(W / (n_numeric + W)) < DEFAULT_MAX_DISTANCE for the
+# smallest numeric block (memory-only, n = FEATURE_POINTS + 3 = 11),
+# which needs W < ~0.73. W = 0.5 keeps tags decisive on exact ties and
+# influential on near-ties without ever vetoing a curve match alone.
+TAG_WEIGHT = 0.5
 DEFAULT_MAX_DISTANCE = 0.25
 
 
@@ -93,6 +110,15 @@ def feature_distance(a: np.ndarray, b: np.ndarray) -> float:
     return float(np.sqrt(np.mean((a - b) ** 2)))
 
 
+def tag_distance(a: FrozenSet[str], b: FrozenSet[str]) -> float:
+    """Jaccard distance between two categorical tag sets (0 == identical
+    palettes, 1 == disjoint)."""
+    if not a and not b:
+        return 0.0
+    union = len(a | b)
+    return 1.0 - len(a & b) / union if union else 0.0
+
+
 @dataclass
 class Classification:
     neighbor: str               # signature of the nearest observed job
@@ -104,6 +130,7 @@ class NearestJobClassifier:
         self.max_distance = max_distance
         self._features: Dict[str, np.ndarray] = {}
         self._runtime: Dict[str, Optional[np.ndarray]] = {}
+        self._tags: Dict[str, Optional[FrozenSet[str]]] = {}
 
     def __len__(self) -> int:
         return len(self._features)
@@ -116,35 +143,52 @@ class NearestJobClassifier:
 
     def observe(self, signature: str, sizes: Sequence[float],
                 mems: Sequence[float],
-                runtimes: Optional[Sequence[float]] = None) -> None:
+                runtimes: Optional[Sequence[float]] = None,
+                tags: Optional[Iterable[str]] = None) -> None:
         if len(sizes) >= 2:
             self._features[signature] = profile_features(sizes, mems)
             self._runtime[signature] = runtime_features(sizes, runtimes)
+            if tags is not None:
+                self._tags[signature] = frozenset(tags)
+            else:
+                # a tagless re-observation (service plan-cache miss, registry
+                # warm-up) must not erase a previously observed palette
+                self._tags.setdefault(signature, None)
 
     def _distance(self, query_mem: np.ndarray,
-                  query_rt: Optional[np.ndarray], sig: str) -> float:
-        """Memory-shape distance, extended over the runtime block when
-        both sides observed one (RMS over the concatenated vector, so the
-        gate's scale is unchanged)."""
+                  query_rt: Optional[np.ndarray],
+                  query_tags: Optional[FrozenSet[str]], sig: str) -> float:
+        """Memory-shape distance, extended over the runtime block and the
+        categorical tag block when both sides observed them. Pooling is
+        RMS over all (virtual) components, so the gate's scale is
+        unchanged however many blocks participate."""
+        blocks = [(query_mem, self._features[sig])]
         cand_rt = self._runtime.get(sig)
         if query_rt is not None and cand_rt is not None:
-            return feature_distance(
-                np.concatenate([query_mem, query_rt]),
-                np.concatenate([self._features[sig], cand_rt]))
-        return feature_distance(query_mem, self._features[sig])
+            blocks.append((query_rt, cand_rt))
+        sq_sum = sum(float(((a - b) ** 2).sum()) for a, b in blocks)
+        n = sum(a.size for a, _b in blocks)
+        cand_tags = self._tags.get(sig)
+        if query_tags is not None and cand_tags is not None:
+            sq_sum += TAG_WEIGHT * tag_distance(query_tags, cand_tags) ** 2
+            n += TAG_WEIGHT
+        return float(np.sqrt(sq_sum / n))
 
     def classify(self, sizes: Sequence[float], mems: Sequence[float],
                  runtimes: Optional[Sequence[float]] = None,
-                 exclude: Iterable[str] = ()) -> Optional[Classification]:
+                 exclude: Iterable[str] = (),
+                 tags: Optional[Iterable[str]] = None
+                 ) -> Optional[Classification]:
         """Nearest observed job under the distance gate, or None."""
         query_mem = profile_features(sizes, mems)
         query_rt = runtime_features(sizes, runtimes)
+        query_tags = frozenset(tags) if tags is not None else None
         skip = set(exclude)
         best: Optional[Classification] = None
         for sig in self._features:
             if sig in skip:
                 continue
-            d = self._distance(query_mem, query_rt, sig)
+            d = self._distance(query_mem, query_rt, query_tags, sig)
             if best is None or d < best.distance:
                 best = Classification(sig, d)
         if best is None or best.distance > self.max_distance:

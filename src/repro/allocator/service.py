@@ -1,59 +1,53 @@
-"""AllocationService: allocation as a servable, stateful subsystem.
+"""AllocationService: the unified pipeline behind a batched service front.
 
-Request lifecycle (one worker thread, many submitters):
+All allocation *decisions* — ladder resolution, point acquisition and
+placement, model fitting, requirement extrapolation, config selection,
+the registry/zoo/classifier/baseline fallback chain — live in
+`repro.pipeline.AllocationPipeline` (one staged path shared with the
+one-shot `CrispyAllocator`; see repro/pipeline/__init__.py for the stage
+diagram). This module contains ONLY the service concerns around it:
 
-  submit() --+                          +--> registry hit: skip profiling
-             |   drain window (coalesce |
-  submit() --+-> concurrent requests    +--> LRU-cached ladder profile
-             |   into one batch, group  |      -> model-zoo fit (LOOCV)
-  submit() --+   by job signature)      |      -> confident: persist model
-                                        |      -> else: nearest-job
-                                        |         classifier transfer
-                                        +--> per-request config selection
+  submit() --+                          +--> pipeline.warm_start
+             |   drain window (coalesce |      (registry hit: no profiling)
+  submit() --+-> concurrent requests    +--> plan cache (negative outcomes
+             |   into one batch, group  |      served without a refit)
+  submit() --+   by job signature)      +--> pipeline.measure_plan
+                                        |      (acquire -> fit -> fall back)
+                                        +--> pipeline.finalize per request
+                                             (extrapolate -> select)
 
-Requests for the same job signature that land in one batch share a single
-profiling ladder (dedup); repeats across batches hit the model registry and
-never profile again; distinct requests that need the same (signature, size)
-sample hit the ProfileResult LRU. Per-profile work is therefore done at
-most once per (signature, size) while the cache holds.
+plus the worker thread + futures, the cross-batch ProfileResult LRU the
+pipeline's acquisition stage reads through, per-batch registry/store
+refreshes and flushes, and wire-facing stats. Requests for the same job
+signature that land in one batch share a single plan; repeats across
+batches hit the model registry and never profile again.
 
-Fallback chain when no zoo candidate is confident — Flora-style (see
-classifier.py): transfer the nearest observed neighbor's registered model,
-else the neighbor's best historical config, else the paper's BFA baseline
-(requirement 0). Profiled ladders are always `observe`d by the classifier,
-so even gate-failing jobs contribute to future classifications.
+Profiling orchestration (repro.profiling) and shared state (repro.state)
+compose exactly as before:
 
-Profiling orchestration (repro.profiling) is delegated, not inlined:
-
-  adaptive=True      ladders run through the AdaptiveLadderScheduler —
-                     smallest point first, refit after each, stop early
-                     once the selected model is confident and its
-                     requirement prediction has stabilized; escalate past
-                     the base ladder only when candidates disagree.
+  adaptive=True      placement-driven acquisition — the default
+                     `placement="infogain"` profiles whichever size is
+                     expected to shrink candidate-model disagreement at
+                     full size the most and stops when further
+                     measurement would not change the answer;
+                     `placement="ladder"` keeps the PR-2 smallest-first
+                     prefix with gap-midpoint escalation.
   budget=            a shared ProfilingBudget gates every fresh profile
                      run (adaptive or fixed) — the paper's ten-minute
-                     envelope enforced service-wide.
-  store=             a file-locked ProfileStore backs the in-process LRU:
-                     points and calibrated anchors profiled by *any*
-                     process are reused, and `_ladder_of` skips anchor
-                     guessing for signatures with a persisted anchor.
+                     envelope enforced service-wide. Cached/stored points
+                     are NEVER charged.
+  store=             a ProfileStore (over any repro.state backend) backs
+                     the in-process LRU: points and calibrated anchors
+                     profiled by *any* process are reused.
   executor=          a ProfilingExecutor profiles fixed ladders
                      point-concurrently and fans independent signature
                      groups of one batch out over its pool.
-
-Shared state (repro.state) is unified behind one knob:
-
-  backend=           a `repro.state.StateBackend` (InMemoryBackend,
-                     FileBackend directory, or DaemonBackend socket).
-                     When given, the service builds its ProfileStore and
-                     model registry over it unless explicit `store=` /
-                     `registry=` override them — so N service processes
-                     pointed at one FileBackend root or one crispy-daemon
-                     share profile points, anchors and confident models.
-                     Pair it with `ProfilingBudget(..., backend=backend)`
-                     and those N processes also arbitrate ONE profiling
-                     envelope through atomic backend reservations instead
-                     of each spending a full copy.
+  backend=           a `repro.state.StateBackend`: the service builds its
+                     ProfileStore and model registry over it unless
+                     explicit `store=`/`registry=` override them, so N
+                     service processes share points, anchors, models —
+                     and ONE budget envelope when the ProfilingBudget
+                     carries the same backend.
 """
 from __future__ import annotations
 
@@ -66,14 +60,11 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.allocator.classifier import NearestJobClassifier
-from repro.allocator.model_zoo import fit_zoo
 from repro.allocator.registry import ModelRegistry
 from repro.core.catalog import ClusterConfig
 from repro.core.history import ExecutionHistory
 from repro.core.profiler import ProfileResult
-from repro.core.sampling import ladder_from_anchor
-from repro.core.selector import (DEFAULT_OVERHEAD_GIB, Selection,
-                                 select_crispy, select_like)
+from repro.core.selector import DEFAULT_OVERHEAD_GIB, Selection
 
 GiB = 1024 ** 3
 
@@ -102,10 +93,19 @@ class AllocationRequest:
     signature: Optional[str] = None     # defaults to the job name
     leeway: Optional[float] = None      # overrides the service default
     adaptive: Optional[bool] = None     # overrides the service default
+    placement: Optional[object] = None  # "infogain" | "ladder" | PointPlacer
+    tags: Optional[Sequence[str]] = None    # Flora-style categorical tags
 
     @property
     def sig(self) -> str:
         return self.signature if self.signature is not None else self.job
+
+    @property
+    def tags_key(self) -> Optional[frozenset]:
+        """Canonical form of the tag palette for grouping/caching: tags
+        can steer the classifier, so requests carrying different palettes
+        must never share a plan."""
+        return frozenset(self.tags) if self.tags is not None else None
 
 
 @dataclass
@@ -124,6 +124,7 @@ class AllocationResponse:
     early_stop: bool = False     # adaptive schedule stopped before 5 points
     escalated: bool = False      # adaptive schedule spent extra points
     budget_exhausted: bool = False   # the budget denied at least one point
+    placement: Optional[str] = None  # point-placement strategy (adaptive)
 
 
 @dataclass
@@ -152,19 +153,33 @@ class ServiceStats:
         return self.cache_hits / total if total else 0.0
 
 
-@dataclass
-class _Plan:
-    """Per-signature outcome shared by every request in a batch group."""
-    source: str
-    model: Optional[object]
-    candidate: Optional[str]
-    neighbor: Optional[str] = None
-    neighbor_selection: Optional[Selection] = None
-    profiled: int = 0
-    cache_hits: int = 0
-    early_stop: bool = False
-    escalated: bool = False
-    budget_exhausted: bool = False
+class _ProfileLRU:
+    """Cross-batch ProfileResult LRU behind the pipeline's PointSource
+    cache interface (get/put). Thread-safe: fixed-ladder points and
+    concurrent signature groups read through it from executor workers."""
+
+    def __init__(self, cap: int):
+        self._cache: "OrderedDict[Tuple[str, float], ProfileResult]" = \
+            OrderedDict()
+        self._cap = cap
+        self._lock = threading.Lock()
+
+    def get(self, signature: str, size: float) -> Optional[ProfileResult]:
+        key = (signature, float(size))
+        with self._lock:
+            r = self._cache.get(key)
+            if r is not None:
+                self._cache.move_to_end(key)
+            return r
+
+    def put(self, signature: str, size: float, result: ProfileResult,
+            from_store: bool = False) -> None:
+        key = (signature, float(size))
+        with self._lock:
+            self._cache[key] = result
+            self._cache.move_to_end(key)
+            while len(self._cache) > self._cap:
+                self._cache.popitem(last=False)
 
 
 class AllocationService:
@@ -178,10 +193,10 @@ class AllocationService:
                  profile_cache_size: int = 512,
                  batch_window_s: float = 0.005,
                  adaptive: bool = False,
+                 placement="infogain",      # repro.pipeline point placement
                  budget=None,               # repro.profiling ProfilingBudget
                  store=None,                # repro.profiling ProfileStore
                  executor=None,             # repro.profiling ProfilingExecutor
-                 scheduler=None,            # AdaptiveLadderScheduler override
                  backend=None):             # repro.state StateBackend
         self.catalog = catalog
         self.history = history
@@ -198,29 +213,36 @@ class AllocationService:
         self.registry = registry if registry is not None else ModelRegistry()
         self.classifier = classifier if classifier is not None \
             else NearestJobClassifier()
-        self.candidates = candidates
-        self.overhead = overhead_per_node_gib
-        self.leeway = leeway
-        self.batch_window_s = batch_window_s
-        self.adaptive = adaptive
         self.budget = budget
         self.store = store
         self.executor = executor
-        self._scheduler = scheduler
+        self.batch_window_s = batch_window_s
+        self.adaptive = adaptive
         self.stats = ServiceStats()
+        self._cache = _ProfileLRU(profile_cache_size)
 
-        self._cache: "OrderedDict[Tuple[str, float], ProfileResult]" = \
-            OrderedDict()
+        # the ONE decision path (deferred import: repro.pipeline imports
+        # allocator submodules)
+        from repro.pipeline import AllocationPipeline
+        self.pipeline = AllocationPipeline(
+            catalog, history, registry=self.registry,
+            classifier=self.classifier, candidates=candidates,
+            overhead_per_node_gib=overhead_per_node_gib, leeway=leeway,
+            adaptive=adaptive, placement=placement, budget=budget,
+            store=store, executor=executor, cache=self._cache,
+            defer_registry_save=True,
+            refresh_store=False)    # _process_batch refreshes once per batch
+
         self._cache_cap = profile_cache_size
-        # negative-outcome cache: (sig, ladder) -> unconfident _Plan, so a
-        # noisy job resubmitted N times doesn't redo the zoo LOOCV fit and
-        # classifier scan N times. Cleared whenever the observable world
-        # changes (new signature observed / new model registered), because
-        # either can turn a baseline outcome into a classifier one.
-        # Guarded by _plan_lock: with an executor, a batch's signature
-        # groups plan concurrently.
-        self._plan_cache: "OrderedDict[Tuple[str, Tuple[float, ...]], _Plan]" \
-            = OrderedDict()
+        # negative-outcome cache: (sig, ladder, tags, settings) ->
+        # unconfident plan,
+        # so a noisy job resubmitted N times doesn't redo the zoo LOOCV
+        # fit and classifier scan N times. Cleared whenever the observable
+        # world changes (new signature observed / new model registered),
+        # because either can turn a baseline outcome into a classifier
+        # one. Guarded by _plan_lock: with an executor, a batch's
+        # signature groups plan concurrently.
+        self._plan_cache: "OrderedDict[Tuple, object]" = OrderedDict()
         self._plan_cache_hist_version = history.version
         self._plan_lock = threading.Lock()
         self._lock = threading.Lock()
@@ -316,7 +338,7 @@ class AllocationService:
                 if not self._pending and self._closed:
                     return
             # coalesce: give concurrent submitters a window to land in the
-            # same batch so same-signature ladders dedup to one profile run
+            # same batch so same-signature ladders dedup to one plan
             if self.batch_window_s > 0:
                 time.sleep(self.batch_window_s)
             with self._cv:
@@ -324,13 +346,39 @@ class AllocationService:
             if batch:
                 self._process_batch(batch)
 
+    def _preq(self, req: AllocationRequest):
+        """The pipeline-facing view of a wire request."""
+        from repro.pipeline import PipelineRequest
+        return PipelineRequest(req.job, req.profile_at, req.full_size,
+                               anchor=req.anchor, sizes=req.sizes,
+                               signature=req.signature, leeway=req.leeway,
+                               adaptive=req.adaptive,
+                               placement=req.placement, tags=req.tags)
+
+    def _settings_key(self, req: AllocationRequest):
+        """Resolved acquisition settings for grouping/plan-cache keys: an
+        explicit adaptive=/placement= override produces different points
+        than the service defaults, so such requests must never share (or
+        be served) a plan computed under other settings."""
+        adaptive = req.adaptive if req.adaptive is not None \
+            else self.adaptive
+        if not adaptive:
+            return (False, None)
+        placement = req.placement if req.placement is not None \
+            else self.pipeline.placement
+        # a placer INSTANCE keys by identity (two instances of one class
+        # can carry different knobs, so a shared name would alias them;
+        # holding the instance in the key also keeps its id from being
+        # recycled under a cached plan). Placement names key by value.
+        return (True, placement)
+
     def _process_batch(self,
                        batch: List[Tuple[AllocationRequest, Future]]) -> None:
         with self._lock:
             self.stats.batches += 1
             self.stats.requests += len(batch)
         # pull sibling processes' work in once per batch: profile points /
-        # anchors from the shared store, models from a locked registry
+        # anchors from the shared store, models from a shared registry
         if self.store is not None:
             try:
                 self.store.refresh()
@@ -342,23 +390,28 @@ class AllocationService:
                 refresh()
             except Exception:
                 pass
-        # group by (signature, ladder): same-signature requests share one
-        # profiling ladder only when they actually ask for the same ladder,
-        # so coalescing never silently overrides an explicit sizes/anchor
-        groups: "OrderedDict[Tuple[str, Tuple[float, ...]], " \
+        # group by (signature, ladder, tags, acquisition settings):
+        # same-signature requests share one plan only when they ask for
+        # the same ladder, carry the same tag palette AND resolve to the
+        # same adaptive/placement settings — coalescing never silently
+        # overrides an explicit sizes/anchor, a tag-steered
+        # classification, or a per-request acquisition override
+        groups: "OrderedDict[Tuple, " \
                 "List[Tuple[AllocationRequest, Future]]]" = OrderedDict()
         for req, fut in batch:
-            groups.setdefault((req.sig, self._ladder_of(req)),
-                              []).append((req, fut))
+            ladder = self.pipeline.ladder_for(self._preq(req))
+            groups.setdefault(
+                (req.sig, ladder, req.tags_key, self._settings_key(req)),
+                []).append((req, fut))
 
         def handle_group(entry) -> None:
-            (sig, _ladder), items = entry
+            (sig, ladder, _tags, _settings), items = entry
             live = [(req, fut) for req, fut in items if not fut.cancelled()]
             if not live:                    # whole group cancelled: don't
                 return                      # profile for nobody
             t0 = time.monotonic()
             try:
-                plan = self._plan(sig, live[0][0])
+                plan = self._plan(sig, ladder, live[0][0])
             except Exception as e:          # a failing profile_at fails its
                 for _, fut in live:         # group, never the whole batch
                     _resolve(fut, exc=e)
@@ -389,42 +442,16 @@ class AllocationService:
             with self._lock:
                 self.stats.flush_errors += 1
 
-    # -- planning -----------------------------------------------------------
-    def _ladder_of(self, req: AllocationRequest) -> Tuple[float, ...]:
-        if req.sizes is not None:
-            return tuple(float(s) for s in req.sizes)
-        anchor = req.anchor
-        if anchor is None and self.store is not None:
-            # a signature any process ever calibrated skips anchor guessing
-            anchor = self.store.get_anchor(req.sig)
-        if anchor is None:
-            anchor = req.full_size * 0.01
-        elif req.anchor is not None and self.store is not None \
-                and self.store.get_anchor(req.sig) is None:
-            try:
-                self.store.put_anchor(req.sig, float(req.anchor))
-            except Exception:
-                pass            # a failed anchor write must never kill the
-                                # worker (the batch's futures would hang)
-        return tuple(float(s) for s in ladder_from_anchor(anchor).sizes)
-
-    def _make_scheduler(self):
-        if self._scheduler is None:
-            # deferred import: repro.profiling imports allocator submodules
-            from repro.profiling.scheduler import AdaptiveLadderScheduler
-            self._scheduler = AdaptiveLadderScheduler(
-                candidates=self.candidates, budget=self.budget)
-        return self._scheduler
-
-    def _plan(self, sig: str, req: AllocationRequest) -> _Plan:
-        rec = self.registry.get(sig)
-        if rec is not None and getattr(rec.model, "confident", False):
+    # -- planning: pipeline calls + caches + stats --------------------------
+    def _plan(self, sig: str, ladder: Tuple[float, ...],
+              req: AllocationRequest):
+        plan = self.pipeline.warm_start(sig)
+        if plan is not None:
             with self._lock:
                 self.stats.registry_hits += 1
-            return _Plan("registry", rec.model, rec.candidate)
+            return plan
 
-        ladder = self._ladder_of(req)
-        plan_key = (sig, ladder)
+        plan_key = (sig, ladder, req.tags_key, self._settings_key(req))
         with self._plan_lock:
             # classifier/baseline plans freeze history-derived selections,
             # so a history mutation invalidates the whole negative cache
@@ -440,70 +467,23 @@ class AllocationService:
                 # this request did no profiling; don't report the
                 # original's counters or adaptive-schedule flags
                 return dataclasses.replace(cached_plan, profiled=0,
-                                           cache_hits=0, early_stop=False,
+                                           cache_hits=0, store_hits=0,
+                                           early_stop=False,
                                            escalated=False,
                                            budget_exhausted=False)
 
-        sizes, mems, zoo, flags = self._measure_and_fit(sig, req,
-                                                        list(ladder))
-        fresh, hits, walls = flags["fresh"], flags["hits"], flags["walls"]
-        with self._lock:
-            self.stats.zoo_fits += 1
-        with self._plan_lock:
-            # never discard profiling work: even gate-failing ladders feed
-            # future nearest-job classifications (memory AND runtime shape)
-            newly_observed = not self.classifier.has(sig)
-            self.classifier.observe(sig, sizes, mems, walls)
-            if newly_observed:
-                self._plan_cache.clear()  # a new neighbor may rescue others
-
-        if zoo.confident:
-            model = getattr(zoo, "model", zoo)
-            candidate = getattr(zoo, "candidate",
-                                getattr(zoo, "kind", "linear"))
-            self.registry.put(sig, model, candidate, sizes, mems,
-                              defer_save=True)
+        plan = self.pipeline.measure_plan(self._preq(req), ladder)
+        self._count_plan(plan)
+        if plan.newly_observed or plan.registered:
             with self._plan_lock:
-                self._plan_cache.clear()  # its model may rescue others too
-            with self._lock:
-                self.stats.zoo_confident += 1
-            return _Plan("zoo", zoo, candidate, profiled=fresh,
-                         cache_hits=hits, **flags["adaptive"])
-
-        plan = None
-        with self._plan_lock:
-            cls = self.classifier.classify(sizes, mems, walls,
-                                           exclude=(sig,)) \
-                if len(sizes) >= 2 else None
-        if cls is not None:
-            neighbor_rec = self.registry.get(cls.neighbor, count_hit=False)
-            if neighbor_rec is not None and \
-                    getattr(neighbor_rec.model, "confident", False):
-                plan = _Plan("classifier", neighbor_rec.model,
-                             neighbor_rec.candidate, neighbor=cls.neighbor,
-                             profiled=fresh, cache_hits=hits,
-                             **flags["adaptive"])
-            else:
-                sel = select_like(self.catalog, self.history, cls.neighbor)
-                if sel is not None:
-                    plan = _Plan("classifier", None, None,
-                                 neighbor=cls.neighbor,
-                                 neighbor_selection=sel,
-                                 profiled=fresh, cache_hits=hits,
-                                 **flags["adaptive"])
-        if plan is None:
-            plan = _Plan("baseline", None, None,
-                         profiled=fresh, cache_hits=hits,
-                         **flags["adaptive"])
-        with self._lock:
-            if plan.source == "classifier":
-                self.stats.classifier_fallbacks += 1
-            else:
-                self.stats.baseline_fallbacks += 1
+                # a new neighbor (or a new confident model) may rescue
+                # previously-cached negative outcomes
+                self._plan_cache.clear()
         # cache only fully-profiled negative outcomes: a plan cut short by
         # the budget reflects a transient denial, not a property of the
         # job, and must not stick once the budget recovers
-        if not plan.budget_exhausted:
+        if plan.source in ("classifier", "baseline") \
+                and not plan.budget_exhausted:
             with self._plan_lock:
                 self._plan_cache[plan_key] = plan
                 self._plan_cache.move_to_end(plan_key)
@@ -511,161 +491,34 @@ class AllocationService:
                     self._plan_cache.popitem(last=False)
         return plan
 
-    def _measure_and_fit(self, sig: str, req: AllocationRequest,
-                         sizes: List[float]):
-        """Profile a ladder (adaptively or fixed) and fit the zoo over
-        whatever points materialized. Returns (sizes, mems, fit, flags)."""
-        adaptive = req.adaptive if req.adaptive is not None else self.adaptive
-        aflags = {"early_stop": False, "escalated": False,
-                  "budget_exhausted": False}
-        if adaptive:
-            ap = self._make_scheduler().run(sizes, req.full_size,
-                                            self._point_fn(sig, req))
-            aflags = {"early_stop": ap.early_stop,
-                      "escalated": ap.escalated,
-                      "budget_exhausted": ap.budget_exhausted}
-            with self._lock:
-                self.stats.adaptive_plans += 1
-                self.stats.early_stops += int(ap.early_stop)
-                self.stats.escalations += int(ap.escalated)
-                self.stats.budget_denied += int(ap.budget_exhausted)
-                self.stats.points_saved += max(0, len(sizes)
-                                               - ap.total_points)
-            return (ap.sizes, ap.mems, ap.fit,
-                    {"fresh": ap.points, "hits": ap.cache_hits,
-                     "walls": [r.wall_s for r in ap.results],
-                     "adaptive": aflags})
-
-        results, fresh, hits, exhausted = self._profile_ladder(sig, req,
-                                                               sizes)
-        got = [(s, r) for s, r in zip(sizes, results) if r is not None]
-        used = [s for s, _ in got]
-        mems = [r.job_mem_bytes for _, r in got]
-        walls = [r.wall_s for _, r in got]
-        aflags["budget_exhausted"] = exhausted
-        if exhausted:
-            with self._lock:
-                self.stats.budget_denied += 1
-        zoo = fit_zoo(used, mems, self.candidates)
-        return used, mems, zoo, {"fresh": fresh, "hits": hits,
-                                 "walls": walls, "adaptive": aflags}
-
-    def _point_fn(self, sig: str, req: AllocationRequest):
-        """Profile-point callback for the scheduler/executor, carrying a
-        `.peek` so budget gates can serve cached points for free."""
-        def pp(s: float) -> Tuple[ProfileResult, bool]:
-            return self._profile_point(sig, req, s)
-        pp.peek = lambda s: self._lookup_point(sig, s)
-        return pp
-
-    def _lookup_point(self, sig: str, s: float) -> Optional[ProfileResult]:
-        """Cache-hierarchy lookup only (LRU -> shared store), no profiling.
-        Thread-safe; counts hits."""
-        key = (sig, float(s))
+    def _count_plan(self, plan) -> None:
+        """Map one measured plan onto the wire-facing counters."""
         with self._lock:
-            cached = self._cache.get(key)
-            if cached is not None:
-                self._cache.move_to_end(key)
-                self.stats.cache_hits += 1
-        if cached is not None:
-            return cached
-        if self.store is not None:
-            stored = self.store.get(sig, s)
-            if stored is not None:
-                with self._lock:
-                    self.stats.store_hits += 1
-                    self.stats.cache_hits += 1
-                    self._cache_put_locked(key, stored)
-                return stored
-        return None
+            s = self.stats
+            s.zoo_fits += int(plan.fit_ran)
+            s.zoo_confident += int(plan.registered)
+            if plan.source == "classifier":
+                s.classifier_fallbacks += 1
+            elif plan.source == "baseline":
+                s.baseline_fallbacks += 1
+            s.profile_calls += plan.profiled
+            s.cache_hits += plan.cache_hits
+            s.store_hits += plan.store_hits
+            if plan.adaptive:
+                s.adaptive_plans += 1
+                s.early_stops += int(plan.early_stop)
+                s.escalations += int(plan.escalated)
+                s.points_saved += max(0, plan.base_points
+                                      - plan.total_points)
+            s.budget_denied += int(plan.budget_exhausted)
 
-    def _profile_point(self, sig: str, req: AllocationRequest,
-                       s: float) -> Tuple[ProfileResult, bool]:
-        """One ladder point: cache hierarchy first, fresh profile run on a
-        miss (recorded in LRU + store). Returns (result, fresh)."""
-        cached = self._lookup_point(sig, s)
-        if cached is not None:
-            return cached, False
-        r = req.profile_at(s)
-        with self._lock:
-            self.stats.profile_calls += 1
-            self._cache_put_locked((sig, float(s)), r)
-        if self.store is not None:
-            try:
-                self.store.put(sig, s, r)
-            except Exception:
-                pass                    # a write-through failure costs a
-                                        # future re-profile, never the plan
-        return r, True
-
-    def _cache_put_locked(self, key: Tuple[str, float],
-                          r: ProfileResult) -> None:
-        self._cache[key] = r
-        self._cache.move_to_end(key)
-        while len(self._cache) > self._cache_cap:
-            self._cache.popitem(last=False)
-
-    def _profile_ladder(self, sig: str, req: AllocationRequest,
-                        sizes: Sequence[float]
-                        ) -> Tuple[List[Optional[ProfileResult]], int, int,
-                                   bool]:
-        """Fixed ladder: all points, concurrently when an executor is
-        configured, each *fresh* run gated by the budget (cached points
-        are always free). Returns results aligned with `sizes` (None =
-        budget denial), fresh count, hit count, and whether the budget
-        denied anything."""
-        pp = self._point_fn(sig, req)
-        if self.executor is not None:
-            rows = self.executor.profile_ladder(sizes, pp,
-                                                budget=self.budget)
-            results = [r for _s, r, _f in rows]
-            fresh = sum(1 for _s, r, f in rows if r is not None and f)
-            hits = sum(1 for _s, r, f in rows if r is not None and not f)
-            return results, fresh, hits, any(r is None for r in results)
-
-        results: List[Optional[ProfileResult]] = []
-        fresh = hits = 0
-        exhausted = False
-        for s in sizes:
-            cached = pp.peek(s)
-            if cached is not None:
-                hits += 1
-                results.append(cached)
-                continue
-            if self.budget is not None and not self.budget.try_spend():
-                results.append(None)
-                exhausted = True
-                continue
-            r, was_fresh = pp(s)
-            if was_fresh:
-                fresh += 1
-                if self.budget is not None:
-                    self.budget.charge(r.wall_s)
-            else:
-                hits += 1       # raced with a concurrent group's profile
-                if self.budget is not None:
-                    self.budget.refund()
-            results.append(r)
-        return results, fresh, hits, exhausted
-
-    def _respond(self, plan: _Plan, req: AllocationRequest,
+    def _respond(self, plan, req: AllocationRequest,
                  wall: float) -> AllocationResponse:
-        leeway = req.leeway if req.leeway is not None else self.leeway
-        if plan.model is not None:
-            req_gib = plan.model.requirement(req.full_size, leeway) / GiB
-            sel = select_crispy(self.catalog, self.history, req_gib,
-                                overhead_per_node_gib=self.overhead,
-                                exclude_job=req.job)
-        elif plan.neighbor_selection is not None:
-            req_gib = 0.0
-            sel = plan.neighbor_selection
-        else:
-            req_gib = 0.0
-            sel = select_crispy(self.catalog, self.history, 0.0,
-                                overhead_per_node_gib=self.overhead,
-                                exclude_job=req.job)
-        return AllocationResponse(req.job, req.sig, plan.source,
-                                  plan.candidate, plan.model, req_gib, sel,
-                                  plan.neighbor, plan.profiled,
-                                  plan.cache_hits, wall, plan.early_stop,
-                                  plan.escalated, plan.budget_exhausted)
+        trace = self.pipeline.finalize(plan, self._preq(req), wall)
+        p = trace.plan
+        return AllocationResponse(req.job, req.sig, p.source, p.candidate,
+                                  p.model, trace.requirement_gib,
+                                  trace.selection, p.neighbor, p.profiled,
+                                  p.cache_hits, wall, p.early_stop,
+                                  p.escalated, p.budget_exhausted,
+                                  p.placement)

@@ -1,29 +1,36 @@
 """Crispy orchestration (paper §III-A): sample -> profile -> model -> select.
 
-`CrispyAllocator` is backend-agnostic: give it a `profile_at(size)` callable
-(RSS-based for local dataflow jobs, XLA-compile-based for TPU jobs via
+`CrispyAllocator` is the one-shot convenience wrapper over the unified
+`repro.pipeline.AllocationPipeline` — the same staged decision path the
+batched `AllocationService` drives (see repro/pipeline/__init__.py for
+the stage diagram). Give it a `profile_at(size)` callable (RSS-based for
+local dataflow jobs, XLA-compile-based for TPU jobs via
 core/hbm_planner.py) and a full-size target, and it runs the paper's four
-steps end to end.
+steps end to end, returning a `CrispyReport` built from the shared
+`PipelineTrace`.
 
-The modeling step is pluggable: `fitter(sizes, mems)` must return an object
-with `requirement(full_size, leeway)` and `confident` (the memory-model
-interface of core/memory_model.py). The default is the paper's OLS linear
-fit; pass `repro.allocator.model_zoo.zoo_fitter()` for the multi-candidate
-model zoo.
+The modeling step is pluggable: `fitter(sizes, mems)` must return an
+object with `requirement(full_size, leeway)` and `confident` (the
+memory-model interface of core/memory_model.py). The default is the
+paper's OLS linear fit; pass `repro.allocator.model_zoo.zoo_fitter()` for
+the multi-candidate model zoo (which also unlocks information-optimal
+point placement — `placement="infogain"` needs candidate models to
+disagree about).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence
+from typing import TYPE_CHECKING, Any, Callable, List, Optional, Sequence
 
 from repro.core.catalog import ClusterConfig
 from repro.core.history import ExecutionHistory
 from repro.core.memory_model import fit_memory_model
 from repro.core.profiler import ProfileResult
-from repro.core.sampling import Ladder, ladder_from_anchor
-from repro.core.selector import (DEFAULT_OVERHEAD_GIB, Selection,
-                                 select_crispy)
+from repro.core.selector import DEFAULT_OVERHEAD_GIB, Selection
+
+if TYPE_CHECKING:       # runtime import is deferred: repro.pipeline's
+    # acquisition stage imports repro.core submodules
+    from repro.pipeline import AllocationPipeline, PipelineTrace
 
 GiB = 1024 ** 3
 
@@ -44,10 +51,20 @@ class CrispyReport:
     early_stop: bool = False         # adaptive: stopped before the ladder end
     escalated: bool = False          # adaptive: spent extra points
     budget_exhausted: bool = False   # a point was denied by the budget
+    trace: Optional[PipelineTrace] = None    # the full staged-path record
 
     @property
     def points_profiled(self) -> int:
         return len(self.sizes)
+
+    @classmethod
+    def from_trace(cls, trace: "PipelineTrace") -> "CrispyReport":
+        plan = trace.plan
+        return cls(trace.job, list(plan.sizes), list(plan.mems),
+                   plan.fit if plan.fit is not None else plan.model,
+                   trace.requirement_gib, trace.selection, trace.wall_s,
+                   list(plan.results), plan.early_stop, plan.escalated,
+                   plan.budget_exhausted, trace)
 
 
 class CrispyAllocator:
@@ -55,12 +72,21 @@ class CrispyAllocator:
                  history: ExecutionHistory,
                  overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
                  leeway: float = 0.0,
-                 fitter: ModelFitter = fit_memory_model):
+                 fitter: ModelFitter = fit_memory_model,
+                 placement="infogain"):
         self.catalog = catalog
         self.history = history
         self.overhead = overhead_per_node_gib
         self.leeway = leeway
         self.fitter = fitter
+        self.placement = placement
+
+    def _pipeline(self, budget=None, store=None) -> "AllocationPipeline":
+        from repro.pipeline import AllocationPipeline
+        return AllocationPipeline(
+            self.catalog, self.history, fitter=self.fitter,
+            overhead_per_node_gib=self.overhead, leeway=self.leeway,
+            placement=self.placement, budget=budget, store=store)
 
     def allocate(self, job: str,
                  profile_at: Callable[[float], ProfileResult],
@@ -70,63 +96,32 @@ class CrispyAllocator:
                  exclude_job_in_history: bool = True,
                  adaptive: bool = False,
                  budget=None,
-                 store=None) -> CrispyReport:
-        """Paper steps 1-4. With `adaptive=True` (or a
-        `repro.profiling.ProfilingBudget` passed as `budget=`) the ladder
-        runs through the AdaptiveLadderScheduler: smallest point first,
-        refit after each, early stop once the model is confident and its
-        requirement prediction has stabilized — strictly fewer profile
-        runs than the fixed ladder on clean jobs, same fallback behavior
-        on noisy ones.
+                 store=None,
+                 placement=None) -> CrispyReport:
+        """Paper steps 1-4 through the unified pipeline. With
+        `adaptive=True` (or a `repro.profiling.ProfilingBudget` passed as
+        `budget=`) point placement is strategy-driven: the default
+        `placement="infogain"` profiles whichever size is expected to
+        shrink candidate-model disagreement at full size the most and
+        stops when further measurement would not change the answer;
+        `placement="ladder"` keeps the PR-2 smallest-first prefix with
+        gap-midpoint escalation. Both profile strictly fewer points than
+        the fixed ladder on clean jobs and fall back identically on noisy
+        ones.
 
         `store=` (a `repro.profiling.ProfileStore`, over any
         `repro.state` backend) makes the one-shot path a shared-state
         citizen too: ladder points and calibrated anchors profiled by any
-        process are reused instead of re-measured, and fresh points are
-        written back. Pass `budget=ProfilingBudget(..., backend=...)` to
-        arbitrate one cross-process envelope as well."""
-        t0 = time.monotonic()
-        if sizes is None:
-            if anchor is None and store is not None:
-                anchor = store.get_anchor(job)
-            elif anchor is not None and store is not None \
-                    and store.get_anchor(job) is None:
-                store.put_anchor(job, float(anchor))
-            ladder = ladder_from_anchor(anchor if anchor is not None
-                                        else full_size * 0.01)
-            sizes = ladder.sizes
-
-        def point(s: float):
-            if store is not None:
-                cached = store.get(job, s)
-                if cached is not None:
-                    return cached, False
-            r = profile_at(s)
-            if store is not None:
-                store.put(job, s, r)
-            return r, True
-        if store is not None:
-            point.peek = lambda s: store.get(job, s)
-
-        if adaptive or budget is not None:
-            # deferred import: repro.profiling depends on allocator modules
-            from repro.profiling.scheduler import AdaptiveLadderScheduler
-            sched = AdaptiveLadderScheduler(fitter=self.fitter,
-                                            budget=budget)
-            ap = sched.run(sizes, full_size, point)
-            sizes, mems, results = ap.sizes, ap.mems, ap.results
-            model = ap.fit
-            flags = (ap.early_stop, ap.escalated, ap.budget_exhausted)
-        else:
-            results = [point(s)[0] for s in sizes]
-            mems = [r.job_mem_bytes for r in results]
-            model = self.fitter(sizes, mems)
-            flags = (False, False, False)
-        req_gib = model.requirement(full_size, self.leeway) / GiB
-        sel = select_crispy(
-            self.catalog, self.history, req_gib,
-            overhead_per_node_gib=self.overhead,
-            exclude_job=job if exclude_job_in_history else None)
-        wall = time.monotonic() - t0
-        return CrispyReport(job, list(sizes), mems, model, req_gib, sel,
-                            wall, results, *flags)
+        process are reused instead of re-measured (the acquisition stage
+        refreshes the store, so sibling points are never double-charged),
+        and fresh points are written back. Pass
+        `budget=ProfilingBudget(..., backend=...)` to arbitrate one
+        cross-process envelope as well."""
+        from repro.pipeline import PipelineRequest
+        pipeline = self._pipeline(budget=budget, store=store)
+        trace = pipeline.run(PipelineRequest(
+            job, profile_at, full_size, anchor=anchor, sizes=sizes,
+            adaptive=adaptive or budget is not None,
+            placement=placement,
+            exclude_job_in_history=exclude_job_in_history))
+        return CrispyReport.from_trace(trace)

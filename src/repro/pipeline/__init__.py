@@ -1,0 +1,97 @@
+"""Unified allocation pipeline: ONE staged decision path for every caller.
+
+The paper's core loop (§III-A: sample -> profile -> model -> select) used
+to exist twice — once in `CrispyAllocator.allocate` and once, with
+diverging cache/store/budget semantics, inside `AllocationService`. This
+package is now the only implementation; everything else is an entry point
+that builds requests and reports around it:
+
+                         PipelineRequest
+                               |
+        +----------------------v----------------------+
+        | 1  warm-start lookup                        |
+        |    registry.get(sig) -> confident model?    |--yes--> stage 5
+        +----------------------+----------------------+
+                               | no
+        +----------------------v----------------------+
+        | 2  point acquisition        (acquisition.py)|
+        |    PointSource: LRU -> shared ProfileStore  |
+        |    -> fresh profile run; cached points are  |
+        |    NEVER budget-charged; ladder from anchor |
+        |    (given > store > 1% of full size)        |
+        |    placement when adaptive   (placement.py) |
+        |      "infogain" (default): next size =      |
+        |        argmax expected reduction in         |
+        |        candidate disagreement at full_size  |
+        |      "ladder": smallest-first prefix +      |
+        |        gap-midpoint escalation (PR-2)       |
+        +----------------------+----------------------+
+                               |
+        +----------------------v----------------------+
+        | 3  model fitting                            |
+        |    fitter / model zoo (LOOCV selection)     |
+        +----------------------+----------------------+
+                               |
+        +----------------------v----------------------+
+        | 4  gate + fallback chain                    |
+        |    classifier.observe (always)              |
+        |    confident -> register + serve "zoo"      |
+        |    else nearest-job transfer ("classifier") |
+        |    else requirement 0 ("baseline" == BFA)   |
+        +----------------------+----------------------+
+                               |            (per request, plans are shared
+        +----------------------v----------+  by coalesced signature groups)
+        | 5  requirement extrapolation    |
+        |    model.requirement(full_size, |
+        |                      leeway)    |
+        +----------------------+----------+
+                               |
+        +----------------------v----------+
+        | 6  config selection             |
+        |    select_crispy / neighbor's   |
+        |    best config / BFA            |
+        +----------------------+----------+
+                               |
+                         PipelineTrace
+                          /          \
+                 CrispyReport    AllocationResponse
+               (core/crispy.py) (allocator/service.py)
+
+Entry points driving the pipeline:
+
+  * `CrispyAllocator.allocate` (core/crispy.py) — thin one-shot wrapper;
+  * `AllocationService` (allocator/service.py) — batching, coalescing,
+    futures, LRU and plan caches, wire stats: CONCURRENCY ONLY, no
+    ladder/fit/selection logic of its own (tests/test_allocator.py pins
+    this with a parity contract: service and one-shot answers over the
+    same backend are byte-identical);
+  * `examples/profile_and_select.py`, `benchmarks/point_placement.py` —
+    direct `AllocationPipeline.run()` users.
+
+Shared state composes exactly as before: `store=` (ProfileStore over any
+repro.state backend), `budget=` (ProfilingBudget, shared-envelope aware),
+`executor=` (ProfilingExecutor for fixed-ladder point concurrency),
+`registry=`/`classifier=` for warm starts and Flora-style transfer.
+"""
+from repro.pipeline.acquisition import (AcquisitionStats, MemoryPointCache,
+                                        PointSource)
+from repro.pipeline.pipeline import (AllocationPipeline, GiB, PipelinePlan,
+                                     PipelineRequest, PipelineTrace)
+from repro.pipeline.placement import (DISAGREE_RTOL, InfoGainPlacer,
+                                      LadderPlacer, MAX_EXTRA_POINTS,
+                                      MIN_POINTS, PLACEMENTS,
+                                      PlacementOutcome, PlacementState,
+                                      PointPlacer, STABILITY_RTOL,
+                                      candidate_disagreement,
+                                      drive_placement, gap_midpoints,
+                                      make_placer, prediction_spread)
+
+__all__ = [
+    "AcquisitionStats", "AllocationPipeline", "DISAGREE_RTOL", "GiB",
+    "InfoGainPlacer", "LadderPlacer", "MAX_EXTRA_POINTS",
+    "MemoryPointCache", "MIN_POINTS", "PLACEMENTS", "PipelinePlan",
+    "PipelineRequest", "PipelineTrace", "PlacementOutcome",
+    "PlacementState", "PointPlacer", "PointSource", "STABILITY_RTOL",
+    "candidate_disagreement", "drive_placement", "gap_midpoints",
+    "make_placer", "prediction_spread",
+]

@@ -1,0 +1,341 @@
+"""AllocationPipeline: the paper's loop as ONE staged decision path.
+
+See the package docstring (`repro/pipeline/__init__.py`) for the stage
+diagram. `AllocationPipeline.plan()` runs the per-signature stages
+(warm-start, acquisition, fitting, fallback classification);
+`finalize()` runs the per-request stages (requirement extrapolation,
+config selection) and returns a `PipelineTrace` — the one record both
+`CrispyReport` (core/crispy.py) and `AllocationResponse`
+(allocator/service.py) are built from. `run()` composes the two for
+one-shot callers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.allocator.model_zoo import fit_zoo
+from repro.core.catalog import ClusterConfig
+from repro.core.history import ExecutionHistory
+from repro.core.profiler import ProfileResult
+from repro.core.sampling import ladder_from_anchor
+from repro.core.selector import (DEFAULT_OVERHEAD_GIB, Selection,
+                                 select_crispy, select_like)
+from repro.pipeline.acquisition import PointSource
+from repro.pipeline.placement import drive_placement, make_placer
+
+GiB = 1024 ** 3
+
+
+@dataclass
+class PipelineRequest:
+    """One allocation question, backend-agnostic: everything the staged
+    path needs to answer 'how much memory, which config'."""
+    job: str
+    profile_at: Callable[[float], ProfileResult]
+    full_size: float
+    anchor: Optional[float] = None
+    sizes: Optional[Sequence[float]] = None
+    signature: Optional[str] = None     # defaults to the job name
+    leeway: Optional[float] = None      # overrides the pipeline default
+    adaptive: Optional[bool] = None     # overrides the pipeline default
+    placement: Optional[object] = None  # "infogain" | "ladder" | PointPlacer
+    exclude_job_in_history: bool = True
+    tags: Optional[Sequence[str]] = None    # Flora-style categorical tags
+
+    @property
+    def sig(self) -> str:
+        return self.signature if self.signature is not None else self.job
+
+
+@dataclass
+class PipelinePlan:
+    """Per-signature outcome of stages 1-4; shared by every request that
+    coalesced onto the same (signature, ladder)."""
+    signature: str
+    source: str                      # registry | zoo | classifier | baseline
+    model: Optional[object]          # the SERVING model (None on baseline)
+    candidate: Optional[str]         # winning model kind (None on baseline)
+    fit: Optional[object] = None     # this job's own fit (unconfident ones
+                                     # still reach CrispyReport.model)
+    neighbor: Optional[str] = None
+    neighbor_selection: Optional[Selection] = None
+    sizes: List[float] = field(default_factory=list)
+    mems: List[float] = field(default_factory=list)
+    walls: List[float] = field(default_factory=list)
+    results: List[ProfileResult] = field(default_factory=list)
+    requirement_trace: List[float] = field(default_factory=list)
+    profiled: int = 0                # fresh profile_at calls
+    cache_hits: int = 0              # points served by LRU or shared store
+    store_hits: int = 0              # subset served by the shared store
+    adaptive: bool = False
+    placement: Optional[str] = None  # placer name when adaptive
+    early_stop: bool = False
+    escalated: bool = False
+    budget_exhausted: bool = False
+    base_points: int = 0             # base-ladder length (points_saved basis)
+    fit_ran: bool = False            # a zoo/fitter fit happened
+    registered: bool = False         # a confident model was registered
+    newly_observed: bool = False     # first time the classifier saw this sig
+
+    @property
+    def total_points(self) -> int:
+        return len(self.sizes)
+
+
+@dataclass
+class PipelineTrace:
+    """One finished decision: the shared plan plus this request's
+    extrapolation and selection — the single record CrispyReport and
+    AllocationResponse are both built from."""
+    plan: PipelinePlan
+    job: str
+    full_size: float
+    requirement_gib: float
+    selection: Selection
+    wall_s: float = 0.0
+
+    # convenience proxies (report builders read these off the trace)
+    @property
+    def sizes(self) -> List[float]:
+        return self.plan.sizes
+
+    @property
+    def mems(self) -> List[float]:
+        return self.plan.mems
+
+    @property
+    def results(self) -> List[ProfileResult]:
+        return self.plan.results
+
+    @property
+    def source(self) -> str:
+        return self.plan.source
+
+
+class AllocationPipeline:
+    """The one staged decision path (see package docstring). Thread-safe:
+    concurrent signature groups may call `plan()` simultaneously (the
+    AllocationService fans them over a ProfilingExecutor)."""
+
+    def __init__(self, catalog: List[ClusterConfig],
+                 history: ExecutionHistory,
+                 registry=None,             # allocator ModelRegistry (or None)
+                 classifier=None,           # NearestJobClassifier (or None)
+                 fitter: Optional[Callable] = None,
+                 candidates: Optional[Sequence] = None,
+                 overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
+                 leeway: float = 0.0,
+                 adaptive: bool = False,
+                 placement="infogain",
+                 budget=None,               # repro.profiling ProfilingBudget
+                 store=None,                # repro.profiling ProfileStore
+                 executor=None,             # repro.profiling ProfilingExecutor
+                 cache=None,                # LRU adapter (get/put), optional
+                 defer_registry_save: bool = False,
+                 refresh_store: bool = True):
+        # refresh_store=False is for callers that already refresh the
+        # shared store on their own cadence (the AllocationService does it
+        # once per batch); everyone else must see sibling points before
+        # planning, or re-profile — and double-charge a shared budget
+        # envelope for — work that is already stored.
+        self.catalog = catalog
+        self.history = history
+        self.registry = registry
+        self.classifier = classifier
+        self.fitter = fitter
+        self.candidates = candidates
+        self.overhead = overhead_per_node_gib
+        self.leeway = leeway
+        self.adaptive = adaptive
+        self.placement = placement
+        self.budget = budget
+        self.store = store
+        self.executor = executor
+        self.cache = cache
+        self.defer_registry_save = defer_registry_save
+        self.refresh_store = refresh_store
+        self._lock = threading.Lock()       # guards the classifier
+
+    # -- stage 2a: ladder resolution ----------------------------------------
+    def ladder_for(self, req: PipelineRequest) -> Tuple[float, ...]:
+        """The base ladder this request profiles over: explicit sizes win;
+        otherwise the anchor (given > store-persisted > 1% of full size)
+        shapes the paper's 5-point ladder. An explicit anchor is written
+        back to the store so sibling processes skip anchor guessing."""
+        if req.sizes is not None:
+            return tuple(float(s) for s in req.sizes)
+        anchor = req.anchor
+        if anchor is None and self.store is not None:
+            anchor = self.store.get_anchor(req.sig)
+        if anchor is None:
+            anchor = req.full_size * 0.01
+        elif req.anchor is not None and self.store is not None \
+                and self.store.get_anchor(req.sig) is None:
+            try:
+                self.store.put_anchor(req.sig, float(req.anchor))
+            except Exception:
+                pass        # a failed anchor write must never fail the plan
+        return tuple(float(s) for s in ladder_from_anchor(anchor).sizes)
+
+    # -- stage 3: model fitting ---------------------------------------------
+    def _fit(self, sizes: Sequence[float], mems: Sequence[float]):
+        if self.fitter is not None:
+            return self.fitter(sizes, mems)
+        return fit_zoo(sizes, mems, self.candidates)
+
+    # -- stage 1: warm start ------------------------------------------------
+    def warm_start(self, signature: str) -> Optional[PipelinePlan]:
+        """A confident registered model answers without any profiling."""
+        if self.registry is None:
+            return None
+        rec = self.registry.get(signature)
+        if rec is not None and getattr(rec.model, "confident", False):
+            return PipelinePlan(signature, "registry", rec.model,
+                                rec.candidate)
+        return None
+
+    # -- stages 1-4: per-signature plan -------------------------------------
+    def plan(self, req: PipelineRequest,
+             ladder: Optional[Sequence[float]] = None) -> PipelinePlan:
+        warm = self.warm_start(req.sig)
+        if warm is not None:
+            return warm
+        return self.measure_plan(req, ladder)
+
+    # -- stages 2-4: profile, fit, fall back --------------------------------
+    def measure_plan(self, req: PipelineRequest,
+                     ladder: Optional[Sequence[float]] = None
+                     ) -> PipelinePlan:
+        sig = req.sig
+        # stage 2: point acquisition through the one budgeted cache
+        # hierarchy (LRU -> shared store -> fresh run)
+        base = list(ladder if ladder is not None else self.ladder_for(req))
+        source = PointSource(sig, req.profile_at, budget=self.budget,
+                             store=self.store, cache=self.cache,
+                             refresh_store=self.refresh_store)
+        adaptive = req.adaptive if req.adaptive is not None else self.adaptive
+        if adaptive:
+            placer = make_placer(req.placement if req.placement is not None
+                                 else self.placement)
+            out = drive_placement(placer, base, req.full_size,
+                                  source.acquire, self._fit)
+            sizes, mems, results, fit = out.sizes, out.mems, out.results, \
+                out.fit
+            flags = (out.early_stop, out.escalated, out.budget_exhausted)
+            placement_name = getattr(placer, "name", None)
+            trace = out.requirement_trace
+        else:
+            sizes, mems, results, exhausted = self._acquire_fixed(source,
+                                                                  base)
+            fit = self._fit(sizes, mems)
+            flags = (False, False, exhausted)
+            placement_name = None
+            trace = []
+        walls = [r.wall_s for r in results]
+
+        # stage 4a: every profiled ladder feeds future classifications,
+        # gate-failing ones included
+        newly_observed = False
+        if self.classifier is not None:
+            with self._lock:
+                newly_observed = not self.classifier.has(sig)
+                self.classifier.observe(sig, sizes, mems, walls,
+                                        tags=req.tags)
+
+        plan = PipelinePlan(sig, "baseline", None, None, fit=fit,
+                            sizes=list(sizes), mems=list(mems), walls=walls,
+                            results=list(results), requirement_trace=trace,
+                            profiled=source.stats.fresh,
+                            cache_hits=source.stats.cache_hits,
+                            store_hits=source.stats.store_hits,
+                            adaptive=adaptive, placement=placement_name,
+                            early_stop=flags[0], escalated=flags[1],
+                            budget_exhausted=flags[2],
+                            base_points=len(base), fit_ran=True,
+                            newly_observed=newly_observed)
+
+        # stage 4b: confident fit -> serve and register it
+        if getattr(fit, "confident", False):
+            model = getattr(fit, "model", fit)
+            candidate = getattr(fit, "candidate",
+                                getattr(fit, "kind", "linear"))
+            plan.source, plan.model, plan.candidate = "zoo", fit, candidate
+            if self.registry is not None:
+                self.registry.put(sig, model, candidate, sizes, mems,
+                                  defer_save=self.defer_registry_save)
+                plan.registered = True
+            return plan
+
+        # stage 4c: unconfident -> nearest-neighbor transfer (Flora)
+        if self.classifier is not None and len(sizes) >= 2:
+            with self._lock:
+                cls = self.classifier.classify(sizes, mems, walls,
+                                               exclude=(sig,),
+                                               tags=req.tags)
+            if cls is not None:
+                neighbor_rec = self.registry.get(cls.neighbor,
+                                                 count_hit=False) \
+                    if self.registry is not None else None
+                if neighbor_rec is not None and \
+                        getattr(neighbor_rec.model, "confident", False):
+                    plan.source = "classifier"
+                    plan.model = neighbor_rec.model
+                    plan.candidate = neighbor_rec.candidate
+                    plan.neighbor = cls.neighbor
+                    return plan
+                sel = select_like(self.catalog, self.history, cls.neighbor)
+                if sel is not None:
+                    plan.source = "classifier"
+                    plan.neighbor = cls.neighbor
+                    plan.neighbor_selection = sel
+                    return plan
+        # stage 4d: baseline (requirement 0 == exactly BFA, the paper's
+        # never-worse-than-fallback property)
+        return plan
+
+    def _acquire_fixed(self, source: PointSource,
+                       sizes: Sequence[float]):
+        """Fixed-ladder acquisition: every point, concurrently when an
+        executor is configured; budget denials leave holes and the fit
+        runs over whatever materialized."""
+        if self.executor is not None and len(sizes) > 1:
+            rows = self.executor.map_tasks(source.acquire, list(sizes))
+        else:
+            rows = [source.acquire(s) for s in sizes]
+        used = [s for s, rf in zip(sizes, rows) if rf is not None]
+        results = [rf[0] for rf in rows if rf is not None]
+        mems = [r.job_mem_bytes for r in results]
+        return used, mems, results, any(rf is None for rf in rows)
+
+    # -- stages 5-6: per-request finalization -------------------------------
+    def finalize(self, plan: PipelinePlan, req: PipelineRequest,
+                 wall_s: float = 0.0) -> PipelineTrace:
+        """Requirement extrapolation + config selection for one request
+        over a (possibly shared) plan."""
+        leeway = req.leeway if req.leeway is not None else self.leeway
+        exclude = req.job if req.exclude_job_in_history else None
+        if plan.model is not None:
+            req_gib = plan.model.requirement(req.full_size, leeway) / GiB
+            sel = select_crispy(self.catalog, self.history, req_gib,
+                                overhead_per_node_gib=self.overhead,
+                                exclude_job=exclude)
+        elif plan.neighbor_selection is not None:
+            req_gib = 0.0
+            sel = plan.neighbor_selection
+        else:
+            req_gib = 0.0
+            sel = select_crispy(self.catalog, self.history, 0.0,
+                                overhead_per_node_gib=self.overhead,
+                                exclude_job=exclude)
+        return PipelineTrace(plan, req.job, req.full_size, req_gib, sel,
+                             wall_s)
+
+    def run(self, req: PipelineRequest) -> PipelineTrace:
+        """The whole staged path for one request (the one-shot and
+        example/benchmark entry point)."""
+        t0 = time.monotonic()
+        plan = self.plan(req)
+        return self.finalize(plan, req, time.monotonic() - t0)

@@ -9,18 +9,22 @@ package turns profiling itself into a managed resource:
                 enforced, thread-safe limit (wall clock, accounted profile
                 seconds, and point count) shared by everything below.
 
-  scheduler.py  `AdaptiveLadderScheduler` — profiles smallest-first,
-                refits the model zoo after each point, stops once the
-                selected candidate is confident and its full-size
-                requirement prediction has stabilized; escalates beyond
-                the base ladder only when candidates disagree (Ruya-style
-                iterative spend, arXiv:2211.04240). `calibrated_anchor`
-                persists per-signature anchors so repeat signatures skip
-                `calibrate_anchor` entirely.
+  scheduler.py  `AdaptiveLadderScheduler` — now a budget-gating driver
+                over the `repro.pipeline` placement strategies: the PR-2
+                ladder-prefix behavior lives in
+                `repro.pipeline.placement.LadderPlacer` (smallest-first,
+                refit per point, early stop on confident+stable,
+                gap-midpoint escalation while candidates disagree;
+                Ruya-style iterative spend, arXiv:2211.04240), and
+                `placement="infogain"` swaps in information-optimal
+                placement. `calibrated_anchor` persists per-signature
+                anchors so repeat signatures skip `calibrate_anchor`
+                entirely.
 
-  executor.py   `ProfilingExecutor` — thread pool that profiles fixed
-                ladders point-concurrently and fans independent signature
-                groups out, all under one global budget.
+  executor.py   `ProfilingExecutor` — thread pool the pipeline fans
+                fixed-ladder points and the service fans independent
+                signature groups over (`map_tasks`); budget gating lives
+                in the pipeline's acquisition stage, not here.
 
   store.py      `ProfileStore` (profile points + calibrated anchors in a
                 backend append-only log), `BackendModelRegistry`
@@ -30,11 +34,12 @@ package turns profiling itself into a managed resource:
                 `repro.state` StateBackend protocol (memory / fcntl file
                 / crispy-daemon); no fcntl lives here anymore.
 
-`repro.allocator.service.AllocationService` delegates its profiling path
-here (`adaptive=True`, `budget=`, `store=`, `executor=`);
-`repro.core.crispy.CrispyAllocator.allocate` grows the same knobs for the
-one-shot path; `benchmarks/profiling_adaptive.py` measures fixed-vs-
-adaptive points, wall time and requirement error.
+The acquisition loop itself now lives in `repro.pipeline` (PointSource +
+drive_placement): both `AllocationService` and `CrispyAllocator` reach
+these resources through the unified pipeline's `budget=`, `store=` and
+`executor=` knobs; `benchmarks/profiling_adaptive.py` measures fixed-vs-
+adaptive points, wall time and requirement error, and
+`benchmarks/point_placement.py` compares placement strategies.
 """
 from repro.profiling.budget import BudgetExhausted, ProfilingBudget
 from repro.profiling.executor import DEFAULT_WORKERS, ProfilingExecutor

@@ -1,19 +1,15 @@
-"""ProfilingExecutor: concurrent profiling under one global budget.
+"""ProfilingExecutor: concurrent profiling work under one thread pool.
 
-Two axes of independence the serial PR-1 pipeline left on the table:
+Two axes of independence the serial PR-1 pipeline left on the table, both
+driven through `map_tasks`:
 
-  * the points of a *fixed* ladder are independent measurements — a
-    thread pool profiles them concurrently (`profile_ladder`); adaptive
-    schedules stay sequential by construction (each point's necessity
-    depends on the previous refit);
+  * the points of a *fixed* ladder are independent measurements — the
+    pipeline's acquisition stage fans them over the pool (budget gating
+    and cache hierarchy live in `repro.pipeline.acquisition.PointSource`,
+    the ONE implementation); adaptive schedules stay sequential by
+    construction (each point's necessity depends on the previous refit);
   * distinct job signatures are independent jobs — the AllocationService
-    fans a batch's signature groups out over the same pool (`map_tasks`).
-
-Every fresh profile run is gated by the shared `ProfilingBudget`, so the
-paper's ten-minute envelope holds across all concurrent work, not per
-ladder. A denied point yields a hole, never an error: `profile_ladder`
-returns the points it could afford and the caller fits over the partial
-ladder (an unconfident fit walks the normal fallback chain).
+    fans a batch's signature groups out over the same pool.
 
 Threads, not processes: profiling callables close over simulator state /
 jax compilation contexts that do not pickle, and the real work (RSS
@@ -23,9 +19,8 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, List, Optional, Sequence, Tuple, TypeVar
+from typing import Callable, List, Optional, Sequence, TypeVar
 
-from repro.core.profiler import ProfileResult
 from repro.profiling.budget import ProfilingBudget
 
 T = TypeVar("T")
@@ -67,41 +62,7 @@ class ProfilingExecutor:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    # -- concurrent ladders -------------------------------------------------
-    def profile_ladder(
-            self, sizes: Sequence[float],
-            profile_point: Callable[[float], Tuple[ProfileResult, bool]],
-            budget: Optional[ProfilingBudget] = None,
-    ) -> List[Tuple[float, Optional[ProfileResult], bool]]:
-        """Profile independent ladder points concurrently. Returns
-        `(size, result_or_None, fresh)` in ladder order; `None` results are
-        budget denials. `profile_point(size) -> (result, fresh)` must be
-        thread-safe (the service's LRU/store lookups are); an optional
-        `profile_point.peek(size)` serves cached points before the budget
-        gate — an exhausted budget never denies free work."""
-        budget = budget if budget is not None else self.budget
-        peek = getattr(profile_point, "peek", None)
-
-        def one(size: float):
-            if peek is not None:
-                cached = peek(size)
-                if cached is not None:
-                    return size, cached, False
-            if budget is not None and not budget.try_spend():
-                return size, None, False
-            r, fresh = profile_point(size)
-            if budget is not None:
-                if fresh:
-                    budget.charge(r.wall_s)
-                else:
-                    budget.refund()
-            return size, r, fresh
-
-        if self.in_worker:              # nested call from a group task
-            return [one(s) for s in sizes]
-        return list(self._pool.map(one, sizes))
-
-    # -- concurrent signatures ----------------------------------------------
+    # -- concurrent tasks ---------------------------------------------------
     def map_tasks(self, fn: Callable[[T], R], items: Sequence[T]
                   ) -> List[R]:
         """Run `fn` over independent items (signature groups) on the pool,

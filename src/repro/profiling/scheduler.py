@@ -1,50 +1,36 @@
-"""Adaptive ladder scheduling: stop profiling when the model is good enough.
+"""Adaptive ladder scheduling — now a strategy of the unified pipeline.
 
-The paper profiles a fixed five-point ladder for every job. Ruya
-(arXiv:2211.04240) shows memory-aware *iterative* optimization that stops
-spending once the model is good enough; this module applies that idea to
-Crispy's profiling step. `AdaptiveLadderScheduler` walks the ladder
-smallest-first (cheapest run first — profiling wall time grows with sample
-size), refits the model zoo after every point, and stops early once
+The PR-2 `AdaptiveLadderScheduler` (walk the ladder smallest-first, refit
+per point, stop early on a confident+stable requirement, escalate into
+the widest gaps only when the zoo's candidates disagree) survives as the
+`placement="ladder"` strategy of `repro.pipeline`: its decision logic
+lives in `repro.pipeline.placement.LadderPlacer`, the acquisition loop in
+`repro.pipeline.placement.drive_placement`, and this class is the
+back-compat driver for callers that hold a raw `(size) -> (result,
+fresh)` profile callable (with optional `.peek`) and want budget gating
+handled for them. The information-optimal default strategy is
+`repro.pipeline.placement.InfoGainPlacer` (`placement="infogain"`).
 
-  1. the selected candidate is `confident` (train-R² gate + the zoo's
-     out-of-sample LOOCV gate), and
-  2. its full-size requirement prediction has *stabilized*: the relative
-     change between the last two refits is under `stability_rtol`.
-
-A perfectly linear job therefore costs 3 points instead of 5 (LOOCV needs
-3 points to produce a finite score; the stability check compares it to the
-2-point fit). When the base ladder ends without a confident+stable fit the
-scheduler *escalates* — but only when the candidates actually disagree
-about the full-size prediction (relative spread over `disagree_rtol`);
-an unconfident fit whose candidates nevertheless agree (the profile is
-simply not memory-elastic at this scale) falls straight through to the
-classifier/baseline chain. Extra points are midpoints of the widest
-ladder gaps, so escalation densifies the measured range instead of
-profiling beyond the anchor's calibrated runtime band, and is capped at
-`max_extra_points`.
-
-Every point is gated by an optional `ProfilingBudget`; exhaustion
-mid-ladder returns whatever was measured (`budget_exhausted=True`) and the
-fit over the partial ladder — the caller's fallback chain handles an
-unconfident result exactly as it handles a noisy one.
+Every point is gated by an optional `ProfilingBudget`; cached points
+(served via `.peek`) are always free, and exhaustion mid-schedule returns
+whatever was measured (`budget_exhausted=True`) with the fit over the
+partial ladder — the caller's fallback chain handles an unconfident
+result exactly as it handles a noisy one.
 """
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
-from repro.allocator.model_zoo import ZooFit, fit_zoo
+from repro.allocator.model_zoo import fit_zoo
 from repro.core.profiler import ProfileResult
 from repro.core.sampling import calibrate_anchor
+from repro.pipeline.placement import (DISAGREE_RTOL, InfoGainPlacer,
+                                      LadderPlacer, MAX_EXTRA_POINTS,
+                                      MIN_POINTS, STABILITY_RTOL,
+                                      drive_placement, make_placer)
 from repro.profiling.budget import ProfilingBudget
-
-MIN_POINTS = 3              # LOOCV needs 3; stability needs a predecessor
-STABILITY_RTOL = 0.05       # requirement prediction settled within 5%
-DISAGREE_RTOL = 0.25        # candidate spread that justifies extra points
-MAX_EXTRA_POINTS = 2        # escalation cap beyond the base ladder
 
 # (size) -> (result, fresh): the caller owns caching; `fresh` says whether
 # the point cost a real profile run (budget is only charged for fresh
@@ -75,13 +61,18 @@ class AdaptiveProfile:
 
 
 class AdaptiveLadderScheduler:
+    """Budget-gating driver around a `PointPlacer` (default: the PR-2
+    ladder strategy; pass `placement="infogain"` or a placer instance for
+    information-optimal placement)."""
+
     def __init__(self, fitter: Optional[Callable] = None,
                  candidates: Optional[Sequence] = None,
                  min_points: int = MIN_POINTS,
                  stability_rtol: float = STABILITY_RTOL,
                  disagree_rtol: float = DISAGREE_RTOL,
                  max_extra_points: int = MAX_EXTRA_POINTS,
-                 budget: Optional[ProfilingBudget] = None):
+                 budget: Optional[ProfilingBudget] = None,
+                 placement=None):
         self.fitter = fitter
         self.candidates = candidates
         self.min_points = max(2, min_points)
@@ -89,130 +80,57 @@ class AdaptiveLadderScheduler:
         self.disagree_rtol = disagree_rtol
         self.max_extra_points = max_extra_points
         self.budget = budget
+        # a placement NAME builds its placer with THIS scheduler's knobs;
+        # a placer INSTANCE is used as-is (its own knobs win)
+        if placement is None or placement == "ladder":
+            placement = LadderPlacer(min_points=min_points,
+                                     stability_rtol=stability_rtol,
+                                     disagree_rtol=disagree_rtol,
+                                     max_extra_points=max_extra_points)
+        elif placement == "infogain":
+            placement = InfoGainPlacer(min_points=min_points,
+                                       stability_rtol=stability_rtol,
+                                       max_extra_points=max_extra_points)
+        self.placer = make_placer(placement)
 
-    # -- fitting ------------------------------------------------------------
     def _fit(self, sizes: Sequence[float], mems: Sequence[float]):
         if self.fitter is not None:
             return self.fitter(sizes, mems)
         return fit_zoo(sizes, mems, self.candidates)
 
-    def _disagreement(self, sizes, mems, fit, full_size: float) -> float:
-        if not isinstance(fit, ZooFit):
-            # custom single-model fitter: escalate only on non-confidence
-            return math.inf if not getattr(fit, "confident", False) else 0.0
-        # every candidate was fitted during the last refit — read their
-        # full-size predictions off the ZooFit instead of refitting
-        models = fit.fits or {}
-        preds = []
-        for m in models.values():
-            try:
-                p = float(m.predict(full_size))
-            except (OverflowError, ValueError):
-                p = math.inf
-            if math.isfinite(p):
-                preds.append(p)
-        if len(preds) < 2:
-            return 0.0
-        lo, hi = min(preds), max(preds)
-        scale = max(abs(hi), abs(lo), 1e-12)
-        return (hi - lo) / scale
-
-    # -- scheduling ---------------------------------------------------------
     def run(self, ladder: Sequence[float], full_size: float,
             profile_point: ProfilePointFn) -> AdaptiveProfile:
         t0 = time.monotonic()
-        base = sorted(float(s) for s in ladder)
-        sizes: List[float] = []
-        mems: List[float] = []
-        results: List[ProfileResult] = []
-        trace: List[float] = []
-        fresh = hits = 0
-        fit = None
-        prev_pred: Optional[float] = None
-        early = escalated = exhausted = False
-
         peek = getattr(profile_point, "peek", None)
 
-        def take(size: float) -> bool:
-            """Profile one point (budget-gated; cached points are free).
-            False == budget denial."""
-            nonlocal fresh, hits, exhausted
+        def acquire(size: float):
+            """Budget-gated point: cached (peeked) points are free; only
+            a genuinely fresh run keeps its reservation and charge."""
             r = peek(size) if peek is not None else None
             if r is not None:
-                hits += 1
-            else:
-                if self.budget is not None and not self.budget.try_spend():
-                    exhausted = True
-                    return False
+                return r, False
+            if self.budget is not None and not self.budget.try_spend():
+                return None
+            try:
                 r, was_fresh = profile_point(size)
+            except BaseException:
+                if self.budget is not None:
+                    self.budget.refund()    # failed run: hand the point back
+                raise
+            if self.budget is not None:
                 if was_fresh:
-                    fresh += 1
-                    if self.budget is not None:
-                        self.budget.charge(r.wall_s)
+                    self.budget.charge(r.wall_s)
                 else:
-                    hits += 1
-                    if self.budget is not None:
-                        self.budget.refund()    # raced: no run happened
-            sizes.append(size)
-            mems.append(r.job_mem_bytes)
-            results.append(r)
-            return True
+                    self.budget.refund()    # raced a cache fill: no run
+            return r, was_fresh
 
-        def refit() -> None:
-            nonlocal fit, prev_pred, early
-            fit = self._fit(sizes, mems)
-            pred = float(fit.predict(full_size))
-            trace.append(pred)
-            stable = (prev_pred is not None
-                      and math.isfinite(pred) and pred != 0.0
-                      and abs(pred - prev_pred)
-                      <= self.stability_rtol * abs(pred))
-            if (len(sizes) >= self.min_points
-                    and getattr(fit, "confident", False) and stable):
-                early = True
-            prev_pred = pred
-
-        # phase 1: walk the base ladder smallest-first, refit per point
-        for i, s in enumerate(base):
-            if not take(s):
-                break
-            if len(sizes) >= 2:
-                refit()
-            if early and len(sizes) < len(base):
-                break
-
-        # phase 2: escalate only when the candidates disagree
-        if (fit is not None and not early and not exhausted
-                and self.max_extra_points > 0
-                and not getattr(fit, "confident", False)
-                and self._disagreement(sizes, mems, fit, full_size)
-                > self.disagree_rtol):
-            for s in _gap_midpoints(sizes, self.max_extra_points):
-                escalated = True
-                if not take(s):
-                    break
-                refit()
-                if getattr(fit, "confident", False):
-                    break
-
-        if fit is None:                  # budget denied even a second point
-            fit = self._fit(sizes, mems)
-        early = early and len(sizes) < len(base)
-        return AdaptiveProfile(sizes, mems, results, fit, fresh, hits,
-                               early, escalated, exhausted,
-                               time.monotonic() - t0, trace)
-
-
-def _gap_midpoints(sizes: Sequence[float], n: int) -> List[float]:
-    """Midpoints of the `n` widest gaps between measured sizes — escalation
-    densifies the calibrated range rather than extrapolating the runtime
-    band the anchor was tuned for."""
-    xs = sorted(set(sizes))
-    if len(xs) < 2 or n <= 0:
-        return []
-    gaps = sorted(((xs[i + 1] - xs[i], 0.5 * (xs[i] + xs[i + 1]))
-                   for i in range(len(xs) - 1)), reverse=True)
-    return [mid for _gap, mid in gaps[:n]]
+        out = drive_placement(self.placer, ladder, full_size, acquire,
+                              self._fit)
+        return AdaptiveProfile(out.sizes, out.mems, out.results, out.fit,
+                               out.fresh, out.cache_hits, out.early_stop,
+                               out.escalated, out.budget_exhausted,
+                               time.monotonic() - t0,
+                               out.requirement_trace)
 
 
 def calibrated_anchor(store, signature: str,

@@ -168,10 +168,13 @@ class AllocationEndpoint:
                sizes: Optional[List[float]] = None,
                signature: Optional[str] = None,
                leeway: Optional[float] = None,
-               adaptive: Optional[bool] = None):
+               adaptive: Optional[bool] = None,
+               placement: Optional[str] = None,
+               tags: Optional[List[str]] = None):
         return self.service.submit(AllocationRequest(
             job, profile_at, full_size, anchor=anchor, sizes=sizes,
-            signature=signature, leeway=leeway, adaptive=adaptive))
+            signature=signature, leeway=leeway, adaptive=adaptive,
+            placement=placement, tags=tags))
 
     def handle(self, timeout: Optional[float] = None, **payload) -> Dict:
         wire = self.to_wire(self.submit(**payload).result(timeout))
@@ -220,7 +223,8 @@ class AllocationEndpoint:
                 "profiled": resp.profiled, "cache_hits": resp.cache_hits,
                 "wall_s": resp.wall_s, "early_stop": resp.early_stop,
                 "escalated": resp.escalated,
-                "budget_exhausted": resp.budget_exhausted}
+                "budget_exhausted": resp.budget_exhausted,
+                "placement": resp.placement}
 
 
 def _reset_slot(caches, slot: int):

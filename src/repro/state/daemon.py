@@ -99,9 +99,9 @@ from repro.state.backend import (InMemoryBackend, StateBackend,
                                  StateBackendError, StateBackendUnavailable)
 from repro.state.compaction import prune_registry_doc
 from repro.state.file_backend import FileBackend
-from repro.state.transport import (auth_frame, connect, default_auth_token,
-                                   describe_address, parse_address,
-                                   recv_frame, send_frame)
+from repro.state.transport import (MAX_FRAME_BYTES, auth_frame, connect,
+                                   default_auth_token, describe_address,
+                                   parse_address, recv_frame, send_frame)
 
 HAS_UNIX_SOCKETS = hasattr(socket, "AF_UNIX")
 
@@ -274,7 +274,23 @@ class CrispyDaemon:
 
             def handle(self):
                 authed = daemon.auth_token is None
-                for line in self.rfile:
+                while True:
+                    # bounded readline: an (even unauthenticated) peer
+                    # streaming newline-free bytes must cost one frame's
+                    # budget, not daemon RAM (see transport.MAX_FRAME_BYTES)
+                    line = self.rfile.readline(MAX_FRAME_BYTES + 1)
+                    if not line:
+                        break
+                    if len(line) > MAX_FRAME_BYTES:
+                        try:
+                            self.wfile.write((json.dumps(
+                                {"ok": False,
+                                 "error": "frame too large"}) +
+                                "\n").encode())
+                            self.wfile.flush()
+                        except OSError:
+                            pass
+                        return                  # drop: cannot resync
                     line = line.strip()
                     if not line:
                         continue

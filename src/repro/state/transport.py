@@ -109,12 +109,23 @@ def send_frame(wfile, payload: Dict) -> None:
     wfile.flush()
 
 
+# hard cap on one frame's pre-parse buffering. readline() with no bound
+# buffers an arbitrarily long newline-free stream in RAM — on the TCP
+# transport that lets any peer that can reach the port (even pre-auth)
+# OOM the single daemon holding everyone's shared state. Generous for
+# real traffic: the largest legitimate frame is a registry document.
+MAX_FRAME_BYTES = 8 * 1024 * 1024
+
+
 def recv_frame(rfile) -> Optional[Dict]:
     """Next frame, or None on a clean EOF. Raises ValueError on garbage
-    (the caller drops the connection — framing never resynchronizes)."""
-    line = rfile.readline()
+    or an over-long frame (the caller drops the connection — framing
+    never resynchronizes)."""
+    line = rfile.readline(MAX_FRAME_BYTES + 1)
     if not line:
         return None
+    if len(line) > MAX_FRAME_BYTES:
+        raise ValueError(f"frame exceeds {MAX_FRAME_BYTES} bytes")
     obj = json.loads(line)
     if not isinstance(obj, dict):
         raise ValueError(f"frame is not a JSON object: {obj!r}")

@@ -21,7 +21,9 @@ from repro.core.profiler import ProfileResult
 from repro.core.sampling import ladder_from_anchor
 from repro.core.simulator import (GiB, build_history, make_profile_fn,
                                   scout_like_jobs)
+from repro.profiling import BackendModelRegistry, ProfileStore
 from repro.serve.engine import AllocationEndpoint
+from repro.state import InMemoryBackend
 
 SIZES = [2e9, 4e9, 6e9, 8e9, 1e10]
 
@@ -202,6 +204,122 @@ def test_classifier_runtime_shape_rescues_memory_tie():
     clf2.observe("legacy", SIZES, scan_mem)           # e.g. registry warmup
     got = clf2.classify(SIZES, query_mem, query_rt)
     assert got is not None and got.neighbor == "legacy"
+
+
+def test_classifier_tags_break_memory_and_runtime_tie():
+    """Flora-style categorical features: two observed jobs whose memory
+    AND runtime curves tie exactly are indistinguishable to the numeric
+    blocks — the input-format/operator tag palette must break the tie,
+    and tagless neighbors must keep participating unchanged."""
+    clf = NearestJobClassifier(max_distance=0.25)
+    smax = max(SIZES)
+    mem = [2.0 * s for s in SIZES]
+    rt = [10.0 * (s / smax) for s in SIZES]
+    clf.observe("etl/csv", SIZES, mem, rt,
+                tags={"format:csv", "op:scan"})
+    clf.observe("etl/parquet", SIZES, mem, rt,
+                tags={"format:parquet", "op:join"})
+
+    got = clf.classify(SIZES, mem, rt,
+                       tags={"format:parquet", "op:join", "op:filter"})
+    assert got is not None and got.neighbor == "etl/parquet"
+    got2 = clf.classify(SIZES, mem, rt, tags={"format:csv", "op:scan"})
+    assert got2 is not None and got2.neighbor == "etl/csv"
+    # disjoint palettes push past the tie but not past the gate when the
+    # curves agree this well; identical palettes tie at distance 0
+    assert got2.distance == pytest.approx(0.0)
+
+    # tie-breaker, NOT veto: even a fully disjoint palette over
+    # byte-identical curves must stay under the gate (memory-only is the
+    # worst case — the smallest numeric block)
+    clf3 = NearestJobClassifier(max_distance=0.25)
+    clf3.observe("only", SIZES, mem, tags={"format:orc", "op:window"})
+    still_in = clf3.classify(SIZES, mem, tags={"format:csv", "op:scan"})
+    assert still_in is not None and still_in.neighbor == "only"
+
+    # a neighbor observed WITHOUT tags still participates on the numeric
+    # blocks alone (mixed observations never fragment the store)
+    clf2 = NearestJobClassifier(max_distance=0.25)
+    clf2.observe("legacy", SIZES, mem, rt)
+    got3 = clf2.classify(SIZES, mem, rt, tags={"format:csv"})
+    assert got3 is not None and got3.neighbor == "legacy"
+
+    # a tagless RE-observation (plan-cache miss, registry warm-up) must
+    # not erase a previously observed palette
+    clf.observe("etl/parquet", SIZES, mem, rt)
+    still = clf.classify(SIZES, mem, rt,
+                         tags={"format:parquet", "op:join", "op:filter"})
+    assert still is not None and still.neighbor == "etl/parquet"
+
+
+def test_service_plumbs_tags_to_classifier(corpus):
+    """Request-level tags reach the classifier's feature store through
+    the pipeline's observe stage."""
+    jobs, catalog, history = corpus
+    logreg = jobs[6]
+    full = logreg.dataset_gib * GiB
+    with AllocationService(catalog, history) as svc:
+        svc.allocate(AllocationRequest(
+            logreg.name, make_profile_fn(logreg), full, anchor=full * 0.01,
+            tags=("format:csv", "op:regression")))
+    assert svc.classifier._tags[logreg.name] == {"format:csv",
+                                                 "op:regression"}
+
+
+# -- pipeline parity contract -------------------------------------------------
+
+
+def test_pipeline_parity_service_vs_one_shot(corpus):
+    """CONTRACT (one decision path): AllocationService and CrispyAllocator
+    over the same StateBackend — same ladder, same fitter, same history —
+    return byte-identical requirement and selection for every profile
+    shape. The service profiles first (fixed ladder) and the one-shot
+    path answers from the same stored points; any drift between the two
+    means a second pipeline grew back somewhere."""
+    jobs, catalog, history = corpus
+    checked = [jobs[2], jobs[0], jobs[6], jobs[10]]  # linear x2, noisy, flat
+    for job in checked:
+        backend = InMemoryBackend()
+        full = job.dataset_gib * GiB
+        with AllocationService(catalog, history,
+                               registry=BackendModelRegistry(backend),
+                               store=ProfileStore(backend=backend)) as svc:
+            resp = svc.allocate(_req(job))
+        alloc = CrispyAllocator(catalog, history, fitter=zoo_fitter())
+        rep = alloc.allocate(job.name, make_profile_fn(job), full,
+                             anchor=full * 0.01,
+                             store=ProfileStore(backend=backend))
+        assert rep.requirement_gib == resp.requirement_gib, job.name
+        s1, s2 = rep.selection, resp.selection
+        assert s1.config.name == s2.config.name, job.name
+        assert s1.method == s2.method
+        assert s1.mem_requirement_gib == s2.mem_requirement_gib
+        assert s1.feasible_count == s2.feasible_count
+        assert s1.fell_back == s2.fell_back
+
+
+def test_pipeline_parity_adaptive_placement(corpus):
+    """The parity contract holds on the adaptive path too: identical
+    placement decisions (same placer, same measured values via the shared
+    store) give byte-identical answers."""
+    jobs, catalog, history = corpus
+    km = jobs[2]
+    full = km.dataset_gib * GiB
+    for placement in ("infogain", "ladder"):
+        backend = InMemoryBackend()
+        with AllocationService(catalog, history,
+                               registry=BackendModelRegistry(backend),
+                               store=ProfileStore(backend=backend),
+                               adaptive=True, placement=placement) as svc:
+            resp = svc.allocate(_req(km))
+            assert resp.placement == placement
+        rep = CrispyAllocator(catalog, history, fitter=zoo_fitter()).allocate(
+            km.name, make_profile_fn(km), full, anchor=full * 0.01,
+            adaptive=True, placement=placement,
+            store=ProfileStore(backend=backend))
+        assert rep.points_profiled == resp.profiled + resp.cache_hits
+        assert rep.requirement_gib == resp.requirement_gib, placement
+        assert rep.selection.config.name == resp.selection.config.name
 
 
 # -- service end-to-end -------------------------------------------------------

@@ -152,6 +152,21 @@ def test_scheduler_with_papers_linear_fitter():
     assert ap.fit.confident
 
 
+def test_scheduler_knobs_apply_to_named_placement():
+    """min_points/stability_rtol/... must reach the placer a placement
+    NAME builds; an explicit placer instance keeps its own knobs."""
+    from repro.pipeline import LadderPlacer
+    s1 = AdaptiveLadderScheduler(stability_rtol=0.01, max_extra_points=0,
+                                 placement="ladder")
+    assert s1.placer.stability_rtol == 0.01
+    assert s1.placer.max_extra_points == 0
+    s2 = AdaptiveLadderScheduler(min_points=4, placement="infogain")
+    assert s2.placer.name == "infogain" and s2.placer.min_points == 4
+    mine = LadderPlacer(stability_rtol=0.2)
+    assert AdaptiveLadderScheduler(stability_rtol=0.01,
+                                   placement=mine).placer is mine
+
+
 # -- persistent store ---------------------------------------------------------
 
 

@@ -288,6 +288,39 @@ def test_daemon_registry_eviction_thresholds(tmp_path):
         assert len(BackendModelRegistry(client)) == 1
 
 
+@needs_unix_sockets
+def test_daemon_bounds_pre_auth_frames(tmp_path):
+    """An (even unauthenticated) peer streaming an over-long newline-free
+    payload must cost one bounded frame, not daemon RAM: the connection
+    is answered/dropped and the daemon keeps serving."""
+    from repro.state.transport import MAX_FRAME_BYTES
+    sock_path = _daemon_socket(tmp_path)
+    with CrispyDaemon(sock_path):
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        s.connect(sock_path)
+        s.settimeout(10.0)
+        try:
+            chunk = b"x" * 65536
+            sent = 0
+            with pytest.raises(OSError):
+                # the daemon stops reading after MAX_FRAME_BYTES and
+                # drops the connection; the send eventually fails once
+                # buffers fill (2x the cap is comfortably past it)
+                while sent < 2 * MAX_FRAME_BYTES + len(chunk):
+                    s.sendall(chunk)
+                    sent += len(chunk)
+                s.sendall(b"\n")
+                s.recv(1 << 16)         # EOF -> b"" -> no OSError: force
+                raise ConnectionResetError("connection was dropped")
+        finally:
+            s.close()
+        # daemon survived and still serves real clients
+        live = DaemonBackend(sock_path)
+        live.append("after", {"ok": 1})
+        rows, _cur = live.read("after")
+        assert rows == [{"ok": 1}]
+
+
 # -- cross-process budget arbitration (acceptance) ----------------------------
 
 _SPENDER = """
