@@ -1,0 +1,218 @@
+"""Tiered load benchmark: the service under four request mixes, across
+thread counts, with latency percentiles from client-side timing and the
+telemetry plane's own counters — recorded to BENCH_load.json.
+
+The earlier allocation_service_throughput module prints means; this one
+is the production-tier harness ROADMAP asks for: per-tier p50/p99
+latency + throughput, machine-readable, so the perf trajectory across
+PRs is a file diff instead of scrollback archaeology.
+
+Tiers (each drives REQUESTS requests at every thread count):
+
+  warm_start    repeats of confident registered signatures — the
+                registry answers, no profiling; the latency floor.
+  classifier    novel NOISY signatures every request — unconfident fits
+                rescued (or not) by nearest-neighbor transfer; the full
+                measure -> fit -> classify path.
+  fresh         novel LINEAR signatures every request — profile + fit +
+                register; the cold-path ceiling.
+  tag_override  repeats of a noisy signature under rotating Flora tag
+                palettes — tag-keyed plans and the plan cache under
+                palette churn.
+  mixed         70% warm / 15% fresh / 10% classifier / 5% tagged — the
+                steady state a service actually sees.
+
+Per (tier, threads) the JSON records {p50_ms, p95_ms, p99_ms, mean_ms,
+throughput_rps, wall_s, requests, counters} where `counters` is the
+delta of the service's `repro.telemetry` counter snapshot over the tier
+— so e.g. warm_start's `pipeline.warm_start.hits` == its request count
+is asserted by CI, not eyeballed.
+
+Env knobs: LOAD_TIERS_REQUESTS (default 60), LOAD_TIERS_THREADS
+(comma-separated, default "1,8"), BENCH_LOAD_PATH (default
+./BENCH_load.json).
+
+Final CSV line: load_tiers,<mixed us/req @ max threads>,<mixed p99 ms>
+"""
+import json
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.allocator import AllocationRequest, AllocationService
+from repro.core.catalog import aws_like_catalog
+from repro.core.simulator import (GiB, JobSpec, build_history,
+                                  make_profile_fn, scout_like_jobs)
+
+TAG_PALETTES = (("etl",), ("ml", "iterative"), ("adhoc",), ("etl", "ml"))
+
+
+def _variant(base: JobSpec, name: str, mem_profile: str) -> JobSpec:
+    return JobSpec(name, base.framework, base.dataset_gib, base.cpu_hours,
+                   base.working_set_factor, base.iterations, base.caching,
+                   mem_profile)
+
+
+def _request(job: JobSpec, tags=None) -> AllocationRequest:
+    full = job.dataset_gib * GiB
+    return AllocationRequest(job.name, make_profile_fn(job), full,
+                             anchor=full * 0.01, tags=tags)
+
+
+class _TierMix:
+    """Generates one tier's request stream. A fresh instance per run so
+    novel-signature tiers never accidentally warm themselves across
+    thread counts."""
+
+    def __init__(self, kind: str, corpus, run_id: str):
+        self.kind = kind
+        self.corpus = corpus
+        self.run_id = run_id
+        self.linear = [j for j in corpus if j.mem_profile == "linear"]
+        self.noisy = [j for j in corpus if j.mem_profile == "noisy"]
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def _next_i(self) -> int:
+        with self._lock:
+            i, self._n = self._n, self._n + 1
+            return i
+
+    def request(self) -> AllocationRequest:
+        i = self._next_i()
+        k = self.kind
+        if k == "mixed":
+            r = i % 20
+            k = ("warm_start" if r < 14 else
+                 "fresh" if r < 17 else
+                 "classifier" if r < 19 else "tag_override")
+        if k == "warm_start":
+            return _request(self.linear[i % len(self.linear)])
+        if k == "classifier":
+            base = self.noisy[i % len(self.noisy)]
+            job = _variant(base, f"clsf-{self.run_id}-{i}/{base.framework}",
+                           "noisy")
+            return _request(job)
+        if k == "fresh":
+            base = self.linear[i % len(self.linear)]
+            job = _variant(base, f"fresh-{self.run_id}-{i}/{base.framework}",
+                           "linear")
+            return _request(job)
+        if k == "tag_override":
+            base = self.noisy[i % len(self.noisy)]
+            return _request(base, tags=TAG_PALETTES[i % len(TAG_PALETTES)])
+        raise ValueError(f"unknown tier {self.kind!r}")
+
+
+def _pctl(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def _counter_delta(before, after) -> dict:
+    keys = set(before.get("counters", {})) | set(after.get("counters", {}))
+    out = {}
+    for key in sorted(keys):
+        d = (after.get("counters", {}).get(key, 0.0)
+             - before.get("counters", {}).get(key, 0.0))
+        if d:
+            out[key] = round(d, 6)
+    return out
+
+
+def _drive_tier(svc: AllocationService, mix: _TierMix, requests: int,
+                threads: int) -> dict:
+    lat = []
+    lock = threading.Lock()
+
+    def one(_i) -> None:
+        req = mix.request()
+        t0 = time.monotonic()
+        svc.allocate(req)
+        dt = time.monotonic() - t0
+        with lock:
+            lat.append(dt)
+
+    before = svc.metrics()
+    t0 = time.monotonic()
+    if threads <= 1:
+        for i in range(requests):
+            one(i)
+    else:
+        with ThreadPoolExecutor(threads) as ex:
+            list(ex.map(one, range(requests)))
+    wall = time.monotonic() - t0
+    after = svc.metrics()
+    lat.sort()
+    return {"requests": requests,
+            "wall_s": round(wall, 6),
+            "throughput_rps": round(requests / wall, 2) if wall else 0.0,
+            "mean_ms": round(sum(lat) / len(lat) * 1e3, 4),
+            "p50_ms": round(_pctl(lat, 0.50) * 1e3, 4),
+            "p95_ms": round(_pctl(lat, 0.95) * 1e3, 4),
+            "p99_ms": round(_pctl(lat, 0.99) * 1e3, 4),
+            "counters": _counter_delta(before, after)}
+
+
+def _build_service(catalog, history, corpus) -> AllocationService:
+    """Fresh service, prewarmed: one pass over the corpus registers
+    confident models for the linear jobs (warm_start substrate) and
+    observes every ladder (classifier substrate)."""
+    svc = AllocationService(catalog, history, batch_window_s=0.001)
+    svc.allocate_many([_request(j) for j in corpus])
+    return svc
+
+
+def main() -> None:
+    requests = int(os.environ.get("LOAD_TIERS_REQUESTS", "60"))
+    threads = [int(t) for t in
+               os.environ.get("LOAD_TIERS_THREADS", "1,8").split(",")]
+    out_path = os.environ.get("BENCH_LOAD_PATH", "BENCH_load.json")
+
+    corpus = scout_like_jobs()
+    catalog = aws_like_catalog()
+    history = build_history(corpus, catalog)
+
+    tiers = ("warm_start", "classifier", "fresh", "tag_override", "mixed")
+    result = {"benchmark": "load_tiers",
+              "created_unix": round(time.time(), 3),
+              "requests_per_tier": requests,
+              "thread_counts": threads,
+              "tiers": {t: {"by_threads": {}} for t in tiers}}
+
+    mixed_summary = None
+    for nthreads in threads:
+        # fresh prewarmed service per thread count: novel-signature tiers
+        # must not inherit a sibling run's registry entries
+        with _build_service(catalog, history, corpus) as svc:
+            for tier in tiers:
+                mix = _TierMix(tier, corpus, run_id=f"t{nthreads}")
+                row = _drive_tier(svc, mix, requests, nthreads)
+                result["tiers"][tier]["by_threads"][str(nthreads)] = row
+                print(f"{tier:>13} x{nthreads:<3} p50 {row['p50_ms']:8.3f}ms"
+                      f"  p99 {row['p99_ms']:8.3f}ms"
+                      f"  {row['throughput_rps']:8.1f} req/s", flush=True)
+            # the service's own view of the whole run, percentiles included
+            snap = svc.metrics()
+            result.setdefault("service_histograms", {})[str(nthreads)] = {
+                name: {k: s[k] for k in
+                       ("count", "p50", "p95", "p99", "sum")}
+                for name, s in snap["histograms"].items()
+                if name.startswith(("service.", "pipeline.stage."))}
+        mixed_summary = result["tiers"]["mixed"]["by_threads"][str(nthreads)]
+
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    os.replace(tmp, out_path)
+    print(f"wrote {out_path}")
+
+    us_per_req = mixed_summary["wall_s"] / mixed_summary["requests"] * 1e6
+    print(f"load_tiers,{us_per_req:.1f},{mixed_summary['p99_ms']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

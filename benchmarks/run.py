@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.fig3_profile_traces",
     "benchmarks.fig4_measurement_hygiene",
     "benchmarks.allocation_service_throughput",
+    "benchmarks.load_tiers",
     "benchmarks.profiling_adaptive",
     "benchmarks.point_placement",
     "benchmarks.state_backends",

@@ -124,6 +124,18 @@ def demo_allocation(n_requests: int = 16, workers: int = 8):
         print(f"  e.g. {a['job']}: {a['requirement_gib']:.0f} GiB via "
               f"{a['candidate']} -> {a['config']} "
               f"(${a['usd_per_hour']:.2f}/h, source={a['source']})")
+        # the telemetry plane (repro.telemetry): per-stage latency
+        # histograms and cache-heat counters, one snapshot per service —
+        # `endpoint.metrics()` is the same answer in wire form, and
+        # `render_prometheus(svc.telemetry)` emits scrapeable text
+        m = endpoint.metrics()["metrics"]
+        req_h = m["histograms"].get("service.request.seconds", {})
+        print(f"  telemetry: request p50 {req_h.get('p50', 0) * 1e3:.1f}ms "
+              f"p99 {req_h.get('p99', 0) * 1e3:.1f}ms over "
+              f"{req_h.get('count', 0)} requests; warm hits "
+              f"{m['counters'].get('pipeline.warm_start.hits', 0):.0f}, "
+              f"fresh profiles "
+              f"{m['counters'].get('acquisition.fresh', 0):.0f}")
 
 
 def demo_shared_state(n_jobs: int = 8):
@@ -175,6 +187,18 @@ def demo_shared_state(n_jobs: int = 8):
         print(f"  compaction: profile log {stats['before']} -> "
               f"{stats['after']} rows ({stats['dropped']} shadowed rows "
               f"dropped; survives --root restarts)")
+        # the daemon serves its own telemetry as a wire op — identical
+        # over both transports (a real deployment publishes it with
+        # `--telemetry-interval S` and reads the fleet with
+        # `fleet_snapshot(backend)`)
+        dm = DaemonBackend(sock).metrics()
+        busiest = max(
+            ((n.split(".")[2], h["count"])
+             for n, h in dm["histograms"].items()
+             if n.startswith("daemon.op.")), key=lambda kv: kv[1])
+        print(f"  daemon telemetry: {dm['counters']['daemon.frames']:.0f} "
+              f"frames, {dm['counters']['daemon.bytes_in'] / 1024:.0f} KiB "
+              f"in; busiest op '{busiest[0]}' x{busiest[1]}")
 
 
 def demo(arch: str, n_requests: int = 12, slots: int = 4):

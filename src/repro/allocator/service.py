@@ -57,7 +57,7 @@ import time
 from collections import OrderedDict
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.allocator.classifier import NearestJobClassifier
 from repro.allocator.registry import ModelRegistry
@@ -65,6 +65,7 @@ from repro.core.catalog import ClusterConfig
 from repro.core.history import ExecutionHistory
 from repro.core.profiler import ProfileResult
 from repro.core.selector import DEFAULT_OVERHEAD_GIB, Selection
+from repro.telemetry import MetricsRegistry
 
 GiB = 1024 ** 3
 
@@ -125,32 +126,68 @@ class AllocationResponse:
     escalated: bool = False      # adaptive schedule spent extra points
     budget_exhausted: bool = False   # the budget denied at least one point
     placement: Optional[str] = None  # point-placement strategy (adaptive)
+    store_hits: int = 0          # subset of cache_hits served by the store
+    stage_walls: Optional[Dict[str, float]] = None   # per-stage seconds
+                                 # (warm_start/acquire/fit/classify/
+                                 # extrapolate/select); wire opt-in via
+                                 # AllocationEndpoint.handle(include_trace=)
 
 
-@dataclass
+# the wire-facing counter names; each is a `service.<name>` Counter on
+# the service's MetricsRegistry
+_STAT_FIELDS = (
+    "requests", "batches", "profile_calls", "cache_hits", "registry_hits",
+    "zoo_fits", "zoo_confident", "classifier_fallbacks",
+    "baseline_fallbacks",
+    "plan_cache_hits",           # unconfident repeats answered w/o refit
+    "flush_errors",              # registry persistence failures survived
+    "store_hits",                # ladder points served by the shared store
+    "adaptive_plans",            # plans scheduled adaptively
+    "early_stops",               # adaptive plans that stopped early
+    "escalations",               # adaptive plans that spent extra points
+    "points_saved",              # ladder points adaptive plans did not run
+    "budget_denied",             # plans the budget cut short
+)
+
+
 class ServiceStats:
-    requests: int = 0
-    batches: int = 0
-    profile_calls: int = 0
-    cache_hits: int = 0
-    registry_hits: int = 0
-    zoo_fits: int = 0
-    zoo_confident: int = 0
-    classifier_fallbacks: int = 0
-    baseline_fallbacks: int = 0
-    plan_cache_hits: int = 0     # unconfident repeats answered w/o refit
-    flush_errors: int = 0        # registry persistence failures survived
-    store_hits: int = 0          # ladder points served by the shared store
-    adaptive_plans: int = 0      # plans scheduled adaptively
-    early_stops: int = 0         # adaptive plans that stopped early
-    escalations: int = 0         # adaptive plans that spent extra points
-    points_saved: int = 0        # ladder points adaptive plans did not run
-    budget_denied: int = 0       # plans the budget cut short
+    """Compatibility VIEW over the service's `service.*` counters in its
+    MetricsRegistry. Attribute reads (`stats.requests`) fold the
+    per-thread counter shards, so they always agree with
+    `AllocationService.metrics()` — one thread-safe source of truth
+    where two racing sets of `+=` (some outside the lock) used to drift.
+    Read-only by construction: increments go through `inc()`, which the
+    service owns. Over a disabled registry every field reads 0."""
+
+    FIELDS = _STAT_FIELDS
+
+    def __init__(self, telemetry: Optional[MetricsRegistry] = None):
+        tel = telemetry if telemetry is not None else MetricsRegistry()
+        object.__setattr__(self, "_counters",
+                           {f: tel.counter("service." + f)
+                            for f in _STAT_FIELDS})
+
+    def inc(self, name: str, n: float = 1) -> None:
+        self._counters[name].inc(n)
+
+    def __getattr__(self, name: str):
+        counters = object.__getattribute__(self, "_counters")
+        if name in counters:
+            return int(counters[name].value)
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        raise AttributeError(
+            f"ServiceStats is a read-only view over MetricsRegistry "
+            f"counters; cannot set {name!r}")
 
     @property
     def profile_hit_rate(self) -> float:
         total = self.profile_calls + self.cache_hits
         return self.cache_hits / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {f: int(c.value) for f, c in self._counters.items()}
 
 
 class _ProfileLRU:
@@ -197,7 +234,8 @@ class AllocationService:
                  budget=None,               # repro.profiling ProfilingBudget
                  store=None,                # repro.profiling ProfileStore
                  executor=None,             # repro.profiling ProfilingExecutor
-                 backend=None):             # repro.state StateBackend
+                 backend=None,              # repro.state StateBackend
+                 telemetry=None):           # repro.telemetry MetricsRegistry
         self.catalog = catalog
         self.history = history
         self.backend = backend
@@ -218,7 +256,20 @@ class AllocationService:
         self.executor = executor
         self.batch_window_s = batch_window_s
         self.adaptive = adaptive
-        self.stats = ServiceStats()
+        # per-SERVICE registry by default (not the process default): two
+        # services in one process must not sum each other's counters.
+        # Pass an explicit registry to share one (e.g. with a budget).
+        self.telemetry = telemetry if telemetry is not None \
+            else MetricsRegistry()
+        self.stats = ServiceStats(self.telemetry)
+        self._h_batch = self.telemetry.histogram(
+            "service.batch.size",
+            buckets=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128,
+                     192, 256))
+        self._h_queue = self.telemetry.histogram(
+            "service.queue_wait.seconds")
+        self._h_request = self.telemetry.histogram(
+            "service.request.seconds")
         self._cache = _ProfileLRU(profile_cache_size)
 
         # the ONE decision path (deferred import: repro.pipeline imports
@@ -231,7 +282,8 @@ class AllocationService:
             adaptive=adaptive, placement=placement, budget=budget,
             store=store, executor=executor, cache=self._cache,
             defer_registry_save=True,
-            refresh_store=False)    # _process_batch refreshes once per batch
+            refresh_store=False,    # _process_batch refreshes once per batch
+            telemetry=self.telemetry)
 
         self._cache_cap = profile_cache_size
         # negative-outcome cache: (sig, ladder, tags, settings) ->
@@ -247,7 +299,7 @@ class AllocationService:
         self._plan_lock = threading.Lock()
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._pending: List[Tuple[AllocationRequest, Future]] = []
+        self._pending: List[Tuple[AllocationRequest, Future, float]] = []
         self._worker: Optional[threading.Thread] = None
         self._closed = False
 
@@ -286,13 +338,20 @@ class AllocationService:
         None for local backends."""
         return getattr(self._shared_backend(), "address", None)
 
+    def metrics(self) -> Dict:
+        """Snapshot of every instrument on this service's registry —
+        the `service.*` counters/histograms plus whatever the pipeline,
+        acquisition, and (if it shares the registry) budget recorded.
+        See repro.telemetry for the map."""
+        return self.telemetry.snapshot()
+
     # -- public -------------------------------------------------------------
     def submit(self, req: AllocationRequest) -> "Future[AllocationResponse]":
         fut: Future = Future()
         with self._cv:
             if self._closed:
                 raise RuntimeError("AllocationService is closed")
-            self._pending.append((req, fut))
+            self._pending.append((req, fut, time.monotonic()))
             self._ensure_worker_locked()
             self._cv.notify()
         return fut
@@ -316,7 +375,7 @@ class AllocationService:
         try:
             self.registry.flush()   # durability backstop for deferred puts
         except Exception:
-            self.stats.flush_errors += 1
+            self.stats.inc("flush_errors")
 
     def __enter__(self) -> "AllocationService":
         return self
@@ -372,11 +431,15 @@ class AllocationService:
         # recycled under a cached plan). Placement names key by value.
         return (True, placement)
 
-    def _process_batch(self,
-                       batch: List[Tuple[AllocationRequest, Future]]) -> None:
-        with self._lock:
-            self.stats.batches += 1
-            self.stats.requests += len(batch)
+    def _process_batch(
+            self,
+            batch: List[Tuple[AllocationRequest, Future, float]]) -> None:
+        self.stats.inc("batches")
+        self.stats.inc("requests", len(batch))
+        self._h_batch.observe(len(batch))
+        now = time.monotonic()
+        for _req, _fut, t_sub in batch:
+            self._h_queue.observe(now - t_sub)
         # pull sibling processes' work in once per batch: profile points /
         # anchors from the shared store, models from a shared registry
         if self.store is not None:
@@ -397,33 +460,37 @@ class AllocationService:
         # overrides an explicit sizes/anchor, a tag-steered
         # classification, or a per-request acquisition override
         groups: "OrderedDict[Tuple, " \
-                "List[Tuple[AllocationRequest, Future]]]" = OrderedDict()
-        for req, fut in batch:
+                "List[Tuple[AllocationRequest, Future, float]]]" = \
+            OrderedDict()
+        for req, fut, t_sub in batch:
             ladder = self.pipeline.ladder_for(self._preq(req))
             groups.setdefault(
                 (req.sig, ladder, req.tags_key, self._settings_key(req)),
-                []).append((req, fut))
+                []).append((req, fut, t_sub))
 
         def handle_group(entry) -> None:
             (sig, ladder, _tags, _settings), items = entry
-            live = [(req, fut) for req, fut in items if not fut.cancelled()]
+            live = [(req, fut, ts) for req, fut, ts in items
+                    if not fut.cancelled()]
             if not live:                    # whole group cancelled: don't
                 return                      # profile for nobody
             t0 = time.monotonic()
             try:
                 plan = self._plan(sig, ladder, live[0][0])
             except Exception as e:          # a failing profile_at fails its
-                for _, fut in live:         # group, never the whole batch
+                for _, fut, _ts in live:    # group, never the whole batch
                     _resolve(fut, exc=e)
                 return
             wall = time.monotonic() - t0
-            for req, fut in live:
+            for req, fut, ts in live:
                 try:
                     resp = self._respond(plan, req, wall)
                 except Exception as e:
                     _resolve(fut, exc=e)
                     continue
                 _resolve(fut, result=resp)
+                # submit -> answer, queue wait and batching included
+                self._h_request.observe(time.monotonic() - ts)
 
         entries = list(groups.items())
         if self.executor is not None and len(entries) > 1:
@@ -439,16 +506,14 @@ class AllocationService:
         try:
             self.registry.flush()
         except Exception:
-            with self._lock:
-                self.stats.flush_errors += 1
+            self.stats.inc("flush_errors")
 
     # -- planning: pipeline calls + caches + stats --------------------------
     def _plan(self, sig: str, ladder: Tuple[float, ...],
               req: AllocationRequest):
         plan = self.pipeline.warm_start(sig)
         if plan is not None:
-            with self._lock:
-                self.stats.registry_hits += 1
+            self.stats.inc("registry_hits")
             return plan
 
         plan_key = (sig, ladder, req.tags_key, self._settings_key(req))
@@ -462,8 +527,7 @@ class AllocationService:
             cached_plan = self._plan_cache.get(plan_key)
             if cached_plan is not None:
                 self._plan_cache.move_to_end(plan_key)
-                with self._lock:
-                    self.stats.plan_cache_hits += 1
+                self.stats.inc("plan_cache_hits")
                 # this request did no profiling; don't report the
                 # original's counters or adaptive-schedule flags
                 return dataclasses.replace(cached_plan, profiled=0,
@@ -492,25 +556,25 @@ class AllocationService:
         return plan
 
     def _count_plan(self, plan) -> None:
-        """Map one measured plan onto the wire-facing counters."""
-        with self._lock:
-            s = self.stats
-            s.zoo_fits += int(plan.fit_ran)
-            s.zoo_confident += int(plan.registered)
-            if plan.source == "classifier":
-                s.classifier_fallbacks += 1
-            elif plan.source == "baseline":
-                s.baseline_fallbacks += 1
-            s.profile_calls += plan.profiled
-            s.cache_hits += plan.cache_hits
-            s.store_hits += plan.store_hits
-            if plan.adaptive:
-                s.adaptive_plans += 1
-                s.early_stops += int(plan.early_stop)
-                s.escalations += int(plan.escalated)
-                s.points_saved += max(0, plan.base_points
-                                      - plan.total_points)
-            s.budget_denied += int(plan.budget_exhausted)
+        """Map one measured plan onto the wire-facing counters (no lock:
+        the counters themselves are thread-safe)."""
+        s = self.stats
+        s.inc("zoo_fits", int(plan.fit_ran))
+        s.inc("zoo_confident", int(plan.registered))
+        if plan.source == "classifier":
+            s.inc("classifier_fallbacks")
+        elif plan.source == "baseline":
+            s.inc("baseline_fallbacks")
+        s.inc("profile_calls", plan.profiled)
+        s.inc("cache_hits", plan.cache_hits)
+        s.inc("store_hits", plan.store_hits)
+        if plan.adaptive:
+            s.inc("adaptive_plans")
+            s.inc("early_stops", int(plan.early_stop))
+            s.inc("escalations", int(plan.escalated))
+            s.inc("points_saved", max(0, plan.base_points
+                                      - plan.total_points))
+        s.inc("budget_denied", int(plan.budget_exhausted))
 
     def _respond(self, plan, req: AllocationRequest,
                  wall: float) -> AllocationResponse:
@@ -521,4 +585,5 @@ class AllocationService:
                                   trace.selection, p.neighbor, p.profiled,
                                   p.cache_hits, wall, p.early_stop,
                                   p.escalated, p.budget_exhausted,
-                                  p.placement)
+                                  p.placement, p.store_hits,
+                                  dict(trace.stage_walls))

@@ -72,6 +72,26 @@ Shared state composes exactly as before: `store=` (ProfileStore over any
 repro.state backend), `budget=` (ProfilingBudget, shared-envelope aware),
 `executor=` (ProfilingExecutor for fixed-ladder point concurrency),
 `registry=`/`classifier=` for warm starts and Flora-style transfer.
+
+Telemetry (repro.telemetry; `telemetry=` overrides the process default):
+
+  stage 1      hist  pipeline.stage.warm_start.seconds (sampled 1-in-8)
+               ctrs  pipeline.warm_start.{hits,misses}        (exact)
+  stage 2      hist  pipeline.stage.acquire.seconds           (always)
+               ctrs  acquisition.{fresh,lru_hits,store_hits,denied}
+               hist  acquisition.profile_seconds   (PointSource; exact)
+               ctrs  budget.{reserved_points,refunded_points,
+                     charged_seconds,denials}   (ProfilingBudget; exact)
+  stage 3      hist  pipeline.stage.fit.seconds               (always)
+  stage 4      hist  pipeline.stage.classify.seconds          (always)
+  stages 5-6   hist  pipeline.stage.{extrapolate,select}.seconds
+                     (sampled 1-in-8)
+
+Spans (`pipeline.<stage>`) open on the cold path always, on the warm
+path only when nested inside a caller's span; exact per-request walls
+always land on `PipelinePlan.stage_walls` -> `PipelineTrace.stage_walls`
+(opt-in on the wire via `AllocationEndpoint.handle(include_trace=True)`).
+See repro/telemetry/__init__.py for the full observability map.
 """
 from repro.pipeline.acquisition import (AcquisitionStats, MemoryPointCache,
                                         PointSource)

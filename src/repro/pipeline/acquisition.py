@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Tuple
 
 from repro.core.profiler import ProfileResult
+from repro.telemetry import default_registry
 
 
 @dataclass
@@ -47,7 +48,8 @@ class PointSource:
                  budget=None,                 # repro.profiling ProfilingBudget
                  store=None,                  # repro.profiling ProfileStore
                  cache=None,                  # object with get/put (LRU view)
-                 refresh_store: bool = True):
+                 refresh_store: bool = True,
+                 telemetry=None):             # repro.telemetry MetricsRegistry
         self.signature = signature
         self.profile_at = profile_at
         self.budget = budget
@@ -55,6 +57,15 @@ class PointSource:
         self.cache = cache
         self.stats = AcquisitionStats()
         self._lock = threading.Lock()
+        # process-wide acquisition-tier heat (stats above is per-plan)
+        tel = telemetry if telemetry is not None else default_registry()
+        self._c_fresh = tel.counter("acquisition.fresh")
+        self._c_lru = tel.counter("acquisition.lru_hits")
+        self._c_store = tel.counter("acquisition.store_hits")
+        self._c_denied = tel.counter("acquisition.denied")
+        # reported profile cost (the paper's envelope currency), not the
+        # simulator's real microseconds — matches what budgets charge
+        self._h_profile = tel.histogram("acquisition.profile_seconds")
         if store is not None and refresh_store:
             try:
                 # pull sibling processes' points in BEFORE planning: a
@@ -86,6 +97,7 @@ class PointSource:
             self.stats.cache_hits += 1
             if from_store:
                 self.stats.store_hits += 1
+        (self._c_store if from_store else self._c_lru).inc()
 
     # -- the one acquisition rule -------------------------------------------
     def acquire(self, size: float) -> Optional[Tuple[ProfileResult, bool]]:
@@ -107,6 +119,7 @@ class PointSource:
         if self.budget is not None and not self.budget.try_spend():
             with self._lock:
                 self.stats.denied = True
+            self._c_denied.inc()
             return None
         # a sibling thread may have profiled this size between the peek
         # and the reservation: re-check the cache so the run (and its
@@ -132,6 +145,8 @@ class PointSource:
             self.budget.charge(r.wall_s)
         with self._lock:
             self.stats.fresh += 1
+        self._c_fresh.inc()
+        self._h_profile.observe(r.wall_s)
         if self.cache is not None:
             self.cache.put(self.signature, size, r, from_store=False)
         if self.store is not None:

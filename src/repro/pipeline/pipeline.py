@@ -8,15 +8,29 @@ config selection) and returns a `PipelineTrace` — the one record both
 `CrispyReport` (core/crispy.py) and `AllocationResponse`
 (allocator/service.py) are built from. `run()` composes the two for
 one-shot callers.
+
+Telemetry (repro.telemetry): stages record wall histograms
+(`pipeline.stage.<stage>.seconds`) and spans (`pipeline.<stage>`) into
+the pipeline's `MetricsRegistry` (the process default unless
+`telemetry=` overrides it). Cold stages (acquire/fit/classify) always
+record; warm stages (warm_start/extrapolate/select) sample their
+histograms 1-in-8 and open spans only when nested inside a caller span
+— see the `_sample_mask` comment in `__init__` for the economics.
+Exact per-request stage walls always land on `PipelinePlan.stage_walls`
+/ `PipelineTrace.stage_walls` so a single decision can be broken down
+after the fact. Acquisition-tier heat (LRU/store/fresh/denied) is
+counted by `PointSource`.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from time import perf_counter
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.allocator.model_zoo import fit_zoo
+from repro.telemetry import current_span, default_registry, span_if
 from repro.core.catalog import ClusterConfig
 from repro.core.history import ExecutionHistory
 from repro.core.profiler import ProfileResult
@@ -79,6 +93,9 @@ class PipelinePlan:
     fit_ran: bool = False            # a zoo/fitter fit happened
     registered: bool = False         # a confident model was registered
     newly_observed: bool = False     # first time the classifier saw this sig
+    stage_walls: Dict[str, float] = field(default_factory=dict)
+    # per-stage wall seconds for THIS plan (warm_start | acquire | fit |
+    # classify); finalize() adds the per-request stages on the trace
 
     @property
     def total_points(self) -> int:
@@ -96,6 +113,8 @@ class PipelineTrace:
     requirement_gib: float
     selection: Selection
     wall_s: float = 0.0
+    stage_walls: Dict[str, float] = field(default_factory=dict)
+    # plan stages + this request's extrapolate/select walls (seconds)
 
     # convenience proxies (report builders read these off the trace)
     @property
@@ -135,7 +154,8 @@ class AllocationPipeline:
                  executor=None,             # repro.profiling ProfilingExecutor
                  cache=None,                # LRU adapter (get/put), optional
                  defer_registry_save: bool = False,
-                 refresh_store: bool = True):
+                 refresh_store: bool = True,
+                 telemetry=None):           # repro.telemetry MetricsRegistry
         # refresh_store=False is for callers that already refresh the
         # shared store on their own cadence (the AllocationService does it
         # once per batch); everyone else must see sibling points before
@@ -158,6 +178,25 @@ class AllocationPipeline:
         self.defer_registry_save = defer_registry_save
         self.refresh_store = refresh_store
         self._lock = threading.Lock()       # guards the classifier
+        self.telemetry = telemetry if telemetry is not None \
+            else default_registry()
+        # instruments are created once here, not per plan: the factory
+        # takes the registry lock, the hot path must not
+        self._stage_hist = {
+            s: self.telemetry.histogram(f"pipeline.stage.{s}.seconds")
+            for s in ("warm_start", "acquire", "fit", "classify",
+                      "extrapolate", "select")}
+        self._warm_hits = self.telemetry.counter("pipeline.warm_start.hits")
+        self._warm_misses = self.telemetry.counter(
+            "pipeline.warm_start.misses")
+        # warm-path economics: a registry hit answers in tens of µs, so
+        # per-request spans (or even an unconditional histogram observe)
+        # would blow the <5% overhead pin. Warm-path stage histograms are
+        # sampled 1-in-(mask+1); warm-path spans exist only when nested
+        # inside an active caller span. Counters stay exact. The cold
+        # path (acquire/fit) always records — profiling dwarfs it.
+        self._sample_mask = 7
+        self._sample_n = 0      # benign races: a lost bump skews sampling
 
     # -- stage 2a: ladder resolution ----------------------------------------
     def ladder_for(self, req: PipelineRequest) -> Tuple[float, ...]:
@@ -189,13 +228,27 @@ class AllocationPipeline:
     # -- stage 1: warm start ------------------------------------------------
     def warm_start(self, signature: str) -> Optional[PipelinePlan]:
         """A confident registered model answers without any profiling."""
-        if self.registry is None:
-            return None
-        rec = self.registry.get(signature)
-        if rec is not None and getattr(rec.model, "confident", False):
-            return PipelinePlan(signature, "registry", rec.model,
-                                rec.candidate)
-        return None
+        t0 = perf_counter()
+        plan = None
+        with span_if(self.telemetry.enabled
+                     and current_span() is not None,
+                     "pipeline.warm_start", signature=signature):
+            if self.registry is not None:
+                rec = self.registry.get(signature)
+                if rec is not None and getattr(rec.model, "confident",
+                                               False):
+                    plan = PipelinePlan(signature, "registry", rec.model,
+                                        rec.candidate)
+        wall = perf_counter() - t0
+        if plan is not None:
+            self._warm_hits.inc()
+            plan.stage_walls["warm_start"] = wall
+        else:
+            self._warm_misses.inc()
+        self._sample_n = n = (self._sample_n + 1) & self._sample_mask
+        if not n:
+            self._stage_hist["warm_start"].observe(wall)
+        return plan
 
     # -- stages 1-4: per-signature plan -------------------------------------
     def plan(self, req: PipelineRequest,
@@ -210,40 +263,68 @@ class AllocationPipeline:
                      ladder: Optional[Sequence[float]] = None
                      ) -> PipelinePlan:
         sig = req.sig
+        tel = self.telemetry
         # stage 2: point acquisition through the one budgeted cache
         # hierarchy (LRU -> shared store -> fresh run)
         base = list(ladder if ladder is not None else self.ladder_for(req))
         source = PointSource(sig, req.profile_at, budget=self.budget,
                              store=self.store, cache=self.cache,
-                             refresh_store=self.refresh_store)
+                             refresh_store=self.refresh_store,
+                             telemetry=tel)
         adaptive = req.adaptive if req.adaptive is not None else self.adaptive
+
+        # adaptive placement interleaves fitting with acquisition inside
+        # drive_placement, so the fit wall is accumulated through this
+        # wrapper and subtracted from the acquisition elapsed time —
+        # stage walls stay disjoint either way
+        fit_wall = [0.0]
+
+        def timed_fit(sizes, mems):
+            t0 = perf_counter()
+            try:
+                return self._fit(sizes, mems)
+            finally:
+                fit_wall[0] += perf_counter() - t0
+
+        t_acq = perf_counter()
         if adaptive:
             placer = make_placer(req.placement if req.placement is not None
                                  else self.placement)
-            out = drive_placement(placer, base, req.full_size,
-                                  source.acquire, self._fit)
+            with span_if(tel.enabled, "pipeline.acquire", signature=sig,
+                         adaptive=True):
+                out = drive_placement(placer, base, req.full_size,
+                                      source.acquire, timed_fit)
             sizes, mems, results, fit = out.sizes, out.mems, out.results, \
                 out.fit
             flags = (out.early_stop, out.escalated, out.budget_exhausted)
             placement_name = getattr(placer, "name", None)
             trace = out.requirement_trace
         else:
-            sizes, mems, results, exhausted = self._acquire_fixed(source,
-                                                                  base)
-            fit = self._fit(sizes, mems)
+            with span_if(tel.enabled, "pipeline.acquire", signature=sig,
+                         adaptive=False):
+                sizes, mems, results, exhausted = self._acquire_fixed(
+                    source, base)
+            with span_if(tel.enabled, "pipeline.fit", signature=sig):
+                fit = timed_fit(sizes, mems)
             flags = (False, False, exhausted)
             placement_name = None
             trace = []
+        acquire_wall = max(0.0, perf_counter() - t_acq - fit_wall[0])
+        self._stage_hist["acquire"].observe(acquire_wall)
+        self._stage_hist["fit"].observe(fit_wall[0])
         walls = [r.wall_s for r in results]
 
         # stage 4a: every profiled ladder feeds future classifications,
         # gate-failing ones included
         newly_observed = False
+        classify_wall = 0.0
         if self.classifier is not None:
+            t_cls = perf_counter()
             with self._lock:
                 newly_observed = not self.classifier.has(sig)
                 self.classifier.observe(sig, sizes, mems, walls,
                                         tags=req.tags)
+            classify_wall += perf_counter() - t_cls
 
         plan = PipelinePlan(sig, "baseline", None, None, fit=fit,
                             sizes=list(sizes), mems=list(mems), walls=walls,
@@ -256,8 +337,11 @@ class AllocationPipeline:
                             budget_exhausted=flags[2],
                             base_points=len(base), fit_ran=True,
                             newly_observed=newly_observed)
+        plan.stage_walls["acquire"] = acquire_wall
+        plan.stage_walls["fit"] = fit_wall[0]
 
         # stage 4b: confident fit -> serve and register it
+        resolved = False
         if getattr(fit, "confident", False):
             model = getattr(fit, "model", fit)
             candidate = getattr(fit, "candidate",
@@ -267,14 +351,16 @@ class AllocationPipeline:
                 self.registry.put(sig, model, candidate, sizes, mems,
                                   defer_save=self.defer_registry_save)
                 plan.registered = True
-            return plan
+            resolved = True
 
         # stage 4c: unconfident -> nearest-neighbor transfer (Flora)
-        if self.classifier is not None and len(sizes) >= 2:
+        if not resolved and self.classifier is not None and len(sizes) >= 2:
+            t_cls = perf_counter()
             with self._lock:
                 cls = self.classifier.classify(sizes, mems, walls,
                                                exclude=(sig,),
                                                tags=req.tags)
+            classify_wall += perf_counter() - t_cls
             if cls is not None:
                 neighbor_rec = self.registry.get(cls.neighbor,
                                                  count_hit=False) \
@@ -285,15 +371,18 @@ class AllocationPipeline:
                     plan.model = neighbor_rec.model
                     plan.candidate = neighbor_rec.candidate
                     plan.neighbor = cls.neighbor
-                    return plan
-                sel = select_like(self.catalog, self.history, cls.neighbor)
-                if sel is not None:
-                    plan.source = "classifier"
-                    plan.neighbor = cls.neighbor
-                    plan.neighbor_selection = sel
-                    return plan
+                else:
+                    sel = select_like(self.catalog, self.history,
+                                      cls.neighbor)
+                    if sel is not None:
+                        plan.source = "classifier"
+                        plan.neighbor = cls.neighbor
+                        plan.neighbor_selection = sel
         # stage 4d: baseline (requirement 0 == exactly BFA, the paper's
-        # never-worse-than-fallback property)
+        # never-worse-than-fallback property): plan.source is still
+        # "baseline" when neither 4b nor 4c claimed the plan above
+        self._stage_hist["classify"].observe(classify_wall)
+        plan.stage_walls["classify"] = classify_wall
         return plan
 
     def _acquire_fixed(self, source: PointSource,
@@ -317,21 +406,37 @@ class AllocationPipeline:
         over a (possibly shared) plan."""
         leeway = req.leeway if req.leeway is not None else self.leeway
         exclude = req.job if req.exclude_job_in_history else None
-        if plan.model is not None:
-            req_gib = plan.model.requirement(req.full_size, leeway) / GiB
-            sel = select_crispy(self.catalog, self.history, req_gib,
-                                overhead_per_node_gib=self.overhead,
-                                exclude_job=exclude)
-        elif plan.neighbor_selection is not None:
-            req_gib = 0.0
-            sel = plan.neighbor_selection
-        else:
-            req_gib = 0.0
-            sel = select_crispy(self.catalog, self.history, 0.0,
-                                overhead_per_node_gib=self.overhead,
-                                exclude_job=exclude)
-        return PipelineTrace(plan, req.job, req.full_size, req_gib, sel,
-                             wall_s)
+        nested = self.telemetry.enabled and current_span() is not None
+        t0 = perf_counter()
+        with span_if(nested, "pipeline.extrapolate", job=req.job,
+                     source=plan.source):
+            if plan.model is not None:
+                req_gib = plan.model.requirement(req.full_size,
+                                                 leeway) / GiB
+                sel = None
+            elif plan.neighbor_selection is not None:
+                req_gib = 0.0
+                sel = plan.neighbor_selection
+            else:
+                req_gib = 0.0
+                sel = None
+        t_extra = perf_counter()
+        if sel is None:
+            with span_if(nested, "pipeline.select", job=req.job):
+                sel = select_crispy(self.catalog, self.history, req_gib,
+                                    overhead_per_node_gib=self.overhead,
+                                    exclude_job=exclude)
+        t_sel = perf_counter()
+        self._sample_n = n = (self._sample_n + 1) & self._sample_mask
+        if not n:
+            self._stage_hist["extrapolate"].observe(t_extra - t0)
+            self._stage_hist["select"].observe(t_sel - t_extra)
+        trace = PipelineTrace(plan, req.job, req.full_size, req_gib, sel,
+                              wall_s)
+        trace.stage_walls = dict(plan.stage_walls)
+        trace.stage_walls["extrapolate"] = t_extra - t0
+        trace.stage_walls["select"] = t_sel - t_extra
+        return trace
 
     def run(self, req: PipelineRequest) -> PipelineTrace:
         """The whole staged path for one request (the one-shot and

@@ -41,6 +41,8 @@ import threading
 import time
 from typing import Dict, Optional
 
+from repro.telemetry import default_registry
+
 
 class BudgetExhausted(RuntimeError):
     """Raised by `spend()` when the budget cannot cover another point."""
@@ -52,7 +54,8 @@ class ProfilingBudget:
                  max_points: Optional[int] = None,
                  backend=None,              # repro.state StateBackend
                  namespace: str = "budget",
-                 key: str = "envelope"):
+                 key: str = "envelope",
+                 telemetry=None):           # repro.telemetry MetricsRegistry
         self.wall_s = wall_s
         self.charge_s = charge_s
         self.max_points = max_points
@@ -64,6 +67,13 @@ class ProfilingBudget:
         self._points = 0
         self._charged = 0.0
         self._denials = 0
+        # envelope accounting audit trail: reserved vs refunded must net
+        # out to points actually profiled
+        tel = telemetry if telemetry is not None else default_registry()
+        self._c_reserved = tel.counter("budget.reserved_points")
+        self._c_refunded = tel.counter("budget.refunded_points")
+        self._c_charged = tel.counter("budget.charged_seconds")
+        self._c_denials = tel.counter("budget.denials")
         if backend is not None:
             self._ensure_doc()
 
@@ -141,7 +151,10 @@ class ProfilingBudget:
         reservation is an atomic backend lease, so concurrent processes
         can never over-grant one envelope."""
         if self.shared:
-            return self._try_spend_shared(points)
+            granted = self._try_spend_shared(points)
+            (self._c_reserved.inc(points) if granted
+             else self._c_denials.inc())
+            return granted
         with self._lock:
             over_points = (self.max_points is not None
                            and self._points + points > self.max_points)
@@ -151,9 +164,12 @@ class ProfilingBudget:
                            and self._charged >= self.charge_s)
             if over_points or over_wall or over_charge:
                 self._denials += 1
-                return False
-            self._points += points
-            return True
+                granted = False
+            else:
+                self._points += points
+                granted = True
+        (self._c_reserved.inc(points) if granted else self._c_denials.inc())
+        return granted
 
     def _try_spend_shared(self, points: int) -> bool:
         if self.wall_s is not None:
@@ -201,12 +217,15 @@ class ProfilingBudget:
                 won, _cur, _ver = self.backend.cas(self.namespace, self.key,
                                                    version, doc)
                 if won:
+                    self._c_refunded.inc(points)
                     return
         with self._lock:
             self._points = max(0, self._points - points)
+        self._c_refunded.inc(points)
 
     def charge(self, seconds: float) -> None:
         """Account a completed profile run's (reported) wall time."""
+        self._c_charged.inc(max(0.0, float(seconds)))
         if self.shared:
             self.backend.reserve(self.namespace, self.key,
                                  {"charged": max(0.0, float(seconds))}, {})

@@ -156,9 +156,11 @@ _BATCH_RANK = {"k": 4, "v": 4, "ckv": 3, "kr": 3, "pos": 1,
 class AllocationEndpoint:
     """Request endpoint over an AllocationService: wire-friendly dicts in,
     dicts out, with the service's batching/caching behind it. `submit`
-    returns the service future for async callers; `handle` blocks;
+    returns the service future for async callers; `handle` blocks (pass
+    `include_trace=True` for per-stage walls + acquisition-tier counts);
     `stats` reports service counters plus adaptive-profiling/budget state
-    for monitoring dashboards."""
+    for monitoring dashboards; `metrics` is the full telemetry snapshot
+    (histogram percentiles included)."""
 
     def __init__(self, service: AllocationService):
         self.service = service
@@ -176,14 +178,37 @@ class AllocationEndpoint:
             signature=signature, leeway=leeway, adaptive=adaptive,
             placement=placement, tags=tags))
 
-    def handle(self, timeout: Optional[float] = None, **payload) -> Dict:
-        wire = self.to_wire(self.submit(**payload).result(timeout))
+    def handle(self, timeout: Optional[float] = None,
+               include_trace: bool = False, **payload) -> Dict:
+        resp = self.submit(**payload).result(timeout)
+        wire = self.to_wire(resp)
         # which shared-state backend served this answer ("memory" /
         # "file" / "daemon", None for a process-local service), and for a
         # daemon, over which transport ("unix" | "tcp")
         wire["backend"] = self.service.backend_kind
         wire["backend_transport"] = self.service.backend_transport
+        if include_trace:
+            # opt-in ONLY: the default wire answer stays byte-identical
+            lru_hits = max(0, resp.cache_hits - resp.store_hits)
+            wire["trace"] = {
+                "stage_walls": dict(resp.stage_walls or {}),
+                "acquisition": {"fresh": resp.profiled,
+                                "lru_hits": lru_hits,
+                                "store_hits": resp.store_hits}}
         return wire
+
+    def metrics(self) -> Dict:
+        """Full telemetry snapshot (counters / gauges / histograms with
+        p50/p95/p99) of the attached service — the wire form of
+        `AllocationService.metrics()`, plus backend identity and the
+        budget envelope when one is configured."""
+        out = {"backend": self.service.backend_kind,
+               "backend_transport": self.service.backend_transport,
+               "backend_address": self.service.backend_address,
+               "metrics": self.service.metrics()}
+        if self.service.budget is not None:
+            out["budget"] = self.service.budget.snapshot()
+        return out
 
     def stats(self) -> Dict:
         """Service counters + shared-state backend kind + profiling budget

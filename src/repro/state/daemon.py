@@ -16,8 +16,8 @@ Two transports, same protocol, served simultaneously:
                 host, gated by filesystem permissions.
   tcp           --listen host:port — services on OTHER hosts share the
                 same envelope/registry/store. Port 0 binds an ephemeral
-                port; the resolved address is announced on stdout and
-                written to --port-file when given. TCP crosses the
+                port; the resolved address is announced in the "serving"
+                log line and written to --port-file when given. TCP crosses the
                 unix-permission boundary, so pair it with --auth-token
                 (or $CRISPY_DAEMON_TOKEN): the first frame on every
                 connection must then be {"op": "auth", "token": ...}.
@@ -48,7 +48,17 @@ Wire protocol (one JSON object per line, request -> response):
   {"op": "evict_registry", "ns": .., "key": ..,
    "max_records": .., "max_age_s": ..}             -> {"ok": true,
                                                        "evicted": [..]}
+  {"op": "metrics"}                                -> {"ok": true,
+                                                       "metrics": {..}}
   {"op": "shutdown"}                               -> {"ok": true}
+
+`metrics` returns the daemon's own telemetry snapshot (repro.telemetry):
+per-op latency histograms `daemon.op.<op>.seconds` plus
+frames/bytes_in/auth_failures/compactions counters — identical over both
+transports. Server-side lifecycle events (serving announcement, errors,
+clean shutdown) are structured one-line JSON on stderr
+(`StructuredLogger`); the CLI's stdout answers ("pong", "no daemon",
+"shutdown requested") are a scripting contract and never change shape.
 
 Log compaction + registry eviction: append-only namespaces grow forever
 under "later rows win", so `compact` folds a log into snapshot-plus-tail
@@ -102,6 +112,9 @@ from repro.state.file_backend import FileBackend
 from repro.state.transport import (MAX_FRAME_BYTES, auth_frame, connect,
                                    default_auth_token, describe_address,
                                    parse_address, recv_frame, send_frame)
+from repro.telemetry import (MetricsRegistry, StructuredLogger,
+                             TelemetryPublisher)
+from time import perf_counter
 
 HAS_UNIX_SOCKETS = hasattr(socket, "AF_UNIX")
 
@@ -131,7 +144,8 @@ class CrispyDaemon:
                  compact_after: Optional[int] = None,
                  compact_max_age_s: Optional[float] = None,
                  registry_max_records: Optional[int] = None,
-                 registry_max_age_s: Optional[float] = None):
+                 registry_max_age_s: Optional[float] = None,
+                 telemetry=None):           # repro.telemetry MetricsRegistry
         if socket_path is None and listen is None:
             raise StateBackendError(
                 "CrispyDaemon needs a unix socket_path, a tcp listen "
@@ -164,13 +178,47 @@ class CrispyDaemon:
         # (daemon_threads) don't keep serving a "stopped" daemon
         self._conns: set = set()
         self._conns_lock = threading.Lock()
+        # per-daemon registry by default: two daemons in one test process
+        # must not sum each other's counters. Served as the `metrics` op.
+        self.telemetry = telemetry if telemetry is not None \
+            else MetricsRegistry()
+        self._c_frames = self.telemetry.counter("daemon.frames")
+        self._c_bytes = self.telemetry.counter("daemon.bytes_in")
+        self._c_auth_failures = self.telemetry.counter(
+            "daemon.auth_failures")
+        self._c_compactions = self.telemetry.counter("daemon.compactions")
+        # daemon.op.<op>.seconds histograms, created lazily on first use;
+        # the plain-dict read is the lock-free fast path (a lost race just
+        # calls the locking registry factory twice for the same name)
+        self._op_hist: Dict[str, object] = {}
+
+    def _op_hist_for(self, op) -> "object":
+        if not isinstance(op, str):
+            op = "invalid"              # unknown junk shares one series
+        h = self._op_hist.get(op)
+        if h is None:
+            h = self.telemetry.histogram(f"daemon.op.{op}.seconds")
+            self._op_hist[op] = h
+        return h
 
     # -- request dispatch ---------------------------------------------------
     def handle_request(self, req: Dict) -> Dict:
         op = req.get("op")
+        t0 = perf_counter()
+        try:
+            return self._dispatch(op, req)
+        finally:
+            self._op_hist_for(op).observe(perf_counter() - t0)
+
+    def _dispatch(self, op, req: Dict) -> Dict:
         b = self.backend
         if op in ("ping", "auth"):      # auth is a no-op once admitted
             return {"ok": True, "kind": b.kind}
+        if op == "metrics":
+            # per-op latency histograms + frame/byte/compaction counters,
+            # identical over both transports
+            return {"ok": True, "kind": b.kind,
+                    "metrics": self.telemetry.snapshot()}
         if op == "append":
             with self._write_lock:
                 b.append(req["ns"], req["record"])
@@ -207,6 +255,7 @@ class CrispyDaemon:
                                   key_fields=req.get("key_fields"),
                                   max_age_s=req.get("max_age_s"))
                 self._appends_since_compact[req["ns"]] = 0
+            self._c_compactions.inc()
             resp = {"ok": True}
             resp.update(stats)
             return resp
@@ -229,6 +278,7 @@ class CrispyDaemon:
         n = self._appends_since_compact.get(ns, 0) + 1
         if n >= self.compact_after:
             self.backend.compact(ns, max_age_s=self.compact_max_age_s)
+            self._c_compactions.inc()
             n = 0
         self._appends_since_compact[ns] = n
 
@@ -281,6 +331,8 @@ class CrispyDaemon:
                     line = self.rfile.readline(MAX_FRAME_BYTES + 1)
                     if not line:
                         break
+                    daemon._c_frames.inc()
+                    daemon._c_bytes.inc(len(line))
                     if len(line) > MAX_FRAME_BYTES:
                         try:
                             self.wfile.write((json.dumps(
@@ -306,6 +358,7 @@ class CrispyDaemon:
                                 resp = {"ok": True,
                                         "kind": daemon.backend.kind}
                             else:
+                                daemon._c_auth_failures.inc()
                                 resp = {"ok": False, "error":
                                         "auth required: send "
                                         '{"op": "auth", "token": ...} '
@@ -513,7 +566,7 @@ class DaemonBackend(StateBackend):
                     pass
 
     # ops safe to blindly resend: they mutate nothing server-side
-    _IDEMPOTENT_OPS = frozenset({"ping", "read", "load"})
+    _IDEMPOTENT_OPS = frozenset({"ping", "read", "load", "metrics"})
 
     def _call(self, payload: Dict) -> Dict:
         op = payload.get("op")
@@ -598,6 +651,12 @@ class DaemonBackend(StateBackend):
                            "max_age_s": max_age_s})
         return list(resp.get("evicted", []))
 
+    def metrics(self) -> Dict:
+        """The daemon's telemetry snapshot (`daemon.op.<op>.seconds`
+        histograms + frame/byte/auth-failure/compaction counters) —
+        same answer over unix and tcp transports."""
+        return self._call({"op": "metrics"})["metrics"]
+
     def ping(self) -> bool:
         try:
             return bool(self._call({"op": "ping"}).get("ok"))
@@ -651,6 +710,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--registry-max-age", type=float, default=None,
                     metavar="S", help="evict registry records older than "
                     "S seconds after each registry flush")
+    ap.add_argument("--telemetry-interval", type=float, default=None,
+                    metavar="S", help="publish the daemon's own metrics "
+                    "snapshot into its backend's __telemetry__ namespace "
+                    "every S seconds (source 'crispy-daemon')")
     ap.add_argument("--ping", action="store_true",
                     help="health-check a running daemon and exit")
     ap.add_argument("--shutdown", action="store_true",
@@ -658,6 +721,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     auth_token = args.auth_token or default_auth_token()
+    # server-side events are structured one-line JSON on stderr; the CLI
+    # answers on stdout ("pong" / "no daemon" / "shutdown requested" and
+    # the exit codes) are a scripting contract and stay byte-identical
+    log = StructuredLogger("crispy-daemon")
 
     if args.ping or args.shutdown:
         # --listen names the tcp daemon to target; else the unix socket
@@ -673,15 +740,15 @@ def main(argv: Optional[List[str]] = None) -> int:
             print("shutdown requested", flush=True)
             return 0
         except StateBackendError as e:
-            print(f"crispy-daemon: {e}", file=sys.stderr)
+            log.error("client command failed", target=target, error=str(e))
             return 1
 
     socket_path = args.socket
     if socket_path is None and args.listen is None:
         socket_path = default_socket_path()
     if socket_path is not None and not HAS_UNIX_SOCKETS:
-        print("crispy-daemon: unix sockets unavailable on this platform; "
-              "use --listen host:port", file=sys.stderr)
+        log.error("unix sockets unavailable on this platform; "
+                  "use --listen host:port")
         return 2
 
     daemon = CrispyDaemon(socket_path, root=args.root, listen=args.listen,
@@ -698,18 +765,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     try:
         daemon.start(background=True)   # bind before announcing
     except (StateBackendError, OSError) as e:   # e.g. live daemon / EADDRINUSE
-        print(f"crispy-daemon: {e}", file=sys.stderr)
+        log.error("start failed", error=str(e))
         return 1
-    where = " ".join(filter(None, (
-        f"unix:{socket_path}" if socket_path else None,
-        f"tcp:{daemon.tcp_address}" if daemon.tcp_address else None)))
-    print(f"crispy-daemon: serving {daemon.backend.kind} state on {where}"
-          + (" (auth required)" if auth_token else ""), flush=True)
+    log.info("serving", backend=daemon.backend.kind,
+             unix=socket_path, tcp=daemon.tcp_address,
+             auth=bool(auth_token))
     if args.port_file and daemon.tcp_address:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:
             f.write(daemon.tcp_address)
         os.replace(tmp, args.port_file)
+    publisher = None
+    if args.telemetry_interval:
+        publisher = TelemetryPublisher(
+            daemon.backend, "crispy-daemon", daemon.telemetry,
+            period_s=args.telemetry_interval).start()
     try:
         # the servers run on background threads (started above so the
         # announce/port-file happens after EVERY bind); park until stop()
@@ -720,7 +790,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     # a remote "shutdown" op triggers stop() on a daemon thread; finish
     # the cleanup (socket unlink) here so process exit never races it
     daemon.stop()
-    print("crispy-daemon: clean shutdown", flush=True)
+    if publisher is not None:
+        publisher.stop()                # final snapshot lands the totals
+    log.info("clean shutdown")
     return 0
 
 

@@ -1,0 +1,91 @@
+"""Telemetry plane: spans + metrics through the whole allocation stack.
+
+Crispy's premise is quantified self-knowledge — extrapolating a job's
+memory need from a ten-minute profiling envelope — and this package
+gives the SYSTEM the same property: every layer reports where its wall
+time goes and how hot its caches run, with zero dependencies beyond the
+stdlib and a hot-path cost low enough to leave on in production (a
+warm-start plan with telemetry enabled is pinned within 5% of a no-op'd
+registry by tests/test_telemetry.py).
+
+  metrics.py   `MetricsRegistry` of counters / gauges / fixed-bucket
+               histograms (p50/p95/p99). Lock-free fast path: each
+               thread writes its own shard; shards fold on `snapshot()`.
+               `MetricsRegistry(enabled=False)` hands out shared no-op
+               instruments — the off switch.
+  spans.py     `span(name, **attrs)` context manager -> nested,
+               thread-aware span trees via `contextvars`, recorded into
+               a bounded `TraceRing` when the root closes.
+  export.py    snapshots as JSON (`render_json`) or Prometheus text
+               (`render_prometheus`); fleet aggregation by publishing
+               periodic snapshots into the reserved `__telemetry__`
+               namespace of any `repro.state.StateBackend`
+               (`publish_snapshot` / `TelemetryPublisher` /
+               `fleet_snapshot` / `aggregate_fleet`).
+  logs.py      `StructuredLogger`: leveled one-line-JSON events on
+               stderr (the daemon's server-side logging).
+
+Where each span/metric hangs (the observability map):
+
+  AllocationPipeline   histograms `pipeline.stage.<stage>.seconds`;
+  (repro.pipeline)     counters `pipeline.warm_start.{hits,misses}`;
+                       spans `pipeline.warm_start` / `.acquire` / `.fit`
+                       / `.extrapolate` / `.select`. Warm-path economics
+                       (a registry hit answers in tens of us): cold
+                       stages (acquire/fit/classify) always span and
+                       observe; warm stages (warm_start/extrapolate/
+                       select) sample their histograms 1-in-8 and open
+                       spans only when nested inside a caller's span.
+                       Counters are exact, and exact per-request walls
+                       always land on `PipelinePlan.stage_walls` ->
+                       `PipelineTrace.stage_walls` (opt-in on the wire
+                       via `AllocationEndpoint.handle(include_trace=
+                       True)`).
+  PointSource          counters `acquisition.{fresh,lru_hits,
+  (repro.pipeline)     store_hits,denied}` + `acquisition.profile_
+                       seconds` — the LRU -> store -> fresh tier heat.
+  ProfilingBudget      counters `budget.{reserved_points,refunded_
+  (repro.profiling)    points,charged_seconds,denials}` — envelope
+                       accounting is auditable: charged vs refunded.
+  AllocationService    histograms `service.batch.size`, `service.queue_
+  (repro.allocator)    wait.seconds`, `service.request.seconds`;
+                       counters `service.*` (the legacy `stats`
+                       dataclass is now a compatibility VIEW over these
+                       counters — one thread-safe source of truth).
+                       `service.metrics()` returns the snapshot;
+                       `AllocationEndpoint.metrics()` is the wire form.
+  CrispyDaemon         histograms `daemon.op.<op>.seconds` per request
+  (repro.state)        op; counters `daemon.{frames,bytes_in,auth_
+                       failures,compactions}`. Served over BOTH
+                       transports as the `{"op": "metrics"}` wire op
+                       (`DaemonBackend.metrics()`), and optionally
+                       auto-published to the daemon's own backend with
+                       `--telemetry-interval S`.
+
+`benchmarks/load_tiers.py` drives the instrumented service across
+request-mix tiers and records p50/p99 latency + throughput (plus key
+counters) to `BENCH_load.json` — the perf trajectory across PRs.
+"""
+from repro.telemetry.export import (KEY_FIELDS, TELEMETRY_NS,
+                                    TelemetryPublisher, aggregate_fleet,
+                                    fleet_snapshot, publish_snapshot,
+                                    render_json, render_prometheus)
+from repro.telemetry.logs import StructuredLogger
+from repro.telemetry.metrics import (DEFAULT_BUCKETS, Counter, Gauge,
+                                     Histogram, MetricsRegistry,
+                                     NULL_COUNTER, NULL_GAUGE,
+                                     NULL_HISTOGRAM, default_registry,
+                                     quantile_from_buckets,
+                                     set_default_registry)
+from repro.telemetry.spans import (Span, TraceRing, current_span,
+                                   default_ring, span, span_if)
+
+__all__ = [
+    "Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram", "KEY_FIELDS",
+    "MetricsRegistry", "NULL_COUNTER", "NULL_GAUGE", "NULL_HISTOGRAM",
+    "Span", "StructuredLogger", "TELEMETRY_NS", "TelemetryPublisher",
+    "TraceRing", "aggregate_fleet", "current_span", "default_registry",
+    "default_ring", "fleet_snapshot", "publish_snapshot",
+    "quantile_from_buckets", "render_json", "render_prometheus",
+    "set_default_registry", "span", "span_if",
+]

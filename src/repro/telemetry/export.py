@@ -1,0 +1,193 @@
+"""Exporters: registry snapshots as JSON, Prometheus text, and fleet
+snapshots published through any `repro.state.StateBackend`.
+
+Local forms:
+
+  render_json(registry)        one JSON object (the raw `snapshot()`).
+  render_prometheus(registry)  Prometheus text exposition: counters as
+                               `<name>_total`, gauges verbatim,
+                               histograms as cumulative `_bucket{le=..}`
+                               series plus `_sum`/`_count` — scrapeable
+                               by anything that speaks the format.
+
+Fleet form — N service processes plus the daemon aggregate into one
+view. Each participant periodically appends its snapshot to a reserved
+`__telemetry__` log namespace on the shared backend (the same
+append-only shape as the profile store, so daemon compaction folds it);
+readers take latest-per-source and can merge sources into fleet totals:
+
+  publish_snapshot(backend, "svc-4711", registry)   # one push
+  TelemetryPublisher(backend, "svc-4711", registry,
+                     period_s=10.0).start()         # periodic pushes
+  fleet_snapshot(backend)       {source: {"ts": .., "metrics": snap}}
+  aggregate_fleet(fleet)        counters summed, histogram buckets
+                                merged, percentiles recomputed from the
+                                merged buckets
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Dict, Optional
+
+from repro.telemetry.metrics import (MetricsRegistry, quantile_from_buckets)
+
+TELEMETRY_NS = "__telemetry__"
+
+# identity fields the state-plane compactor folds the telemetry log on
+# (later snapshot per source wins; see repro.state.compaction.fold_log)
+KEY_FIELDS = ("source",)
+
+
+# -- local renderers ----------------------------------------------------------
+
+def render_json(registry: MetricsRegistry, indent: Optional[int] = None,
+                ) -> str:
+    return json.dumps(registry.snapshot(), indent=indent, sort_keys=True)
+
+
+def _prom_name(name: str) -> str:
+    out = []
+    for ch in name:
+        out.append(ch if ch.isalnum() or ch == "_" else "_")
+    s = "".join(out)
+    return s if not s[:1].isdigit() else "_" + s
+
+
+def render_prometheus(registry: MetricsRegistry,
+                      prefix: str = "crispy") -> str:
+    snap = registry.snapshot()
+    lines = []
+    for name, value in sorted(snap.get("counters", {}).items()):
+        m = f"{prefix}_{_prom_name(name)}_total"
+        lines.append(f"# TYPE {m} counter")
+        lines.append(f"{m} {value:g}")
+    for name, value in sorted(snap.get("gauges", {}).items()):
+        m = f"{prefix}_{_prom_name(name)}"
+        lines.append(f"# TYPE {m} gauge")
+        lines.append(f"{m} {value:g}")
+    for name, s in sorted(snap.get("histograms", {}).items()):
+        m = f"{prefix}_{_prom_name(name)}"
+        lines.append(f"# TYPE {m} histogram")
+        cum = 0
+        for bound, count in zip(s["bounds"], s["buckets"]):
+            cum += count
+            lines.append(f'{m}_bucket{{le="{bound:g}"}} {cum}')
+        lines.append(f'{m}_bucket{{le="+Inf"}} {s["count"]}')
+        lines.append(f"{m}_sum {s['sum']:g}")
+        lines.append(f"{m}_count {s['count']}")
+    return "\n".join(lines) + "\n"
+
+
+# -- fleet publishing ---------------------------------------------------------
+
+def publish_snapshot(backend, source: str, registry: MetricsRegistry,
+                     namespace: str = TELEMETRY_NS) -> Dict:
+    """Append one labelled snapshot to the shared telemetry log. Returns
+    the published row."""
+    row = {"source": source, "ts": time.time(),
+           "metrics": registry.snapshot()}
+    backend.append(namespace, row)
+    return row
+
+
+def fleet_snapshot(backend, namespace: str = TELEMETRY_NS
+                   ) -> Dict[str, Dict]:
+    """Latest snapshot per source across every process publishing to
+    this backend: {source: {"ts": epoch, "metrics": snapshot}}."""
+    rows, _cursor = backend.read(namespace, 0)
+    latest: Dict[str, Dict] = {}
+    for row in rows:                       # later rows win per source
+        src = row.get("source")
+        if src is not None:
+            latest[src] = {"ts": row.get("ts"),
+                           "metrics": row.get("metrics", {})}
+    return latest
+
+
+def aggregate_fleet(fleet: Dict[str, Dict]) -> Dict:
+    """Merge per-source snapshots into fleet totals: counters summed,
+    histogram buckets merged (bounds must agree — they do, every
+    instrument uses DEFAULT_BUCKETS unless deliberately overridden),
+    percentiles recomputed from the merged buckets."""
+    counters: Dict[str, float] = {}
+    gauges: Dict[str, float] = {}
+    hists: Dict[str, Dict] = {}
+    for entry in fleet.values():
+        snap = entry.get("metrics", {})
+        for name, v in snap.get("counters", {}).items():
+            counters[name] = counters.get(name, 0.0) + v
+        for name, v in snap.get("gauges", {}).items():
+            gauges[name] = gauges.get(name, 0.0) + v
+        for name, s in snap.get("histograms", {}).items():
+            agg = hists.get(name)
+            if agg is None:
+                hists[name] = {"count": s["count"], "sum": s["sum"],
+                               "min": s["min"], "max": s["max"],
+                               "buckets": list(s["buckets"]),
+                               "bounds": list(s["bounds"])}
+                continue
+            if agg["bounds"] != list(s["bounds"]):
+                continue                   # incompatible; keep the first
+            agg["count"] += s["count"]
+            agg["sum"] += s["sum"]
+            if s["count"]:
+                agg["min"] = (min(agg["min"], s["min"])
+                              if agg["count"] - s["count"] else s["min"])
+                agg["max"] = max(agg["max"], s["max"])
+            agg["buckets"] = [a + b for a, b in zip(agg["buckets"],
+                                                    s["buckets"])]
+    for s in hists.values():
+        for q, label in ((0.5, "p50"), (0.95, "p95"), (0.99, "p99")):
+            s[label] = quantile_from_buckets(s["bounds"], s["buckets"], q,
+                                             lo=s["min"], hi=s["max"])
+    return {"counters": counters, "gauges": gauges, "histograms": hists,
+            "sources": sorted(fleet)}
+
+
+class TelemetryPublisher:
+    """Background thread pushing periodic snapshots to a backend's
+    telemetry log. `stop()` publishes one final snapshot so short-lived
+    processes still land their totals. Publish failures are swallowed:
+    losing a telemetry push must never take a service down."""
+
+    def __init__(self, backend, source: str, registry: MetricsRegistry,
+                 period_s: float = 10.0, namespace: str = TELEMETRY_NS):
+        self.backend = backend
+        self.source = source
+        self.registry = registry
+        self.period_s = period_s
+        self.namespace = namespace
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.period_s):
+            self._publish()
+
+    def _publish(self) -> None:
+        try:
+            publish_snapshot(self.backend, self.source, self.registry,
+                             self.namespace)
+        except Exception:
+            pass
+
+    def start(self) -> "TelemetryPublisher":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self._publish()                     # final totals
+
+    def __enter__(self) -> "TelemetryPublisher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
