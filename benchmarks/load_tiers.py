@@ -23,10 +23,14 @@ Tiers (each drives REQUESTS requests at every thread count):
                 steady state a service actually sees.
 
 Per (tier, threads) the JSON records {p50_ms, p95_ms, p99_ms, mean_ms,
-throughput_rps, wall_s, requests, counters} where `counters` is the
-delta of the service's `repro.telemetry` counter snapshot over the tier
-— so e.g. warm_start's `pipeline.warm_start.hits` == its request count
-is asserted by CI, not eyeballed.
+throughput_rps, wall_s, requests, counters, spans_recorded, exemplars}
+where `counters` is the delta of the service's `repro.telemetry`
+counter snapshot over the tier — so e.g. warm_start's
+`pipeline.warm_start.hits` == its request count is asserted by CI, not
+eyeballed. `spans_recorded` is the process trace-ring delta (how many
+sampled span trees the tier produced) and `exemplars` counts the
+histogram exemplar slots populated by tier end — the tracing plane's
+own overhead ledger, tracked per PR like the latencies.
 
 Env knobs: LOAD_TIERS_REQUESTS (default 60), LOAD_TIERS_THREADS
 (comma-separated, default "1,8"), BENCH_LOAD_PATH (default
@@ -44,6 +48,7 @@ from repro.allocator import AllocationRequest, AllocationService
 from repro.core.catalog import aws_like_catalog
 from repro.core.simulator import (GiB, JobSpec, build_history,
                                   make_profile_fn, scout_like_jobs)
+from repro.telemetry import default_ring
 
 TAG_PALETTES = (("etl",), ("ml", "iterative"), ("adhoc",), ("etl", "ml"))
 
@@ -137,6 +142,7 @@ def _drive_tier(svc: AllocationService, mix: _TierMix, requests: int,
             lat.append(dt)
 
     before = svc.metrics()
+    spans_before = default_ring().recorded
     t0 = time.monotonic()
     if threads <= 1:
         for i in range(requests):
@@ -154,7 +160,10 @@ def _drive_tier(svc: AllocationService, mix: _TierMix, requests: int,
             "p50_ms": round(_pctl(lat, 0.50) * 1e3, 4),
             "p95_ms": round(_pctl(lat, 0.95) * 1e3, 4),
             "p99_ms": round(_pctl(lat, 0.99) * 1e3, 4),
-            "counters": _counter_delta(before, after)}
+            "counters": _counter_delta(before, after),
+            "spans_recorded": default_ring().recorded - spans_before,
+            "exemplars": sum(len(h.get("exemplars", ()))
+                             for h in after["histograms"].values())}
 
 
 def _build_service(catalog, history, corpus) -> AllocationService:

@@ -72,6 +72,7 @@ self-contained script; everything else is identical.
 """
 import os
 import tempfile
+import textwrap
 import time
 from concurrent.futures import ThreadPoolExecutor
 
@@ -87,6 +88,9 @@ from repro.models.model import Model
 from repro.profiling import ProfilingBudget
 from repro.serve.engine import AllocationEndpoint, Request, ServeEngine
 from repro.state import HAS_UNIX_SOCKETS, CrispyDaemon, DaemonBackend
+from repro.telemetry import publish_traces, stitch_fleet_traces
+from repro.telemetry.trace_tool import (collect_fleet, cross_process_trees,
+                                        render_trace)
 
 RUN = RunConfig(attn_impl="full", remat="nothing", compute_dtype="float32")
 
@@ -199,6 +203,21 @@ def demo_shared_state(n_jobs: int = 8):
         print(f"  daemon telemetry: {dm['counters']['daemon.frames']:.0f} "
               f"frames, {dm['counters']['daemon.bytes_in'] / 1024:.0f} KiB "
               f"in; busiest op '{busiest[0]}' x{busiest[1]}")
+        # distributed tracing: every handle() above ran inside an
+        # `endpoint.request` span whose trace id rode each daemon frame,
+        # so the daemon's `daemon.op.*` spans carry the caller's trace.
+        # Publish this process's forest next to the daemon's own ring
+        # and stitch — ONE tree per request, spanning both processes.
+        # Against a live fleet the CLI does the same:
+        #   python -m repro.telemetry.trace_tool --daemon /tmp/crispy.sock \
+        #       --slowest 5 --expect-cross-process
+        publish_traces(DaemonBackend(sock), "serve-demo")
+        trees = stitch_fleet_traces(collect_fleet(DaemonBackend(sock)))
+        crossed = cross_process_trees(trees)
+        print(f"  tracing: {len(trees)} stitched traces, {len(crossed)} "
+              f"cross-process; last one:")
+        if crossed:
+            print(textwrap.indent(render_trace(crossed[-1]), "  "))
 
 
 def demo(arch: str, n_requests: int = 12, slots: int = 4):

@@ -65,7 +65,8 @@ from repro.core.catalog import ClusterConfig
 from repro.core.history import ExecutionHistory
 from repro.core.profiler import ProfileResult
 from repro.core.selector import DEFAULT_OVERHEAD_GIB, Selection
-from repro.telemetry import MetricsRegistry
+from repro.telemetry import (MetricsRegistry, current_trace_context,
+                             span_if)
 
 GiB = 1024 ** 3
 
@@ -235,7 +236,10 @@ class AllocationService:
                  store=None,                # repro.profiling ProfileStore
                  executor=None,             # repro.profiling ProfilingExecutor
                  backend=None,              # repro.state StateBackend
-                 telemetry=None):           # repro.telemetry MetricsRegistry
+                 telemetry=None,            # repro.telemetry MetricsRegistry
+                 sampler=None):             # warm-path sampling policy:
+                                            # None|"adaptive"|"fixed"|int|obj
+                                            # (repro.telemetry.sampling)
         self.catalog = catalog
         self.history = history
         self.backend = backend
@@ -283,7 +287,7 @@ class AllocationService:
             store=store, executor=executor, cache=self._cache,
             defer_registry_save=True,
             refresh_store=False,    # _process_batch refreshes once per batch
-            telemetry=self.telemetry)
+            telemetry=self.telemetry, sampler=sampler)
 
         self._cache_cap = profile_cache_size
         # negative-outcome cache: (sig, ladder, tags, settings) ->
@@ -299,7 +303,11 @@ class AllocationService:
         self._plan_lock = threading.Lock()
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._pending: List[Tuple[AllocationRequest, Future, float]] = []
+        # pending tuples carry the submitter's trace context: contextvars
+        # do not cross threads, so the worker must be handed the token
+        # explicitly to open its spans inside the caller's trace
+        self._pending: List[Tuple[AllocationRequest, Future, float,
+                                  Optional[Dict]]] = []
         self._worker: Optional[threading.Thread] = None
         self._closed = False
 
@@ -348,10 +356,11 @@ class AllocationService:
     # -- public -------------------------------------------------------------
     def submit(self, req: AllocationRequest) -> "Future[AllocationResponse]":
         fut: Future = Future()
-        with self._cv:
+        ctx = current_trace_context()   # captured HERE, in the caller's
+        with self._cv:                  # thread; None when untraced
             if self._closed:
                 raise RuntimeError("AllocationService is closed")
-            self._pending.append((req, fut, time.monotonic()))
+            self._pending.append((req, fut, time.monotonic(), ctx))
             self._ensure_worker_locked()
             self._cv.notify()
         return fut
@@ -433,12 +442,13 @@ class AllocationService:
 
     def _process_batch(
             self,
-            batch: List[Tuple[AllocationRequest, Future, float]]) -> None:
+            batch: List[Tuple[AllocationRequest, Future, float,
+                              Optional[Dict]]]) -> None:
         self.stats.inc("batches")
         self.stats.inc("requests", len(batch))
         self._h_batch.observe(len(batch))
         now = time.monotonic()
-        for _req, _fut, t_sub in batch:
+        for _req, _fut, t_sub, _ctx in batch:
             self._h_queue.observe(now - t_sub)
         # pull sibling processes' work in once per batch: profile points /
         # anchors from the shared store, models from a shared registry
@@ -460,31 +470,43 @@ class AllocationService:
         # overrides an explicit sizes/anchor, a tag-steered
         # classification, or a per-request acquisition override
         groups: "OrderedDict[Tuple, " \
-                "List[Tuple[AllocationRequest, Future, float]]]" = \
+                "List[Tuple[AllocationRequest, Future, float, " \
+                "Optional[Dict]]]" = \
             OrderedDict()
-        for req, fut, t_sub in batch:
+        for req, fut, t_sub, ctx in batch:
             ladder = self.pipeline.ladder_for(self._preq(req))
             groups.setdefault(
                 (req.sig, ladder, req.tags_key, self._settings_key(req)),
-                []).append((req, fut, t_sub))
+                []).append((req, fut, t_sub, ctx))
 
         def handle_group(entry) -> None:
             (sig, ladder, _tags, _settings), items = entry
-            live = [(req, fut, ts) for req, fut, ts in items
+            live = [(req, fut, ts, ctx) for req, fut, ts, ctx in items
                     if not fut.cancelled()]
             if not live:                    # whole group cancelled: don't
                 return                      # profile for nobody
             t0 = time.monotonic()
+            # the shared planning work joins the FIRST traced requester's
+            # trace (coalesced siblings get their own service.respond
+            # spans below); untraced groups open no span at all, exactly
+            # the pre-tracing behavior
+            ctx0 = next((ctx for _r, _f, _t, ctx in live
+                         if ctx is not None), None)
             try:
-                plan = self._plan(sig, ladder, live[0][0])
+                with span_if(ctx0 is not None, "service.plan",
+                             parent=ctx0, signature=sig,
+                             coalesced=len(live)):
+                    plan = self._plan(sig, ladder, live[0][0])
             except Exception as e:          # a failing profile_at fails its
-                for _, fut, _ts in live:    # group, never the whole batch
+                for _, fut, _ts, _ctx in live:  # group, never the batch
                     _resolve(fut, exc=e)
                 return
             wall = time.monotonic() - t0
-            for req, fut, ts in live:
+            for req, fut, ts, ctx in live:
                 try:
-                    resp = self._respond(plan, req, wall)
+                    with span_if(ctx is not None, "service.respond",
+                                 parent=ctx, job=req.job):
+                        resp = self._respond(plan, req, wall)
                 except Exception as e:
                     _resolve(fut, exc=e)
                     continue

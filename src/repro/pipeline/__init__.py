@@ -75,7 +75,7 @@ repro.state backend), `budget=` (ProfilingBudget, shared-envelope aware),
 
 Telemetry (repro.telemetry; `telemetry=` overrides the process default):
 
-  stage 1      hist  pipeline.stage.warm_start.seconds (sampled 1-in-8)
+  stage 1      hist  pipeline.stage.warm_start.seconds (sampled 1-in-8*)
                ctrs  pipeline.warm_start.{hits,misses}        (exact)
   stage 2      hist  pipeline.stage.acquire.seconds           (always)
                ctrs  acquisition.{fresh,lru_hits,store_hits,denied}
@@ -85,7 +85,12 @@ Telemetry (repro.telemetry; `telemetry=` overrides the process default):
   stage 3      hist  pipeline.stage.fit.seconds               (always)
   stage 4      hist  pipeline.stage.classify.seconds          (always)
   stages 5-6   hist  pipeline.stage.{extrapolate,select}.seconds
-                     (sampled 1-in-8)
+                     (sampled 1-in-8*)
+
+* the resting rate. `sampler=` picks the warm-path sampling policy
+(repro.telemetry.sampling): None/"fixed"/int keep a constant mask,
+"adaptive" raises the rate toward 1-in-1 while warm-stage windowed p99
+drifts past its gate and decays it back after recovery.
 
 Spans (`pipeline.<stage>`) open on the cold path always, on the warm
 path only when nested inside a caller's span; exact per-request walls

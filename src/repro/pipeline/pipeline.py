@@ -30,7 +30,8 @@ from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.allocator.model_zoo import fit_zoo
-from repro.telemetry import current_span, default_registry, span_if
+from repro.telemetry import (current_span, default_registry,
+                             resolve_sampler, span_if)
 from repro.core.catalog import ClusterConfig
 from repro.core.history import ExecutionHistory
 from repro.core.profiler import ProfileResult
@@ -155,7 +156,8 @@ class AllocationPipeline:
                  cache=None,                # LRU adapter (get/put), optional
                  defer_registry_save: bool = False,
                  refresh_store: bool = True,
-                 telemetry=None):           # repro.telemetry MetricsRegistry
+                 telemetry=None,            # repro.telemetry MetricsRegistry
+                 sampler=None):             # None|"adaptive"|"fixed"|int|obj
         # refresh_store=False is for callers that already refresh the
         # shared store on their own cadence (the AllocationService does it
         # once per batch); everyone else must see sibling points before
@@ -195,7 +197,13 @@ class AllocationPipeline:
         # sampled 1-in-(mask+1); warm-path spans exist only when nested
         # inside an active caller span. Counters stay exact. The cold
         # path (acquire/fit) always records — profiling dwarfs it.
-        self._sample_mask = 7
+        # The mask comes from a sampler (repro.telemetry.sampling):
+        # FixedSampler(7) by default, or AdaptiveSampler — which raises
+        # the rate toward 1-in-1 while warm-stage windowed p99 drifts
+        # past its gate — via sampler="adaptive". tick() is called only
+        # on sampled iterations and is interval-gated inside.
+        self.sampler = resolve_sampler(sampler, self.telemetry)
+        self._sample_mask = self.sampler.mask
         self._sample_n = 0      # benign races: a lost bump skews sampling
 
     # -- stage 2a: ladder resolution ----------------------------------------
@@ -248,6 +256,7 @@ class AllocationPipeline:
         self._sample_n = n = (self._sample_n + 1) & self._sample_mask
         if not n:
             self._stage_hist["warm_start"].observe(wall)
+            self._sample_mask = self.sampler.tick()
         return plan
 
     # -- stages 1-4: per-signature plan -------------------------------------
@@ -431,6 +440,7 @@ class AllocationPipeline:
         if not n:
             self._stage_hist["extrapolate"].observe(t_extra - t0)
             self._stage_hist["select"].observe(t_sel - t_extra)
+            self._sample_mask = self.sampler.tick()
         trace = PipelineTrace(plan, req.job, req.full_size, req_gib, sel,
                               wall_s)
         trace.stage_walls = dict(plan.stage_walls)

@@ -31,6 +31,7 @@ import numpy as np
 from repro.allocator.service import (AllocationRequest, AllocationResponse,
                                      AllocationService)
 from repro.models.model import Model
+from repro.telemetry import span_if
 
 
 @dataclass
@@ -160,7 +161,15 @@ class AllocationEndpoint:
     `include_trace=True` for per-stage walls + acquisition-tier counts);
     `stats` reports service counters plus adaptive-profiling/budget state
     for monitoring dashboards; `metrics` is the full telemetry snapshot
-    (histogram percentiles included)."""
+    (histogram percentiles included).
+
+    Tracing: `handle` runs inside an `endpoint.request` span (when the
+    service's telemetry is enabled, or always when the caller passes its
+    own `trace=` propagation token to join an upstream trace), so the
+    worker-side `service.*` spans, the pipeline stages, and any daemon
+    round-trips all land under ONE trace id — returned on the wire as
+    `trace_id` (None when untraced) for correlation with
+    `stitch_fleet_traces` output and histogram exemplars."""
 
     def __init__(self, service: AllocationService):
         self.service = service
@@ -179,22 +188,32 @@ class AllocationEndpoint:
             placement=placement, tags=tags))
 
     def handle(self, timeout: Optional[float] = None,
-               include_trace: bool = False, **payload) -> Dict:
-        resp = self.submit(**payload).result(timeout)
-        wire = self.to_wire(resp)
-        # which shared-state backend served this answer ("memory" /
-        # "file" / "daemon", None for a process-local service), and for a
-        # daemon, over which transport ("unix" | "tcp")
-        wire["backend"] = self.service.backend_kind
-        wire["backend_transport"] = self.service.backend_transport
-        if include_trace:
-            # opt-in ONLY: the default wire answer stays byte-identical
-            lru_hits = max(0, resp.cache_hits - resp.store_hits)
-            wire["trace"] = {
-                "stage_walls": dict(resp.stage_walls or {}),
-                "acquisition": {"fresh": resp.profiled,
-                                "lru_hits": lru_hits,
-                                "store_hits": resp.store_hits}}
+               include_trace: bool = False,
+               trace: Optional[Dict] = None, **payload) -> Dict:
+        # the span must wrap submit(): the service captures the caller's
+        # trace context at submit time to hand it across the worker-
+        # thread boundary. `trace=` is an upstream propagation token
+        # ({"trace_id", "span_id"}) for callers that are themselves part
+        # of a larger trace.
+        tel = self.service.telemetry
+        with span_if(tel.enabled or trace is not None, "endpoint.request",
+                     parent=trace, job=payload.get("job")) as sp:
+            resp = self.submit(**payload).result(timeout)
+            wire = self.to_wire(resp)
+            # which shared-state backend served this answer ("memory" /
+            # "file" / "daemon", None for a process-local service), and
+            # for a daemon, over which transport ("unix" | "tcp")
+            wire["backend"] = self.service.backend_kind
+            wire["backend_transport"] = self.service.backend_transport
+            wire["trace_id"] = sp.trace_id if sp is not None else None
+            if include_trace:
+                # opt-in ONLY: the rest of the wire answer stays stable
+                lru_hits = max(0, resp.cache_hits - resp.store_hits)
+                wire["trace"] = {
+                    "stage_walls": dict(resp.stage_walls or {}),
+                    "acquisition": {"fresh": resp.profiled,
+                                    "lru_hits": lru_hits,
+                                    "store_hits": resp.store_hits}}
         return wire
 
     def metrics(self) -> Dict:

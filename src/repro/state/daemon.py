@@ -50,12 +50,27 @@ Wire protocol (one JSON object per line, request -> response):
                                                        "evicted": [..]}
   {"op": "metrics"}                                -> {"ok": true,
                                                        "metrics": {..}}
+  {"op": "traces", "clear": false}                 -> {"ok": true,
+                                                       "source": ..,
+                                                       "traces": [..]}
   {"op": "shutdown"}                               -> {"ok": true}
 
+Additionally, ANY request frame may carry a `trace` field — the
+caller's {"trace_id", "span_id"} propagation token (see
+repro.state.transport and repro.telemetry). The daemon then times the
+op inside a `daemon.op.<op>` span ADOPTED into the caller's trace
+(recorded as a local root in the daemon's TraceRing, parent_id = the
+caller's span), so `stitch_fleet_traces` can graft daemon work under
+the requesting service's tree. Frames without the field — everything an
+old client sends — take the pre-tracing code path and get
+byte-identical responses, on both transports.
+
 `metrics` returns the daemon's own telemetry snapshot (repro.telemetry):
-per-op latency histograms `daemon.op.<op>.seconds` plus
-frames/bytes_in/auth_failures/compactions counters — identical over both
-transports. Server-side lifecycle events (serving announcement, errors,
+per-op latency histograms `daemon.op.<op>.seconds` (with exemplars
+referencing traced callers) plus frames/bytes_in/auth_failures/
+compactions counters — identical over both transports. `traces` returns
+(and with `"clear": true` drains) the daemon's finished trace roots as
+span dicts. Server-side lifecycle events (serving announcement, errors,
 clean shutdown) are structured one-line JSON on stderr
 (`StructuredLogger`); the CLI's stdout answers ("pong", "no daemon",
 "shutdown requested") are a scripting contract and never change shape.
@@ -109,11 +124,13 @@ from repro.state.backend import (InMemoryBackend, StateBackend,
                                  StateBackendError, StateBackendUnavailable)
 from repro.state.compaction import prune_registry_doc
 from repro.state.file_backend import FileBackend
-from repro.state.transport import (MAX_FRAME_BYTES, auth_frame, connect,
+from repro.state.transport import (MAX_FRAME_BYTES, TRACE_FIELD,
+                                   auth_frame, connect,
                                    default_auth_token, describe_address,
                                    parse_address, recv_frame, send_frame)
 from repro.telemetry import (MetricsRegistry, StructuredLogger,
-                             TelemetryPublisher)
+                             TelemetryPublisher, TraceRing,
+                             current_trace_context, span)
 from time import perf_counter
 
 HAS_UNIX_SOCKETS = hasattr(socket, "AF_UNIX")
@@ -191,6 +208,9 @@ class CrispyDaemon:
         # the plain-dict read is the lock-free fast path (a lost race just
         # calls the locking registry factory twice for the same name)
         self._op_hist: Dict[str, object] = {}
+        # finished daemon-side spans (roots adopted into callers' traces);
+        # served by the `traces` op and published by --telemetry-interval
+        self.trace_ring = TraceRing()
 
     def _op_hist_for(self, op) -> "object":
         if not isinstance(op, str):
@@ -204,6 +224,21 @@ class CrispyDaemon:
     # -- request dispatch ---------------------------------------------------
     def handle_request(self, req: Dict) -> Dict:
         op = req.get("op")
+        trace = req.pop(TRACE_FIELD, None)
+        if isinstance(trace, dict):
+            # traced caller: time the op INSIDE a span adopted into the
+            # caller's trace, so the histogram observe lands its exemplar
+            # with the caller's trace_id and the span (a local root with
+            # parent_id = the caller's span) is stitchable fleet-wide
+            op_name = op if isinstance(op, str) else "invalid"
+            with span(f"daemon.op.{op_name}", ring=self.trace_ring,
+                      parent=trace):
+                t0 = perf_counter()
+                try:
+                    return self._dispatch(op, req)
+                finally:
+                    self._op_hist_for(op).observe(perf_counter() - t0)
+        # untraced (legacy) frame: the exact pre-tracing path
         t0 = perf_counter()
         try:
             return self._dispatch(op, req)
@@ -219,6 +254,14 @@ class CrispyDaemon:
             # identical over both transports
             return {"ok": True, "kind": b.kind,
                     "metrics": self.telemetry.snapshot()}
+        if op == "traces":
+            # finished daemon-side span roots, ready for stitching; the
+            # in-flight request's own span closes after this snapshot
+            roots = [s.to_dict() for s in self.trace_ring.traces()]
+            if req.get("clear"):
+                self.trace_ring.clear()
+            return {"ok": True, "source": "crispy-daemon",
+                    "traces": roots}
         if op == "append":
             with self._write_lock:
                 b.append(req["ns"], req["record"])
@@ -565,11 +608,21 @@ class DaemonBackend(StateBackend):
                 except OSError:
                     pass
 
-    # ops safe to blindly resend: they mutate nothing server-side
-    _IDEMPOTENT_OPS = frozenset({"ping", "read", "load", "metrics"})
+    # ops safe to blindly resend: they mutate nothing server-side that a
+    # duplicate could corrupt (`traces` with clear= drains telemetry, so
+    # a resend loses at worst best-effort trace rows, never state)
+    _IDEMPOTENT_OPS = frozenset({"ping", "read", "load", "metrics",
+                                 "traces"})
 
     def _call(self, payload: Dict) -> Dict:
         op = payload.get("op")
+        ctx = current_trace_context()
+        if ctx is not None:
+            # inside an active span: stamp the propagation token so the
+            # daemon's work joins this trace (old daemons ignore unknown
+            # request fields, so this is safe against version skew)
+            payload = dict(payload)
+            payload[TRACE_FIELD] = ctx
         last: Optional[Exception] = None
         for attempt in range(2):        # second attempt = fresh connection
             sent = False
@@ -657,6 +710,12 @@ class DaemonBackend(StateBackend):
         same answer over unix and tcp transports."""
         return self._call({"op": "metrics"})["metrics"]
 
+    def traces(self, clear: bool = False) -> List[Dict]:
+        """The daemon's finished trace roots (span dicts, ready for
+        `stitch_fleet_traces`); `clear=True` drains the ring."""
+        return list(self._call({"op": "traces",
+                                "clear": bool(clear)}).get("traces", []))
+
     def ping(self) -> bool:
         try:
             return bool(self._call({"op": "ping"}).get("ok"))
@@ -712,8 +771,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     "S seconds after each registry flush")
     ap.add_argument("--telemetry-interval", type=float, default=None,
                     metavar="S", help="publish the daemon's own metrics "
-                    "snapshot into its backend's __telemetry__ namespace "
-                    "every S seconds (source 'crispy-daemon')")
+                    "snapshot (__telemetry__ namespace) and trace roots "
+                    "(__traces__) into its backend every S seconds "
+                    "(source 'crispy-daemon')")
     ap.add_argument("--ping", action="store_true",
                     help="health-check a running daemon and exit")
     ap.add_argument("--shutdown", action="store_true",
@@ -779,7 +839,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.telemetry_interval:
         publisher = TelemetryPublisher(
             daemon.backend, "crispy-daemon", daemon.telemetry,
-            period_s=args.telemetry_interval).start()
+            period_s=args.telemetry_interval,
+            ring=daemon.trace_ring).start()
     try:
         # the servers run on background threads (started above so the
         # announce/port-file happens after EVERY bind); park until stop()

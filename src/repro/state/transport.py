@@ -27,6 +27,16 @@ framing over TCP, so this module owns everything both transports share:
               {"op": "auth", "token": ...}. `default_auth_token` reads
               $CRISPY_DAEMON_TOKEN so daemon and clients agree without
               plumbing the secret through every constructor.
+
+  tracing     any request frame MAY carry a `trace` field (TRACE_FIELD)
+              holding the caller's {"trace_id", "span_id"} propagation
+              token (repro.telemetry.current_trace_context). The daemon
+              then opens its per-op span as a child of that remote
+              span, so cross-process traces stitch into one tree. The
+              field is strictly optional on BOTH transports: a frame
+              without it — i.e. every frame an old client sends — takes
+              the exact pre-tracing code path and gets byte-identical
+              responses.
 """
 from __future__ import annotations
 
@@ -36,6 +46,9 @@ import socket
 from typing import Dict, Optional, Tuple, Union
 
 AUTH_TOKEN_ENV = "CRISPY_DAEMON_TOKEN"
+
+# optional per-frame trace-propagation field (see module docstring)
+TRACE_FIELD = "trace"
 
 # parsed address forms: ("unix", path) | ("tcp", (host, port))
 Address = Tuple[str, Union[str, Tuple[str, int]]]

@@ -14,6 +14,10 @@ stdout is never touched — CLI contracts like the daemon's `--ping` ->
 Levels: debug < info < warn < error; records below `level` are dropped.
 Non-JSON-serializable field values are stringified rather than raised —
 a log line must never take the server down.
+
+Lines emitted inside an active trace span are stamped with `trace_id`
+and `span_id` automatically, so stderr joins the distributed traces for
+free (explicit `trace_id=`/`span_id=` fields win over the stamp).
 """
 from __future__ import annotations
 
@@ -21,6 +25,8 @@ import json
 import sys
 import time
 from typing import Optional, TextIO
+
+from repro.telemetry.spans import current_span
 
 _LEVELS = {"debug": 10, "info": 20, "warn": 30, "error": 40}
 
@@ -39,6 +45,10 @@ class StructuredLogger:
             return
         rec = {"ts": round(time.time(), 3), "level": level,
                "component": self.component, "event": event}
+        sp = current_span()
+        if sp is not None and sp.trace_id is not None:
+            rec["trace_id"] = sp.trace_id
+            rec["span_id"] = sp.span_id
         rec.update(fields)
         try:
             line = json.dumps(rec, default=str)

@@ -15,7 +15,12 @@ Instruments:
               counts + sum/count/min/max, with p50/p95/p99 estimated by
               linear interpolation inside the winning bucket. Default
               bucket bounds cover 1us..60s — the latency range of
-              everything from an LRU hit to a fresh profile run.
+              everything from an LRU hit to a fresh profile run. When an
+              observation happens inside an active trace span, the
+              bucket keeps the most recent (value, trace_id) pair as an
+              EXEMPLAR — a p99 outlier in a dashboard links straight to
+              the stitched distributed trace that produced it (see
+              repro.telemetry.spans / export.stitch_fleet_traces).
 
 `MetricsRegistry` names and caches instruments (`counter("a.b")`,
 `histogram("a.b.seconds")`); `snapshot()` folds every shard into one
@@ -29,8 +34,11 @@ from __future__ import annotations
 
 import math
 import threading
+import time
 from bisect import bisect_right
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.telemetry.spans import current_span
 
 # 1us .. 60s, roughly 4 buckets per decade: wide enough for an LRU hit
 # and a minutes-long profile run to land in *different* buckets
@@ -89,7 +97,7 @@ class Gauge:
 
 
 class _HistShard:
-    __slots__ = ("counts", "sum", "count", "min", "max")
+    __slots__ = ("counts", "sum", "count", "min", "max", "exemplars")
 
     def __init__(self, n_buckets: int):
         self.counts = [0] * n_buckets
@@ -97,6 +105,8 @@ class _HistShard:
         self.count = 0
         self.min = math.inf
         self.max = -math.inf
+        # bucket index -> (value, trace_id, epoch_ts); latest wins
+        self.exemplars: Dict[int, Tuple[float, str, float]] = {}
 
 
 class Histogram:
@@ -124,24 +134,30 @@ class Histogram:
     def observe(self, v: float) -> None:
         v = float(v)
         s = self._shard()
-        s.counts[bisect_right(self.bounds, v)] += 1
+        idx = bisect_right(self.bounds, v)
+        s.counts[idx] += 1
         s.sum += v
         s.count += 1
         if v < s.min:
             s.min = v
         if v > s.max:
             s.max = v
+        sp = current_span()          # one contextvar get; None off-trace
+        if sp is not None and sp.trace_id is not None:
+            s.exemplars[idx] = (v, sp.trace_id, time.time())
 
     def time(self):
         """Context manager observing the block's wall seconds."""
         return _Timer(self)
 
     # -- folding ------------------------------------------------------------
-    def _fold(self) -> Tuple[List[int], float, int, float, float]:
+    def _fold(self) -> Tuple[List[int], float, int, float, float,
+                             Dict[int, Tuple[float, str, float]]]:
         counts = [0] * self._n
         total = 0.0
         n = 0
         lo, hi = math.inf, -math.inf
+        exemplars: Dict[int, Tuple[float, str, float]] = {}
         with self._lock:
             shards = list(self._shards)
         for s in shards:
@@ -151,20 +167,30 @@ class Histogram:
             n += s.count
             lo = min(lo, s.min)
             hi = max(hi, s.max)
-        return counts, total, n, lo, hi
+            for i, ex in s.exemplars.items():
+                cur = exemplars.get(i)
+                if cur is None or ex[2] >= cur[2]:     # latest ts wins
+                    exemplars[i] = ex
+        return counts, total, n, lo, hi, exemplars
 
     def summary(self) -> Dict:
-        counts, total, n, lo, hi = self._fold()
+        counts, total, n, lo, hi, exemplars = self._fold()
         out = {"count": n, "sum": total,
                "min": lo if n else 0.0, "max": hi if n else 0.0,
                "buckets": counts, "bounds": list(self.bounds)}
         for q, label in ((0.5, "p50"), (0.95, "p95"), (0.99, "p99")):
             out[label] = quantile_from_buckets(self.bounds, counts, q,
                                                lo=lo, hi=hi)
+        out["exemplars"] = [
+            {"bucket": i,
+             "le": (f"{self.bounds[i]:g}" if i < len(self.bounds)
+                    else "+Inf"),
+             "value": ex[0], "trace_id": ex[1], "ts": ex[2]}
+            for i, ex in sorted(exemplars.items())]
         return out
 
     def percentile(self, q: float) -> float:
-        counts, _total, n, lo, hi = self._fold()
+        counts, _total, n, lo, hi, _ex = self._fold()
         if not n:
             return 0.0
         return quantile_from_buckets(self.bounds, counts, q, lo=lo, hi=hi)
@@ -254,7 +280,7 @@ class _NullHistogram:
     def summary(self) -> Dict:
         return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
                 "buckets": [], "bounds": [], "p50": 0.0, "p95": 0.0,
-                "p99": 0.0}
+                "p99": 0.0, "exemplars": []}
 
     def percentile(self, q: float) -> float:
         return 0.0

@@ -1,0 +1,225 @@
+"""trace_tool: inspect fleet-wide distributed traces from a terminal.
+
+    python -m repro.telemetry.trace_tool --daemon /tmp/crispy.sock
+    python -m repro.telemetry.trace_tool --daemon host:7421 --slowest 10
+    python -m repro.telemetry.trace_tool --daemon ... --trace <id> --json
+
+Connects to a crispy-daemon (unix path or host:port, token auth via
+--auth-token / $CRISPY_DAEMON_TOKEN), pulls every trace source it can
+reach, stitches them into cross-process trees, and prints:
+
+  * the stitched trees (indented; per-span wall ms, attrs, [source]),
+    newest last — or one tree with `--trace <id>`;
+  * a slowest-span table (`--slowest N`) across every stitched tree,
+    the "where did the time go" answer sorted by self-time;
+  * with `--fleet`, the aggregated fleet metrics snapshot and any
+    histogram exemplars, each linking a bucket to a trace id that can
+    be fed straight back into `--trace`.
+
+Trace sources, all merged under their source labels:
+
+  1. the daemon's OWN ring, over the `traces` wire op (`daemon.op.*`
+     spans adopted from traced callers);
+  2. every forest published into the backend's `__traces__` namespace
+     by service-side `TelemetryPublisher(ring=...)` / `publish_traces`.
+
+`--expect-cross-process` exits non-zero unless at least one stitched
+tree contains spans from two or more sources — the CI assertion that
+trace propagation over the live wire actually works.
+
+Everything here is read-only against the daemon; `main(argv)` returns
+an exit code and prints to stdout, so tests drive it in-process.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+from repro.telemetry.export import (aggregate_fleet, fleet_snapshot,
+                                    fleet_traces, stitch_fleet_traces)
+
+DAEMON_SOURCE = "crispy-daemon"
+
+
+def collect_fleet(backend) -> Dict[str, List[Dict]]:
+    """Every reachable trace forest: published `__traces__` rows plus
+    the daemon's own ring (daemon wins its label on conflict — its ring
+    is fresher than anything it published)."""
+    fleet = dict(fleet_traces(backend))
+    traces_op = getattr(backend, "traces", None)
+    if callable(traces_op):
+        try:
+            fleet[DAEMON_SOURCE] = traces_op()
+        except Exception:
+            pass                    # daemon without the op: published only
+    return fleet
+
+
+def collect_fleet_metrics(backend) -> Dict[str, Dict]:
+    """Every reachable metrics snapshot: published `__telemetry__` rows
+    plus the daemon's own live registry over the `metrics` wire op."""
+    fleet = dict(fleet_snapshot(backend))
+    metrics_op = getattr(backend, "metrics", None)
+    if callable(metrics_op):
+        try:
+            fleet[DAEMON_SOURCE] = {"ts": None, "metrics": metrics_op()}
+        except Exception:
+            pass
+    return fleet
+
+
+def _walk(span_dict: Dict, depth: int = 0):
+    yield depth, span_dict
+    for child in span_dict.get("children", ()):
+        yield from _walk(child, depth + 1)
+
+
+def self_seconds(span_dict: Dict) -> float:
+    """Wall seconds not accounted for by children — the span's own
+    time. Children may overlap (concurrent ladder points), so this is
+    clamped at zero rather than pretending overlap is negative work."""
+    child_wall = sum(c.get("wall_s", 0.0)
+                     for c in span_dict.get("children", ()))
+    return max(0.0, span_dict.get("wall_s", 0.0) - child_wall)
+
+
+def render_trace(root: Dict) -> str:
+    """One stitched tree as indented text."""
+    lines = [f"trace {root.get('trace_id')}"]
+    for depth, s in _walk(root):
+        attrs = s.get("attrs") or {}
+        attr_txt = ("  " + " ".join(f"{k}={v}" for k, v in attrs.items())
+                    if attrs else "")
+        lines.append(
+            f"  {'  ' * depth}{s.get('name')}  "
+            f"{s.get('wall_s', 0.0) * 1e3:9.3f} ms  "
+            f"[{s.get('source', '?')}]{attr_txt}")
+    return "\n".join(lines)
+
+
+def slowest_spans(trees: List[Dict], n: int) -> List[Dict]:
+    rows = []
+    for root in trees:
+        for _depth, s in _walk(root):
+            rows.append({"name": s.get("name"),
+                         "source": s.get("source", "?"),
+                         "trace_id": s.get("trace_id"),
+                         "wall_s": s.get("wall_s", 0.0),
+                         "self_s": self_seconds(s)})
+    rows.sort(key=lambda r: r["self_s"], reverse=True)
+    return rows[:n]
+
+
+def render_slowest(rows: List[Dict]) -> str:
+    lines = ["slowest spans (by self time):",
+             f"  {'self ms':>10}  {'total ms':>10}  "
+             f"{'span':<28} {'source':<16} trace"]
+    for r in rows:
+        lines.append(f"  {r['self_s'] * 1e3:10.3f}  "
+                     f"{r['wall_s'] * 1e3:10.3f}  "
+                     f"{r['name']:<28} {r['source']:<16} {r['trace_id']}")
+    return "\n".join(lines)
+
+
+def cross_process_trees(trees: List[Dict]) -> List[Dict]:
+    out = []
+    for root in trees:
+        sources = {s.get("source") for _d, s in _walk(root)}
+        if len(sources) > 1:
+            out.append(root)
+    return out
+
+
+def _exemplar_rows(metrics: Dict) -> List[Dict]:
+    rows = []
+    for name, h in sorted(metrics.get("histograms", {}).items()):
+        for ex in h.get("exemplars", []):
+            rows.append({"histogram": name, "le": ex.get("le"),
+                         "value": ex.get("value"),
+                         "trace_id": ex.get("trace_id")})
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.telemetry.trace_tool",
+        description="Pull + stitch distributed traces from a "
+                    "crispy-daemon fleet (see module docstring).")
+    ap.add_argument("--daemon", required=True, metavar="ADDR",
+                    help="daemon address: unix socket path or host:port")
+    ap.add_argument("--auth-token", default=None,
+                    help="shared daemon token "
+                         "(default: $CRISPY_DAEMON_TOKEN)")
+    ap.add_argument("--timeout", type=float, default=10.0, metavar="S",
+                    help="socket timeout in seconds")
+    ap.add_argument("--trace", default=None, metavar="ID",
+                    help="print only the stitched tree with this trace id")
+    ap.add_argument("--slowest", type=int, default=0, metavar="N",
+                    help="also print the N slowest spans by self time")
+    ap.add_argument("--fleet", action="store_true",
+                    help="also print aggregated fleet metrics + exemplars")
+    ap.add_argument("--json", action="store_true",
+                    help="machine form: one JSON object instead of text")
+    ap.add_argument("--expect-cross-process", action="store_true",
+                    help="exit 1 unless some stitched tree spans >= 2 "
+                         "sources (CI assertion)")
+    args = ap.parse_args(argv)
+
+    # deferred import: repro.state imports repro.telemetry
+    from repro.state.daemon import DaemonBackend
+
+    backend = DaemonBackend(args.daemon, timeout_s=args.timeout,
+                            auth_token=args.auth_token)
+    try:
+        fleet = collect_fleet(backend)
+        trees = stitch_fleet_traces(fleet)
+        if args.trace:
+            trees = [t for t in trees if t.get("trace_id") == args.trace]
+        fleet_metrics = None
+        if args.fleet:
+            fleet_metrics = aggregate_fleet(collect_fleet_metrics(backend))
+    finally:
+        backend.close()
+
+    crossed = cross_process_trees(trees)
+
+    if args.json:
+        out = {"sources": sorted(fleet), "traces": trees,
+               "cross_process_traces": len(crossed)}
+        if args.slowest:
+            out["slowest"] = slowest_spans(trees, args.slowest)
+        if fleet_metrics is not None:
+            out["fleet"] = fleet_metrics
+            out["exemplars"] = _exemplar_rows(fleet_metrics)
+        print(json.dumps(out, indent=2, sort_keys=True))
+    else:
+        print(f"sources: {', '.join(sorted(fleet)) or '(none)'}")
+        print(f"stitched traces: {len(trees)} "
+              f"({len(crossed)} cross-process)")
+        for root in trees:
+            print()
+            print(render_trace(root))
+        if args.slowest:
+            print()
+            print(render_slowest(slowest_spans(trees, args.slowest)))
+        if fleet_metrics is not None:
+            print()
+            rows = _exemplar_rows(fleet_metrics)
+            print(f"fleet sources: "
+                  f"{', '.join(fleet_metrics.get('sources', []))}")
+            print(f"exemplars: {len(rows)}")
+            for r in rows:
+                print(f"  {r['histogram']} le={r['le']} "
+                      f"value={r['value']:g} trace={r['trace_id']}")
+
+    if args.expect_cross_process and not crossed:
+        print("FAIL: no stitched trace spans more than one source",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

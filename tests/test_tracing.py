@@ -1,0 +1,481 @@
+"""Distributed tracing (repro.telemetry + repro.state wire protocol):
+trace identity and the one-anchor clock discipline, remote-parent
+adoption, histogram exemplars through both Prometheus styles, logger
+trace stamping, deterministic adaptive sampling, pipeline sampler
+wiring, stitching semantics (orphans, cycles), legacy-frame byte
+identity, and the acceptance path — ONE stitched cross-process trace
+from a service talking to a live crispy-daemon over unix AND tcp, with
+exemplars referencing that trace id."""
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+import pytest
+
+from repro.allocator import AllocationService
+from repro.core.catalog import aws_like_catalog
+from repro.core.simulator import (GiB, build_history, make_profile_fn,
+                                  scout_like_jobs)
+from repro.pipeline import AllocationPipeline, PipelineRequest
+from repro.serve.engine import AllocationEndpoint
+from repro.state import CrispyDaemon, DaemonBackend
+from repro.telemetry import (AdaptiveSampler, FixedSampler, MetricsRegistry,
+                             StructuredLogger, TraceRing,
+                             current_trace_context, default_ring,
+                             publish_traces, render_prometheus,
+                             resolve_sampler, span, stitch_fleet_traces)
+from repro.telemetry import trace_tool
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+needs_unix_sockets = pytest.mark.skipif(
+    not hasattr(socket, "AF_UNIX"),
+    reason="unix-domain sockets unavailable")
+
+
+def _daemon_socket() -> str:
+    # AF_UNIX paths are length-limited (~108 bytes); use a short tempdir
+    d = tempfile.mkdtemp(prefix="crispytr-")
+    return os.path.join(d, "d.sock")
+
+
+# -- identity + clock anchoring -----------------------------------------------
+
+
+def test_trace_identity_and_single_clock_anchor(monkeypatch):
+    """Every span carries 16-hex ids; descendants inherit the trace id
+    AND its one (epoch, perf_counter) anchor, so a wall-clock step mid-
+    trace cannot skew child started_at."""
+    ring = TraceRing()
+    real_time = time.time
+    with span("root", ring=ring) as root:
+        assert len(root.trace_id) == 16 and len(root.span_id) == 16
+        # an NTP step lands mid-trace: time.time jumps a full day
+        monkeypatch.setattr(time, "time", lambda: real_time() + 86400.0)
+        with span("child", ring=ring) as child:
+            assert child.trace_id == root.trace_id
+            assert child.parent_id == root.span_id
+            assert child.span_id != root.span_id
+            assert child.anchor is root.anchor
+            # derived from the monotonic offset, not the stepped clock
+            assert 0.0 <= child.started_at - root.started_at < 60.0
+    monkeypatch.undo()
+    [rec] = ring.traces()
+    d = rec.to_dict()
+    assert d["trace_id"] == root.trace_id
+    assert d["children"][0]["parent_id"] == root.span_id
+
+
+def test_remote_parent_adoption_and_propagation_token():
+    assert current_trace_context() is None
+    ring = TraceRing()
+    with span("caller", ring=ring) as caller:
+        token = current_trace_context()
+        assert token == {"trace_id": caller.trace_id,
+                         "span_id": caller.span_id}
+    # another "process" adopts the token: same trace, remote parent,
+    # its OWN clock anchor (remote anchors live on a different host)
+    with span("remote.op", ring=ring, parent=token) as remote:
+        assert remote.trace_id == caller.trace_id
+        assert remote.parent_id == caller.span_id
+        assert remote.anchor is not caller.anchor
+    # ...but a live LOCAL parent always wins over a stale remote token
+    with span("outer", ring=ring) as outer:
+        with span("inner", ring=ring, parent=token) as inner:
+            assert inner.trace_id == outer.trace_id
+            assert inner.parent_id == outer.span_id
+
+
+# -- exemplars ----------------------------------------------------------------
+
+
+def test_exemplars_capture_on_trace_only_and_latest_wins():
+    reg = MetricsRegistry()
+    h = reg.histogram("req.seconds")
+    h.observe(0.002)                       # off-trace: no exemplar
+    assert h.summary()["exemplars"] == []
+    with span("t1") as s1:
+        h.observe(0.002)
+    with span("t2") as s2:
+        h.observe(0.0021)                  # same bucket: latest wins
+        h.observe(0.2)                     # a different bucket
+    exs = h.summary()["exemplars"]
+    by_le = {ex["le"]: ex for ex in exs}
+    assert len(exs) == 2
+    same_bucket = [ex for ex in exs if ex["value"] in (0.002, 0.0021)][0]
+    assert same_bucket["trace_id"] == s2.trace_id != s1.trace_id
+    assert by_le != {} and all(ex["trace_id"] == s2.trace_id for ex in exs)
+
+
+def test_render_prometheus_styles_and_exemplar_suffix():
+    reg = MetricsRegistry()
+    h = reg.histogram("req.seconds")
+    with span("t") as s:
+        h.observe(0.002)
+    h.observe(10.0)                        # off-trace +Inf bucket
+    prom = render_prometheus(reg)
+    assert f'# {{trace_id="{s.trace_id}"}} 0.002' in prom
+    assert 'crispy_req_seconds_bucket{le="+Inf"} 2' in prom
+    assert "crispy_req_seconds_sum" in prom
+    flat = render_prometheus(reg, style="flat")
+    assert "crispy_req_seconds_bucket_0" in flat
+    assert "le=" not in flat and "# {" not in flat
+    with pytest.raises(ValueError):
+        render_prometheus(reg, style="openmetrics2")
+
+
+def test_structured_logger_stamps_active_trace():
+    import io
+    buf = io.StringIO()
+    log = StructuredLogger("unit", stream=buf)
+    log.info("outside")
+    with span("op") as s:
+        log.info("inside")
+        log.info("explicit", trace_id="override")
+    recs = [json.loads(ln) for ln in buf.getvalue().splitlines()]
+    assert "trace_id" not in recs[0]
+    assert recs[1]["trace_id"] == s.trace_id
+    assert recs[1]["span_id"] == s.span_id
+    assert recs[2]["trace_id"] == "override"    # explicit field wins
+
+
+# -- adaptive sampling --------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.now = 1000.0
+
+    def __call__(self):
+        return self.now
+
+
+def test_adaptive_sampler_escalates_on_p99_drift_and_decays_back():
+    reg = MetricsRegistry()
+    clock = _FakeClock()
+    s = AdaptiveSampler(reg, gate_p99_s=0.005, interval_s=2.0,
+                        clock=clock)
+    h = reg.histogram("pipeline.stage.warm_start.seconds")
+    assert s.tick(force=True) == 7         # empty window: hold
+
+    # p99 drifts past the gate: one escalation step per tick
+    masks = []
+    for _ in range(4):
+        for _i in range(50):
+            h.observe(0.05)
+        clock.now += 3.0
+        masks.append(s.tick())
+    assert masks == [3, 1, 0, 0]           # 1-in-8 -> ... -> 1-in-1, floor
+    assert reg.snapshot()["counters"]["sampling.escalations"] == 3
+    assert reg.snapshot()["gauges"]["sampling.mask"] == 0
+
+    # latency recovers below gate/2: decay one step per tick, back to 7
+    masks = []
+    for _ in range(4):
+        for _i in range(50):
+            h.observe(0.0001)
+        clock.now += 3.0
+        masks.append(s.tick())
+    assert masks == [1, 3, 7, 7]
+    assert reg.snapshot()["counters"]["sampling.decays"] == 3
+
+    # interval gating: a tick inside the window is free and changes nothing
+    for _i in range(50):
+        h.observe(0.05)
+    clock.now += 0.5
+    assert s.tick() == 7
+
+
+def test_adaptive_sampler_hysteresis_holds_rate_between_thresholds():
+    reg = MetricsRegistry()
+    clock = _FakeClock()
+    s = AdaptiveSampler(reg, gate_p99_s=0.005, interval_s=1.0, clock=clock)
+    h = reg.histogram("pipeline.stage.select.seconds")
+    for _i in range(50):
+        h.observe(0.05)
+    assert s.tick(force=True) == 3         # escalated
+    # p99 now sits BETWEEN recover (gate/2) and gate: no flapping
+    for _ in range(3):
+        for _i in range(50):
+            h.observe(0.004)
+        clock.now += 2.0
+        assert s.tick() == 3
+
+
+def test_sampler_specs_and_validation():
+    assert resolve_sampler(None).mask == 7
+    assert resolve_sampler("fixed").mask == 7
+    assert resolve_sampler(0).mask == 0
+    assert isinstance(resolve_sampler("adaptive", MetricsRegistry()),
+                      AdaptiveSampler)
+    fixed = FixedSampler(3)
+    assert resolve_sampler(fixed) is fixed
+    with pytest.raises(ValueError):
+        FixedSampler(5)                    # not 2**k - 1
+    with pytest.raises(ValueError):
+        resolve_sampler("always")
+    # disabled registry: tick() must not touch null instruments
+    off = AdaptiveSampler(MetricsRegistry(enabled=False))
+    assert off.tick(force=True) == 7
+
+
+def _warm_pipeline(sampler):
+    corpus = scout_like_jobs()
+    job = next(j for j in corpus if j.mem_profile == "linear")
+    catalog = aws_like_catalog()
+    history = build_history(corpus, catalog)
+    from repro.allocator.registry import ModelRegistry
+    pipe = AllocationPipeline(catalog, history, registry=ModelRegistry(),
+                              telemetry=MetricsRegistry(), sampler=sampler)
+    req = PipelineRequest(job.name, make_profile_fn(job),
+                          job.dataset_gib * GiB)
+    pipe.run(req)                          # register a confident model
+    assert pipe.warm_start(job.name) is not None
+    return pipe, req
+
+
+def test_pipeline_honors_sampler_mask():
+    """mask 0 observes every warm-path stage wall; the default 1-in-8
+    observes ~1/8 of them — the sampler really gates the histograms."""
+    pipe_all, req_all = _warm_pipeline(sampler=0)
+    base = pipe_all.telemetry.histogram(
+        "pipeline.stage.warm_start.seconds").count
+    for _ in range(32):
+        pipe_all.run(req_all)
+    h = pipe_all.telemetry.histogram("pipeline.stage.warm_start.seconds")
+    assert h.count - base == 32
+
+    pipe_8, req_8 = _warm_pipeline(sampler=None)
+    base = pipe_8.telemetry.histogram(
+        "pipeline.stage.warm_start.seconds").count
+    for _ in range(32):
+        pipe_8.run(req_8)
+    h = pipe_8.telemetry.histogram("pipeline.stage.warm_start.seconds")
+    assert 0 < h.count - base <= 8
+
+
+# -- stitching semantics ------------------------------------------------------
+
+
+def _span_dict(name, trace_id, span_id, parent_id=None, started=0.0,
+               children=()):
+    d = {"name": name, "trace_id": trace_id, "span_id": span_id,
+         "started_at": started, "wall_s": 0.001, "thread": "t",
+         "children": list(children)}
+    if parent_id is not None:
+        d["parent_id"] = parent_id
+    return d
+
+
+def test_stitch_grafts_remote_children_and_keeps_orphans_top_level():
+    local = _span_dict("endpoint.request", "t1", "aaa", started=1.0)
+    remote = _span_dict("daemon.op.append", "t1", "bbb", parent_id="aaa",
+                        started=1.5)
+    orphan = _span_dict("daemon.op.load", "t2", "ccc", parent_id="gone",
+                        started=2.0)
+    out = stitch_fleet_traces({"svc": [local],
+                               "crispy-daemon": [remote, orphan]})
+    assert [t["name"] for t in out] == ["endpoint.request",
+                                       "daemon.op.load"]
+    tree = out[0]
+    assert tree["source"] == "svc"
+    assert [c["name"] for c in tree["children"]] == ["daemon.op.append"]
+    assert tree["children"][0]["source"] == "crispy-daemon"
+    assert out[1]["source"] == "crispy-daemon"   # orphan is still a trace
+
+
+def test_stitch_survives_parent_cycles():
+    """Two roots naming each other as parent (clock skew / id reuse
+    pathology) must not recurse forever or drop spans."""
+    a = _span_dict("a", "t", "aaa", parent_id="bbb", started=1.0)
+    b = _span_dict("b", "t", "bbb", parent_id="aaa", started=2.0)
+    out = stitch_fleet_traces({"p1": [a], "p2": [b]})
+    names = set()
+    stack = list(out)
+    while stack:
+        s = stack.pop()
+        names.add(s["name"])
+        stack.extend(s.get("children", ()))
+    assert names == {"a", "b"}
+    assert len(out) == 1                   # one grafted, the cycle broken
+    json.dumps(out)                        # still a tree, not a loop
+
+
+# -- wire protocol: legacy frames stay byte-identical -------------------------
+
+
+@needs_unix_sockets
+def test_untraced_frame_bytes_identical_and_opens_no_daemon_span():
+    sock_path = _daemon_socket()
+    with CrispyDaemon(sock_path) as daemon:
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock_path)
+        try:
+            s.sendall(b'{"op": "ping"}\n')
+            f = s.makefile("rb")
+            line = f.readline()
+        finally:
+            s.close()
+        # the exact pre-tracing response, byte for byte
+        assert line == b'{"ok": true, "kind": "memory"}\n'
+        assert len(daemon.trace_ring) == 0
+
+        # the SAME op with a trace token: same payload fields, plus an
+        # adopted daemon-side span in the daemon's ring
+        be = DaemonBackend(sock_path)
+        try:
+            with span("caller"):
+                assert be.ping()
+        finally:
+            be.close()
+        [rec] = daemon.trace_ring.traces()
+        assert rec.name == "daemon.op.ping"
+        assert rec.parent_id is not None
+
+
+# -- acceptance: one stitched cross-process trace over a live daemon ----------
+
+
+def _drive_traced_service(backend, jobs, catalog, history):
+    """One traced allocation request through the full service stack over
+    `backend`; returns (wire answer, service metrics snapshot)."""
+    with AllocationService(catalog, history, backend=backend) as svc:
+        endpoint = AllocationEndpoint(svc)
+        wire = None
+        for j in jobs:
+            full = j.dataset_gib * GiB
+            wire = endpoint.handle(job=j.name,
+                                   profile_at=make_profile_fn(j),
+                                   full_size=full, anchor=full * 0.01)
+        return wire, svc.telemetry.snapshot()
+
+
+def _assert_one_stitched_trace(fleet, wire, local_snap, daemon_metrics):
+    trees = stitch_fleet_traces(fleet)
+    mine = [t for t in trees if t["trace_id"] == wire["trace_id"]]
+    assert len(mine) == 1, (wire["trace_id"],
+                            [t["trace_id"] for t in trees])
+    sources = {s["source"] for _d, s in trace_tool._walk(mine[0])}
+    assert len(sources) >= 2, sources      # spans from BOTH processes
+    names = {s["name"] for _d, s in trace_tool._walk(mine[0])}
+    assert "endpoint.request" in names
+    assert any(n.startswith("daemon.op.") for n in names)
+    # >= 1 histogram exemplar (either side) references this trace id
+    ex_traces = {ex["trace_id"]
+                 for snap in (local_snap, daemon_metrics)
+                 for h in snap["histograms"].values()
+                 for ex in h.get("exemplars", [])}
+    assert wire["trace_id"] in ex_traces
+
+
+@needs_unix_sockets
+def test_cross_process_stitch_over_unix_daemon_subprocess():
+    """THE acceptance case: a real daemon process, a traced service in
+    this process, ONE stitched tree under the wire's trace id with spans
+    from both processes and an exemplar pointing at it."""
+    sock_path = _daemon_socket()
+    env = {**os.environ,
+           "PYTHONPATH": SRC + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.state.daemon", "--socket", sock_path],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    try:
+        client = DaemonBackend(sock_path, timeout_s=2.0)
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            try:
+                if os.path.exists(sock_path) and client.ping():
+                    break
+            except Exception:
+                pass
+            assert proc.poll() is None, proc.communicate()[0]
+            time.sleep(0.05)
+        else:
+            pytest.fail("daemon never became ready")
+
+        jobs = scout_like_jobs()[:2]
+        catalog = aws_like_catalog()
+        history = build_history(jobs, catalog)
+        wire, local_snap = _drive_traced_service(
+            DaemonBackend(sock_path), jobs, catalog, history)
+        assert wire["trace_id"]
+
+        fleet = {"svc": [s.to_dict() for s in default_ring().traces()],
+                 "crispy-daemon": client.traces()}
+        _assert_one_stitched_trace(fleet, wire, local_snap,
+                                   client.metrics())
+        client.close()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+
+
+@needs_unix_sockets
+def test_cross_process_stitch_over_tcp():
+    """Same acceptance shape over the multi-host transport: the trace
+    token rides tcp frames exactly like unix ones."""
+    sock_path = _daemon_socket()
+    with CrispyDaemon(sock_path, listen="127.0.0.1:0") as daemon:
+        jobs = scout_like_jobs()[2:4]
+        catalog = aws_like_catalog()
+        history = build_history(jobs, catalog)
+        wire, local_snap = _drive_traced_service(
+            DaemonBackend(daemon.tcp_address), jobs, catalog, history)
+        assert wire["trace_id"]
+        be = DaemonBackend(daemon.tcp_address)
+        try:
+            fleet = {"svc": [s.to_dict() for s in default_ring().traces()],
+                     "crispy-daemon": be.traces()}
+            _assert_one_stitched_trace(fleet, wire, local_snap,
+                                       be.metrics())
+        finally:
+            be.close()
+
+
+@needs_unix_sockets
+def test_trace_tool_cli_stitches_and_gates_on_cross_process(capsys):
+    """`python -m repro.telemetry.trace_tool` in-process: prints stitched
+    trees, honors --trace/--json, and --expect-cross-process is a real
+    gate (1 on an untraced fleet, 0 once traces cross)."""
+    sock_path = _daemon_socket()
+    with CrispyDaemon(sock_path) as daemon:
+        assert trace_tool.main(["--daemon", sock_path,
+                                "--expect-cross-process"]) == 1
+        capsys.readouterr()
+
+        jobs = scout_like_jobs()[4:6]
+        catalog = aws_like_catalog()
+        history = build_history(jobs, catalog)
+        backend = DaemonBackend(sock_path)
+        with AllocationService(catalog, history, backend=backend) as svc:
+            endpoint = AllocationEndpoint(svc)
+            for j in jobs:
+                full = j.dataset_gib * GiB
+                wire = endpoint.handle(job=j.name,
+                                       profile_at=make_profile_fn(j),
+                                       full_size=full, anchor=full * 0.01)
+            # publish this process's forest (endpoint roots AND the
+            # worker-thread service.* roots both live in the default
+            # ring — the daemon spans' parents are in the latter)
+            publish_traces(backend, "svc-under-test")
+
+        rc = trace_tool.main(["--daemon", sock_path, "--slowest", "3",
+                              "--fleet", "--expect-cross-process"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "cross-process" in out and "slowest spans" in out
+        assert wire["trace_id"] in out
+        assert "daemon.op." in out
+
+        rc = trace_tool.main(["--daemon", sock_path, "--json",
+                              "--trace", wire["trace_id"]])
+        doc = json.loads(capsys.readouterr().out)
+        assert rc == 0
+        assert [t["trace_id"] for t in doc["traces"]] == [wire["trace_id"]]
+        assert doc["cross_process_traces"] == 1
