@@ -1,0 +1,157 @@
+"""bench_diff: compare two BENCH_load.json artifacts and gate on regressions.
+
+`benchmarks/load_tiers.py` emits BENCH_load.json — per tier (and, when
+the daemon harness ran, per backend) a `by_threads` map of
+throughput_rps / p99_ms rows. This tool diffs two such files:
+
+    python benchmarks/bench_diff.py BEFORE.json AFTER.json \
+        [--threshold 0.20] [--markdown]
+
+For every (backend, tier, threads) row present in BOTH files it prints
+throughput and p99 latency side by side with the relative change, then
+exits 1 if any row regressed by more than `--threshold` (default 20%):
+throughput dropping below (1 - t)x the baseline, or p99 rising above
+(1 + t)x. Rows missing from either side are reported but never fail
+the gate (tier sets legitimately change across PRs; CI smokes with a
+truncated tier matrix). `--markdown` emits a GitHub-flavored table for
+$GITHUB_STEP_SUMMARY; CI downloads the previous run's `bench-load`
+artifact when one exists and publishes the diff in the job summary.
+
+Exit codes: 0 ok / nothing comparable, 1 regression beyond threshold,
+2 bad input files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterator, List, Tuple
+
+DEFAULT_THRESHOLD = 0.20
+
+
+def _rows(doc: Dict) -> Iterator[Tuple[Tuple[str, str, str], Dict]]:
+    """Yield ((backend, tier, threads), row) for every measured row.
+    The top-level `tiers` map is the local-backend run; daemon (or other
+    backend) runs live under `backends.<kind>.tiers`."""
+    sections = [("local", doc.get("tiers") or {})]
+    for kind, sub in (doc.get("backends") or {}).items():
+        sections.append((kind, (sub or {}).get("tiers") or {}))
+    for backend, tiers in sections:
+        for tier, td in tiers.items():
+            for threads, row in (td.get("by_threads") or {}).items():
+                if isinstance(row, dict) and "throughput_rps" in row:
+                    yield (backend, tier, str(threads)), row
+
+
+def _pct(before: float, after: float) -> float:
+    return (after - before) / before * 100.0 if before else 0.0
+
+
+def diff(before: Dict, after: Dict,
+         threshold: float = DEFAULT_THRESHOLD) -> Tuple[List[Dict], bool]:
+    """(per-row comparison dicts, any_regression)."""
+    b_rows = dict(_rows(before))
+    a_rows = dict(_rows(after))
+    out: List[Dict] = []
+    regressed = False
+    for key in sorted(set(b_rows) | set(a_rows)):
+        backend, tier, threads = key
+        b, a = b_rows.get(key), a_rows.get(key)
+        if b is None or a is None:
+            out.append({"backend": backend, "tier": tier,
+                        "threads": threads,
+                        "status": "only-after" if b is None
+                        else "only-before"})
+            continue
+        b_tp, a_tp = b["throughput_rps"], a["throughput_rps"]
+        b_p99, a_p99 = b.get("p99_ms", 0.0), a.get("p99_ms", 0.0)
+        tp_bad = a_tp < b_tp * (1.0 - threshold)
+        p99_bad = b_p99 and a_p99 > b_p99 * (1.0 + threshold)
+        row_regressed = bool(tp_bad or p99_bad)
+        regressed = regressed or row_regressed
+        out.append({"backend": backend, "tier": tier, "threads": threads,
+                    "status": "REGRESSED" if row_regressed else "ok",
+                    "throughput_before": b_tp, "throughput_after": a_tp,
+                    "throughput_pct": _pct(b_tp, a_tp),
+                    "p99_before_ms": b_p99, "p99_after_ms": a_p99,
+                    "p99_pct": _pct(b_p99, a_p99)})
+    return out, regressed
+
+
+def _format_table(rows: List[Dict], markdown: bool) -> str:
+    headers = ("backend/tier", "thr", "rps before", "rps after", "rps Δ%",
+               "p99 before", "p99 after", "p99 Δ%", "status")
+    body: List[Tuple[str, ...]] = []
+    for r in rows:
+        name = f"{r['backend']}/{r['tier']}"
+        if "throughput_before" not in r:
+            body.append((name, r["threads"], "-", "-", "-", "-", "-", "-",
+                         r["status"]))
+            continue
+        body.append((
+            name, r["threads"],
+            f"{r['throughput_before']:.1f}", f"{r['throughput_after']:.1f}",
+            f"{r['throughput_pct']:+.1f}",
+            f"{r['p99_before_ms']:.3f}", f"{r['p99_after_ms']:.3f}",
+            f"{r['p99_pct']:+.1f}", r["status"]))
+    if markdown:
+        lines = ["| " + " | ".join(headers) + " |",
+                 "|" + "|".join("---" for _ in headers) + "|"]
+        lines += ["| " + " | ".join(row) + " |" for row in body]
+        return "\n".join(lines)
+    widths = [max(len(h), *(len(row[i]) for row in body)) if body
+              else len(h) for i, h in enumerate(headers)]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(headers, widths))]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(row, widths))
+              for row in body]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("before", help="baseline BENCH_load.json")
+    ap.add_argument("after", help="candidate BENCH_load.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression tolerance per row "
+                         "(default: 0.20 = 20%%)")
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavored markdown table")
+    args = ap.parse_args(argv)
+    docs = []
+    for path in (args.before, args.after):
+        try:
+            with open(path) as f:
+                docs.append(json.load(f))
+        except (OSError, ValueError) as e:
+            print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+            return 2
+    rows, regressed = diff(docs[0], docs[1], args.threshold)
+    comparable = [r for r in rows if "throughput_before" in r]
+    if not comparable:
+        print("bench_diff: no comparable (backend, tier, threads) rows "
+              "between the two files — nothing to gate on")
+        return 0
+    print(_format_table(rows, args.markdown))
+    worst_tp = min(comparable, key=lambda r: r["throughput_pct"])
+    worst_p99 = max(comparable, key=lambda r: r["p99_pct"])
+    summary = (f"{len(comparable)} rows compared; worst throughput "
+               f"{worst_tp['throughput_pct']:+.1f}% "
+               f"({worst_tp['backend']}/{worst_tp['tier']} "
+               f"x{worst_tp['threads']}), worst p99 "
+               f"{worst_p99['p99_pct']:+.1f}% "
+               f"({worst_p99['backend']}/{worst_p99['tier']} "
+               f"x{worst_p99['threads']})")
+    print(("\n**" + summary + "**") if args.markdown else ("\n" + summary))
+    if regressed:
+        bad = [r for r in rows if r["status"] == "REGRESSED"]
+        print(f"bench_diff: {len(bad)} row(s) regressed beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

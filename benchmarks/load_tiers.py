@@ -32,14 +32,28 @@ sampled span trees the tier produced) and `exemplars` counts the
 histogram exemplar slots populated by tier end — the tracing plane's
 own overhead ledger, tracked per PR like the latencies.
 
+Backends: every tier runs against a process-local service (top-level
+"tiers", the historical shape) AND — unless LOAD_TIERS_BACKENDS says
+otherwise — against a service sharing state through a real crispy-daemon
+subprocess over its unix socket ("backends"."daemon"."tiers"). The
+daemon-backed rows are the wire-path trajectory the ROADMAP tracks: the
+per-batch store/registry refreshes, profile-point write-through, and
+registry flushes all cross the newline-JSON protocol, so protocol work
+(batching, pipelining) shows up here as a BENCH_load.json diff.
+
 Env knobs: LOAD_TIERS_REQUESTS (default 60), LOAD_TIERS_THREADS
-(comma-separated, default "1,8"), BENCH_LOAD_PATH (default
+(comma-separated, default "1,8"), LOAD_TIERS_BACKENDS (comma-separated
+subset of "local,daemon", default both), BENCH_LOAD_PATH (default
 ./BENCH_load.json).
 
 Final CSV line: load_tiers,<mixed us/req @ max threads>,<mixed p99 ms>
+(from the local run, or the daemon run when local is disabled)
 """
 import json
 import os
+import subprocess
+import sys
+import tempfile
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -166,52 +180,157 @@ def _drive_tier(svc: AllocationService, mix: _TierMix, requests: int,
                              for h in after["histograms"].values())}
 
 
-def _build_service(catalog, history, corpus) -> AllocationService:
+def _build_service(catalog, history, corpus, backend=None
+                   ) -> AllocationService:
     """Fresh service, prewarmed: one pass over the corpus registers
     confident models for the linear jobs (warm_start substrate) and
     observes every ladder (classifier substrate)."""
-    svc = AllocationService(catalog, history, batch_window_s=0.001)
+    svc = AllocationService(catalog, history, batch_window_s=0.001,
+                            backend=backend)
     svc.allocate_many([_request(j) for j in corpus])
     return svc
+
+
+class _DaemonProcess:
+    """A real crispy-daemon subprocess on a fresh unix socket — the
+    daemon-backed rows must pay genuine wire round-trips, not in-process
+    method calls. None-address when unavailable (no unix sockets /
+    failed start): the daemon section is then skipped."""
+
+    def __init__(self):
+        self.address = None
+        self.child = None
+        import socket as _socket
+        if not hasattr(_socket, "AF_UNIX"):
+            return
+        self.address = os.path.join(
+            tempfile.mkdtemp(prefix="crispy-load-"), "d.sock")
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env = {**os.environ,
+               "PYTHONPATH": src + os.pathsep
+               + os.environ.get("PYTHONPATH", "")}
+        self.child = subprocess.Popen(
+            [sys.executable, "-m", "repro.state.daemon",
+             "--socket", self.address],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True)
+        from repro.state import DaemonBackend
+        client = DaemonBackend(self.address, timeout_s=2.0)
+        for _ in range(200):
+            if os.path.exists(self.address) and client.ping():
+                client.close()
+                return
+            if self.child.poll() is not None:
+                break
+            time.sleep(0.05)
+        self.stop()
+        self.address = None
+
+    def backend(self):
+        from repro.state import DaemonBackend
+        return DaemonBackend(self.address)
+
+    def stop(self):
+        if self.child is None:
+            return
+        try:
+            if self.child.poll() is None and self.address:
+                from repro.state import DaemonBackend
+                DaemonBackend(self.address, timeout_s=2.0).shutdown_daemon()
+            self.child.wait(timeout=10)
+        except Exception:
+            self.child.kill()
+            self.child.wait(timeout=10)
+        self.child = None
+
+
+TIERS = ("warm_start", "classifier", "fresh", "tag_override", "mixed")
+
+
+def _run_backend(kind: str, catalog, history, corpus, requests, threads,
+                 out_tiers, out_hists) -> dict:
+    """Drive every tier x thread count against one backend kind
+    ("local" | "daemon"); returns the mixed-tier row at max threads."""
+    mixed_summary = None
+    for nthreads in threads:
+        # fresh prewarmed service (and, for the daemon rows, a fresh
+        # daemon) per thread count: novel-signature tiers must not
+        # inherit a sibling run's registry entries
+        daemon = _DaemonProcess() if kind == "daemon" else None
+        if daemon is not None and daemon.address is None:
+            print(f"{kind}: skipped (no daemon available)")
+            return None
+        backend = daemon.backend() if daemon is not None else None
+        try:
+            with _build_service(catalog, history, corpus, backend) as svc:
+                for tier in TIERS:
+                    mix = _TierMix(tier, corpus,
+                                   run_id=f"{kind}-t{nthreads}")
+                    row = _drive_tier(svc, mix, requests, nthreads)
+                    out_tiers[tier]["by_threads"][str(nthreads)] = row
+                    print(f"{kind:>6}/{tier:>13} x{nthreads:<3} "
+                          f"p50 {row['p50_ms']:8.3f}ms"
+                          f"  p99 {row['p99_ms']:8.3f}ms"
+                          f"  {row['throughput_rps']:8.1f} req/s",
+                          flush=True)
+                # the service's own view of the whole run, percentiles
+                # included — service.queue_wait.seconds p99 is the
+                # contention signal the wire-path work is judged by
+                snap = svc.metrics()
+                out_hists[str(nthreads)] = {
+                    name: {k: s[k] for k in
+                           ("count", "p50", "p95", "p99", "sum")}
+                    for name, s in snap["histograms"].items()
+                    if name.startswith(("service.", "pipeline.stage."))}
+        finally:
+            if backend is not None:
+                backend.close()
+            if daemon is not None:
+                daemon.stop()
+        mixed_summary = out_tiers["mixed"]["by_threads"][str(nthreads)]
+    return mixed_summary
 
 
 def main() -> None:
     requests = int(os.environ.get("LOAD_TIERS_REQUESTS", "60"))
     threads = [int(t) for t in
                os.environ.get("LOAD_TIERS_THREADS", "1,8").split(",")]
+    backends = [b.strip() for b in
+                os.environ.get("LOAD_TIERS_BACKENDS",
+                               "local,daemon").split(",") if b.strip()]
     out_path = os.environ.get("BENCH_LOAD_PATH", "BENCH_load.json")
 
     corpus = scout_like_jobs()
     catalog = aws_like_catalog()
     history = build_history(corpus, catalog)
 
-    tiers = ("warm_start", "classifier", "fresh", "tag_override", "mixed")
     result = {"benchmark": "load_tiers",
               "created_unix": round(time.time(), 3),
               "requests_per_tier": requests,
               "thread_counts": threads,
-              "tiers": {t: {"by_threads": {}} for t in tiers}}
+              # the historical top-level shape stays the LOCAL run so
+              # cross-PR diffs of old files keep lining up
+              "tiers": {t: {"by_threads": {}} for t in TIERS},
+              "service_histograms": {},
+              "backends": {}}
 
     mixed_summary = None
-    for nthreads in threads:
-        # fresh prewarmed service per thread count: novel-signature tiers
-        # must not inherit a sibling run's registry entries
-        with _build_service(catalog, history, corpus) as svc:
-            for tier in tiers:
-                mix = _TierMix(tier, corpus, run_id=f"t{nthreads}")
-                row = _drive_tier(svc, mix, requests, nthreads)
-                result["tiers"][tier]["by_threads"][str(nthreads)] = row
-                print(f"{tier:>13} x{nthreads:<3} p50 {row['p50_ms']:8.3f}ms"
-                      f"  p99 {row['p99_ms']:8.3f}ms"
-                      f"  {row['throughput_rps']:8.1f} req/s", flush=True)
-            # the service's own view of the whole run, percentiles included
-            snap = svc.metrics()
-            result.setdefault("service_histograms", {})[str(nthreads)] = {
-                name: {k: s[k] for k in
-                       ("count", "p50", "p95", "p99", "sum")}
-                for name, s in snap["histograms"].items()
-                if name.startswith(("service.", "pipeline.stage."))}
-        mixed_summary = result["tiers"]["mixed"]["by_threads"][str(nthreads)]
+    for kind in backends:
+        if kind == "local":
+            tiers, hists = result["tiers"], result["service_histograms"]
+        else:
+            body = result["backends"].setdefault(
+                kind, {"tiers": {t: {"by_threads": {}} for t in TIERS},
+                       "service_histograms": {}})
+            tiers, hists = body["tiers"], body["service_histograms"]
+        summary = _run_backend(kind, catalog, history, corpus, requests,
+                               threads, tiers, hists)
+        if kind == "daemon" and summary is None:
+            result["backends"].pop(kind, None)
+        if summary is not None and (mixed_summary is None
+                                    or kind == "local"):
+            mixed_summary = summary
 
     tmp = out_path + ".tmp"
     with open(tmp, "w") as f:

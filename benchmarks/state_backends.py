@@ -25,8 +25,15 @@ inherit it, so the run exercises the auth handshake too. Where unix
 sockets are unavailable the unix section is skipped and only the file
 numbers are reported.
 
+`--batch N` adds a wire-coalescing section: against the same daemon it
+times N appends + one tail read issued as N+1 single-op round trips vs
+ONE `DaemonBackend.batch()` frame, and reports the speedup — the
+mechanism behind `ProfileStore(write_behind=True)` and
+`refresh_views()`. Runs over whichever `--transport` was selected.
+
 Final CSV: state_backends,<us_per_op_file>,<daemon_vs_file_speedup>
-(speedup 0.0 when the daemon section was skipped).
+(speedup 0.0 when the daemon section was skipped). With `--batch N` a
+second CSV line follows: state_backends_batch,<us_single>,<batch_speedup>.
 """
 from __future__ import annotations
 
@@ -204,11 +211,71 @@ def bench_daemon(transport: str = "unix") -> float:
             print(f"{label}: clean shutdown")
 
 
+def bench_batch(transport: str, batch_n: int, repeats: int = 20):
+    """Batched vs single-op wire throughput on one daemon: `batch_n`
+    appends + one tail read, issued per-op vs as one batch frame.
+    Returns (us_single_per_group, speedup), or (0.0, 0.0) if skipped."""
+    if transport == "unix" and not HAS_UNIX_SOCKETS:
+        print("batch: skipped (no unix-domain sockets on this platform)")
+        return 0.0, 0.0
+    from repro.state import DaemonBackend
+    addr, child = _spawn_daemon(transport)
+    if addr is None:
+        return 0.0, 0.0
+    label = f"batch({transport}) x{batch_n}"
+    try:
+        client = DaemonBackend(addr)
+        cursor = 0
+        t0 = time.monotonic()
+        for i in range(repeats):
+            for j in range(batch_n):
+                client.append("batch-single", {"i": i, "j": j})
+            _rows, cursor = client.read("batch-single", cursor)
+        wall_single = time.monotonic() - t0
+        cursor = 0
+        t0 = time.monotonic()
+        for i in range(repeats):
+            ops = [{"op": "append", "ns": "batch-batched",
+                    "record": {"i": i, "j": j}} for j in range(batch_n)]
+            ops.append({"op": "read", "ns": "batch-batched",
+                        "cursor": cursor})
+            results = client.batch(ops)
+            assert all(r.get("ok") for r in results), results
+            cursor = results[-1]["cursor"]
+        wall_batched = time.monotonic() - t0
+        n_single, _ = client.read("batch-single", 0)
+        n_batched, _ = client.read("batch-batched", 0)
+        assert len(n_single) == len(n_batched) == repeats * batch_n
+        us_single = wall_single / repeats * 1e6
+        us_batched = wall_batched / repeats * 1e6
+        speedup = us_single / us_batched if us_batched else 0.0
+        print(f"{label}: {us_single:.0f} us/group single-op vs "
+              f"{us_batched:.0f} us/group batched -> {speedup:.2f}x "
+              f"({batch_n} appends + 1 read per group, {repeats} groups)")
+        return us_single, speedup
+    finally:
+        if child is not None:
+            try:
+                # the shutdown reply can race the daemon's drain when
+                # other connections (our bench client) are still open;
+                # the child's exit code is the real cleanliness signal
+                DaemonBackend(addr).shutdown_daemon()
+            except Exception:
+                pass
+            child.wait(timeout=10)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--transport", choices=("unix", "tcp"), default="unix",
                     help="daemon transport to benchmark against "
                          "(default: unix)")
+    ap.add_argument("--batch", type=int, metavar="N",
+                    default=int(os.environ.get("STATE_BACKENDS_BATCH",
+                                               "0")) or None,
+                    help="also measure batched vs single-op wire "
+                         "throughput with N appends + 1 read per group "
+                         "(default: $STATE_BACKENDS_BATCH, off)")
     # argv=None means "called programmatically" (benchmarks/run.py): use
     # defaults rather than swallowing the harness's own sys.argv
     args = ap.parse_args(argv if argv is not None else [])
@@ -219,6 +286,9 @@ def main(argv=None) -> None:
         print(f"daemon({args.transport}) vs file: {speedup:.2f}x per "
               f"contended iteration")
     print(f"state_backends,{us_file:.1f},{speedup:.2f}")
+    if args.batch:
+        us_single, batch_speedup = bench_batch(args.transport, args.batch)
+        print(f"state_backends_batch,{us_single:.1f},{batch_speedup:.2f}")
 
 
 if __name__ == "__main__":

@@ -193,31 +193,100 @@ class ServiceStats:
 
 class _ProfileLRU:
     """Cross-batch ProfileResult LRU behind the pipeline's PointSource
-    cache interface (get/put). Thread-safe: fixed-ladder points and
-    concurrent signature groups read through it from executor workers."""
+    cache interface (get/put). Thread-safe AND lock-striped: fixed-ladder
+    points and concurrent signature groups read through it from executor
+    workers, and under a hot mixed batch a single global lock serializes
+    every group on every point lookup — so entries are sharded by
+    signature hash, each shard owning its own lock, OrderedDict, and a
+    proportional slice of the capacity. LRU order is per-shard (a global
+    order would need the global lock back), which approximates global
+    LRU well when signatures spread across shards."""
 
-    def __init__(self, cap: int):
-        self._cache: "OrderedDict[Tuple[str, float], ProfileResult]" = \
-            OrderedDict()
-        self._cap = cap
-        self._lock = threading.Lock()
+    SHARDS = 16
+
+    def __init__(self, cap: int, shards: int = SHARDS):
+        self._nshards = max(1, min(int(shards), max(1, cap)))
+        self._shard_cap = max(1, cap // self._nshards)
+        self._shards = [
+            (threading.Lock(), OrderedDict())
+            for _ in range(self._nshards)]
+
+    def _shard(self, signature: str):
+        return self._shards[hash(signature) % self._nshards]
 
     def get(self, signature: str, size: float) -> Optional[ProfileResult]:
         key = (signature, float(size))
-        with self._lock:
-            r = self._cache.get(key)
+        lock, cache = self._shard(signature)
+        with lock:
+            r = cache.get(key)
             if r is not None:
-                self._cache.move_to_end(key)
+                cache.move_to_end(key)
             return r
 
     def put(self, signature: str, size: float, result: ProfileResult,
             from_store: bool = False) -> None:
         key = (signature, float(size))
-        with self._lock:
-            self._cache[key] = result
-            self._cache.move_to_end(key)
-            while len(self._cache) > self._cap:
-                self._cache.popitem(last=False)
+        lock, cache = self._shard(signature)
+        with lock:
+            cache[key] = result
+            cache.move_to_end(key)
+            while len(cache) > self._shard_cap:
+                cache.popitem(last=False)
+
+
+class _PlanCache:
+    """Striped negative-outcome plan cache (see AllocationService: maps
+    (sig, ladder, tags, settings) -> unconfident plan). Same sharding
+    rationale as _ProfileLRU — concurrent signature groups must not
+    serialize on one lock — with the history-version invalidation kept
+    PER SHARD: each shard remembers the history version it was filled
+    under and self-clears lazily on its next access after a mutation,
+    so invalidation needs no global barrier either."""
+
+    SHARDS = 16
+
+    def __init__(self, cap: int, hist_version, shards: int = SHARDS):
+        self._nshards = max(1, min(int(shards), max(1, cap)))
+        self._shard_cap = max(1, cap // self._nshards)
+        self._shards = [
+            [threading.Lock(), OrderedDict(), hist_version]
+            for _ in range(self._nshards)]
+
+    def _shard(self, plan_key: Tuple):
+        # shard by signature (plan_key[0]): everything else in the key
+        # only disambiguates within a signature
+        return self._shards[hash(plan_key[0]) % self._nshards]
+
+    def get(self, plan_key: Tuple, hist_version):
+        shard = self._shard(plan_key)
+        lock, cache, _ = shard
+        with lock:
+            if shard[2] != hist_version:
+                cache.clear()
+                shard[2] = hist_version
+                return None
+            plan = cache.get(plan_key)
+            if plan is not None:
+                cache.move_to_end(plan_key)
+            return plan
+
+    def put(self, plan_key: Tuple, plan, hist_version) -> None:
+        shard = self._shard(plan_key)
+        lock, cache, _ = shard
+        with lock:
+            if shard[2] != hist_version:
+                cache.clear()
+                shard[2] = hist_version
+            cache[plan_key] = plan
+            cache.move_to_end(plan_key)
+            while len(cache) > self._shard_cap:
+                cache.popitem(last=False)
+
+    def clear(self) -> None:
+        for shard in self._shards:
+            lock, cache, _ = shard
+            with lock:
+                cache.clear()
 
 
 class AllocationService:
@@ -248,7 +317,11 @@ class AllocationService:
             from repro.profiling.store import (BackendModelRegistry,
                                                ProfileStore)
             if store is None:
-                store = ProfileStore(backend=backend, namespace="profiles")
+                # write-behind: the worker flushes the batch's buffered
+                # point/anchor rows as ONE backend frame per batch (see
+                # _process_batch) instead of one round trip per point
+                store = ProfileStore(backend=backend, namespace="profiles",
+                                     write_behind=True)
             if registry is None:
                 registry = BackendModelRegistry(backend,
                                                 namespace="registry")
@@ -296,11 +369,10 @@ class AllocationService:
         # fit and classifier scan N times. Cleared whenever the observable
         # world changes (new signature observed / new model registered),
         # because either can turn a baseline outcome into a classifier
-        # one. Guarded by _plan_lock: with an executor, a batch's
-        # signature groups plan concurrently.
-        self._plan_cache: "OrderedDict[Tuple, object]" = OrderedDict()
-        self._plan_cache_hist_version = history.version
-        self._plan_lock = threading.Lock()
+        # one. Lock-striped (_PlanCache): with an executor, a batch's
+        # signature groups plan concurrently and must not serialize on
+        # a single cache lock.
+        self._plan_cache = _PlanCache(profile_cache_size, history.version)
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         # pending tuples carry the submitter's trace context: contextvars
@@ -381,10 +453,8 @@ class AllocationService:
             self._cv.notify_all()
         if self._worker is not None:
             self._worker.join(timeout=5.0)
-        try:
-            self.registry.flush()   # durability backstop for deferred puts
-        except Exception:
-            self.stats.inc("flush_errors")
+        # durability backstop for write-behind rows + deferred puts
+        self._flush_shared_state()
 
     def __enter__(self) -> "AllocationService":
         return self
@@ -400,6 +470,15 @@ class AllocationService:
 
     def _run(self) -> None:
         while True:
+            # under sustained load a batch's writes are carried by the
+            # NEXT batch's sync frame (see _process_batch); when the
+            # queue drains, flush now so siblings see the last batch's
+            # points/models without waiting for more traffic. Outside
+            # the lock: a flush round trip must not block submitters.
+            with self._cv:
+                idle = not self._pending and not self._closed
+            if idle:
+                self._flush_shared_state()
             with self._cv:
                 while not self._pending and not self._closed:
                     self._cv.wait()
@@ -413,6 +492,22 @@ class AllocationService:
                 batch, self._pending = self._pending, []
             if batch:
                 self._process_batch(batch)
+
+    def _flush_shared_state(self) -> None:
+        """Push buffered write-behind rows and deferred registry models
+        to the backend. A persistence failure (disk full, daemon down)
+        must never kill the worker — rows stay queued / models stay in
+        memory and the next flush retries."""
+        flush_writes = getattr(self.store, "flush_writes", None)
+        if flush_writes is not None:
+            try:
+                flush_writes()
+            except Exception:
+                self.stats.inc("flush_errors")
+        try:
+            self.registry.flush()
+        except Exception:
+            self.stats.inc("flush_errors")
 
     def _preq(self, req: AllocationRequest):
         """The pipeline-facing view of a wire request."""
@@ -450,19 +545,26 @@ class AllocationService:
         now = time.monotonic()
         for _req, _fut, t_sub, _ctx in batch:
             self._h_queue.observe(now - t_sub)
-        # pull sibling processes' work in once per batch: profile points /
-        # anchors from the shared store, models from a shared registry
-        if self.store is not None:
-            try:
-                self.store.refresh()
-            except Exception:
-                pass                        # stale view is still correct
-        refresh = getattr(self.registry, "refresh", None)
-        if refresh is not None:
-            try:
-                refresh()
-            except Exception:
-                pass
+        # batch-level backend work (refresh below, flush at the end) joins
+        # the FIRST traced requester's trace — the same convention as the
+        # shared planning work — so coalescing round trips out of the
+        # per-request path doesn't also detach them from every trace
+        batch_ctx = next((ctx for _r, _f, _t, ctx in batch
+                          if ctx is not None), None)
+        # one round trip per batch: the PREVIOUS batch's buffered
+        # point/anchor rows and deferred registry models ride at the
+        # front of this batch's refresh frame (batch frames read their
+        # own writes), then sibling processes' work is pulled in —
+        # profile points / anchors from the shared store, models from a
+        # shared registry (repro.profiling.store.sync_views). A failure
+        # re-queues the writes and leaves the views stale — both safe.
+        try:
+            from repro.profiling.store import sync_views
+            with span_if(batch_ctx is not None, "service.refresh",
+                         parent=batch_ctx):
+                sync_views(self.store, self.registry)
+        except Exception:
+            pass                            # stale view is still correct
         # group by (signature, ladder, tags, acquisition settings):
         # same-signature requests share one plan only when they ask for
         # the same ladder, carry the same tag palette AND resolve to the
@@ -522,13 +624,11 @@ class AllocationService:
         else:
             for entry in entries:
                 handle_group(entry)
-        # one file rewrite for however many models this batch registered;
-        # a persistence failure (disk full, read-only) must not kill the
-        # worker — models stay in memory and the next flush retries
-        try:
-            self.registry.flush()
-        except Exception:
-            self.stats.inc("flush_errors")
+        # NO flush here: whatever this batch wrote stays buffered (rows)
+        # or deferred (registry models) and rides in the NEXT batch's
+        # sync frame — or is pushed by the worker's idle-time
+        # _flush_shared_state the moment the queue drains. Either way
+        # the loaded steady state is one wire frame per batch.
 
     # -- planning: pipeline calls + caches + stats --------------------------
     def _plan(self, sig: str, ladder: Tuple[float, ...],
@@ -539,42 +639,32 @@ class AllocationService:
             return plan
 
         plan_key = (sig, ladder, req.tags_key, self._settings_key(req))
-        with self._plan_lock:
-            # classifier/baseline plans freeze history-derived selections,
-            # so a history mutation invalidates the whole negative cache
-            hv = self.history.version
-            if hv != self._plan_cache_hist_version:
-                self._plan_cache.clear()
-                self._plan_cache_hist_version = hv
-            cached_plan = self._plan_cache.get(plan_key)
-            if cached_plan is not None:
-                self._plan_cache.move_to_end(plan_key)
-                self.stats.inc("plan_cache_hits")
-                # this request did no profiling; don't report the
-                # original's counters or adaptive-schedule flags
-                return dataclasses.replace(cached_plan, profiled=0,
-                                           cache_hits=0, store_hits=0,
-                                           early_stop=False,
-                                           escalated=False,
-                                           budget_exhausted=False)
+        # classifier/baseline plans freeze history-derived selections,
+        # so a history mutation invalidates the negative cache (each
+        # shard self-clears on its next access at the new version)
+        cached_plan = self._plan_cache.get(plan_key, self.history.version)
+        if cached_plan is not None:
+            self.stats.inc("plan_cache_hits")
+            # this request did no profiling; don't report the
+            # original's counters or adaptive-schedule flags
+            return dataclasses.replace(cached_plan, profiled=0,
+                                       cache_hits=0, store_hits=0,
+                                       early_stop=False,
+                                       escalated=False,
+                                       budget_exhausted=False)
 
         plan = self.pipeline.measure_plan(self._preq(req), ladder)
         self._count_plan(plan)
         if plan.newly_observed or plan.registered:
-            with self._plan_lock:
-                # a new neighbor (or a new confident model) may rescue
-                # previously-cached negative outcomes
-                self._plan_cache.clear()
+            # a new neighbor (or a new confident model) may rescue
+            # previously-cached negative outcomes
+            self._plan_cache.clear()
         # cache only fully-profiled negative outcomes: a plan cut short by
         # the budget reflects a transient denial, not a property of the
         # job, and must not stick once the budget recovers
         if plan.source in ("classifier", "baseline") \
                 and not plan.budget_exhausted:
-            with self._plan_lock:
-                self._plan_cache[plan_key] = plan
-                self._plan_cache.move_to_end(plan_key)
-                while len(self._plan_cache) > self._cache_cap:
-                    self._plan_cache.popitem(last=False)
+            self._plan_cache.put(plan_key, plan, self.history.version)
         return plan
 
     def _count_plan(self, plan) -> None:

@@ -64,6 +64,10 @@ class ProfilingBudget:
         self.key = key
         self._lock = threading.Lock()
         self._t0 = time.monotonic()
+        # shared-mode wall anchor: the doc's started_at is stamped once
+        # at creation and never rewritten, so it is safe to cache —
+        # saves one backend round trip per wall-limited try_spend
+        self._started_at: Optional[float] = None
         self._points = 0
         self._charged = 0.0
         self._denials = 0
@@ -83,16 +87,22 @@ class ProfilingBudget:
         `started_at`); any raced creation keeps the winner's stamp."""
         value, _version = self.backend.load(self.namespace, self.key)
         if value is not None:
-            return value
+            return self._note_started(value)
         doc = {"started_at": time.time(), "points": 0.0, "charged": 0.0,
                "denials": 0.0}
         won, current, _ver = self.backend.cas(self.namespace, self.key,
                                               0, doc)
-        return doc if won else (current or doc)
+        return self._note_started(doc if won else (current or doc))
+
+    def _note_started(self, doc: Dict) -> Dict:
+        if self._started_at is None and doc.get("started_at") is not None:
+            self._started_at = float(doc["started_at"])
+        return doc
 
     def _doc(self) -> Dict:
         value, _version = self.backend.load(self.namespace, self.key)
-        return value if value is not None else self._ensure_doc()
+        return (self._note_started(value) if value is not None
+                else self._ensure_doc())
 
     @property
     def shared(self) -> bool:
@@ -122,7 +132,8 @@ class ProfilingBudget:
 
     def elapsed_s(self) -> float:
         if self.shared:
-            started = self._doc().get("started_at")
+            started = (self._started_at if self._started_at is not None
+                       else self._doc().get("started_at"))
             if started is not None:
                 return max(0.0, time.time() - float(started))
         return time.monotonic() - self._t0
@@ -173,11 +184,15 @@ class ProfilingBudget:
 
     def _try_spend_shared(self, points: int) -> bool:
         if self.wall_s is not None:
-            # the only reason to read the doc up front is the shared
-            # started_at stamp; without a wall limit the reserve below is
-            # the single round trip (reserve defaults missing fields)
-            doc = self._ensure_doc()
-            started = float(doc.get("started_at", time.time()))
+            # the wall check only needs the shared started_at stamp,
+            # which is immutable after doc creation — the cached copy
+            # (stamped by __init__'s _ensure_doc) makes the happy path
+            # a single reserve round trip even with a wall limit
+            if self._started_at is not None:
+                started = self._started_at
+            else:
+                doc = self._ensure_doc()
+                started = float(doc.get("started_at", time.time()))
             if time.time() - started >= self.wall_s:
                 # wall time is monotone — no atomicity needed for the check,
                 # only for the denial counter

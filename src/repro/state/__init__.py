@@ -54,12 +54,31 @@ Daemon lifecycle (full wire protocol in daemon.py):
             (or SIGTERM/SIGINT) — the server drains, unlinks the socket,
             and exits 0.
 
+Wire batching + pipelining: every backend exposes `batch(ops)` — N
+wire-shaped ops executed in order with per-op error isolation (a failing
+op yields its own {"ok": false} slot). On `DaemonBackend` that is ONE
+{"op": "batch", "ops": [...]} round trip (auto-chunked under the 8 MiB
+frame cap), and `DaemonBackend.pipeline()` additionally pipelines plain
+single-op frames — N request lines, one flush, N ordered responses —
+against daemons of any version. Frames without the batch op stay
+byte-identical to the legacy protocol (pinned by
+tests/test_state_conformance.py), and on an authed TCP daemon the auth
+handshake still gates batch frames like any other. The shared views
+coalesce their hot patterns automatically:
+`repro.profiling.store.refresh_views(store, registry)` fetches the
+profile-log tail and the registry document in one frame, and
+`ProfileStore(write_behind=True)` flushes buffered point/anchor rows as
+one batched append frame. The daemon records batch widths in
+`daemon.batch.size` and still times each sub-op into its
+`daemon.op.<op>.seconds` histogram.
+
 Choosing a backend: `InMemoryBackend` for tests and single-process
 embedding; `FileBackend` for a handful of processes on one host with no
 extra moving parts; `DaemonBackend` when reservation traffic is contended,
 you want one process to own all writes, or clients live on other hosts
 (tcp). `benchmarks/state_backends.py --transport {unix,tcp}` measures
-file vs daemon under multi-process load on either transport.
+file vs daemon under multi-process load on either transport, and its
+`--batch N` flag measures batched vs single-op round trips.
 """
 from repro.state.backend import (CASConflict, InMemoryBackend, StateBackend,
                                  StateBackendError, StateBackendUnavailable)

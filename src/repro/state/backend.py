@@ -158,6 +158,61 @@ class StateBackend(ABC):
                 return True, doc
             # lost the race: re-read and re-check against fresh state
 
+    # -- batched ops ---------------------------------------------------------
+    def batch(self, ops: Sequence[Dict]) -> List[Dict]:
+        """Execute several ops as one unit, returning one wire-shaped
+        result dict per op, in order (the same shapes the crispy-daemon
+        puts on the wire — {"ok": true, "rows": ...} etc.). Failures are
+        isolated per op: a failing op yields {"ok": false, "error": ...}
+        and the remaining ops still run. Ops are applied sequentially in
+        order, so a batch may read its own earlier writes.
+
+        The base implementation loops locally — correct on any backend,
+        no faster than N calls. `DaemonBackend` overrides it with ONE
+        {"op": "batch"} wire frame, turning N round-trips into one;
+        views coalesce their hot read patterns through this method (see
+        repro.profiling.store.refresh_views)."""
+        return [self._apply_batch_op(op) for op in ops]
+
+    def _apply_batch_op(self, req: Dict) -> Dict:
+        try:
+            if not isinstance(req, dict):
+                raise StateBackendError(f"batch op is not a dict: {req!r}")
+            op = req.get("op")
+            if op == "ping":
+                return {"ok": True, "kind": self.kind}
+            if op == "append":
+                self.append(req["ns"], req["record"])
+                return {"ok": True}
+            if op == "read":
+                rows, cursor = self.read(req["ns"],
+                                         int(req.get("cursor", 0)))
+                return {"ok": True, "rows": rows, "cursor": cursor}
+            if op == "load":
+                value, version = self.load(req["ns"], req["key"])
+                return {"ok": True, "value": value, "version": version}
+            if op == "cas":
+                won, value, version = self.cas(req["ns"], req["key"],
+                                               int(req["version"]),
+                                               req["value"])
+                return {"ok": True, "won": won, "value": value,
+                        "version": version}
+            if op == "reserve":
+                granted, doc = self.reserve(req["ns"], req["key"],
+                                            req.get("deltas", {}),
+                                            req.get("limits") or {})
+                return {"ok": True, "granted": granted, "doc": doc}
+            if op == "compact":
+                stats = self.compact(req["ns"],
+                                     key_fields=req.get("key_fields"),
+                                     max_age_s=req.get("max_age_s"))
+                resp = {"ok": True}
+                resp.update(stats)
+                return resp
+            return {"ok": False, "error": f"unknown op {op!r}"}
+        except Exception as e:
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
     # -- lifecycle ----------------------------------------------------------
     def ping(self) -> bool:
         """True when the backend is reachable."""

@@ -53,7 +53,26 @@ Wire protocol (one JSON object per line, request -> response):
   {"op": "traces", "clear": false}                 -> {"ok": true,
                                                        "source": ..,
                                                        "traces": [..]}
+  {"op": "batch", "ops": [<frame>, ..]}            -> {"ok": true,
+                                                       "results": [..]}
   {"op": "shutdown"}                               -> {"ok": true}
+
+`batch` carries N sub-op frames in one round trip: exactly one result
+per sub-op, in order, with per-op error isolation (a failing sub-op
+contributes its own {"ok": false, "error": ..} slot and the rest still
+run). `auth`, `shutdown` and `batch` itself may not nest inside it. The
+daemon dispatches the sub-ops in a tight loop — one frame decode, one
+batch span — while still timing each sub-op into its
+`daemon.op.<op>.seconds` histogram, and records the distribution of
+batch widths in `daemon.batch.size`. Clients may also PIPELINE legacy
+single-op frames (write N lines, then read N responses — the daemon
+answers strictly in order per connection); `DaemonBackend.pipeline()`
+wraps that, and `DaemonBackend.batch()` wraps the batch frame with
+automatic chunking under the frame cap. The shared views coalesce
+automatically: `repro.profiling.store.refresh_views` fetches the
+profile-store tail and the registry doc in one frame, and
+`ProfileStore(write_behind=True)` flushes buffered point/anchor writes
+as one batched append frame.
 
 Additionally, ANY request frame may carry a `trace` field — the
 caller's {"trace_id", "span_id"} propagation token (see
@@ -124,7 +143,8 @@ from repro.state.backend import (InMemoryBackend, StateBackend,
                                  StateBackendError, StateBackendUnavailable)
 from repro.state.compaction import prune_registry_doc
 from repro.state.file_backend import FileBackend
-from repro.state.transport import (MAX_FRAME_BYTES, TRACE_FIELD,
+from repro.state.transport import (BATCH_EXCLUDED_OPS, BATCH_OP,
+                                   MAX_FRAME_BYTES, TRACE_FIELD,
                                    auth_frame, connect,
                                    default_auth_token, describe_address,
                                    parse_address, recv_frame, send_frame)
@@ -204,6 +224,12 @@ class CrispyDaemon:
         self._c_auth_failures = self.telemetry.counter(
             "daemon.auth_failures")
         self._c_compactions = self.telemetry.counter("daemon.compactions")
+        # sub-ops per {"op": "batch"} frame — the wire-coalescing ledger:
+        # mean batch size is how many round-trips each frame saved
+        self._h_batch_size = self.telemetry.histogram(
+            "daemon.batch.size",
+            buckets=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128,
+                     192, 256))
         # daemon.op.<op>.seconds histograms, created lazily on first use;
         # the plain-dict read is the lock-free fast path (a lost race just
         # calls the locking registry factory twice for the same name)
@@ -247,6 +273,8 @@ class CrispyDaemon:
 
     def _dispatch(self, op, req: Dict) -> Dict:
         b = self.backend
+        if op == BATCH_OP:
+            return self._dispatch_batch(req)
         if op in ("ping", "auth"):      # auth is a no-op once admitted
             return {"ok": True, "kind": b.kind}
         if op == "metrics":
@@ -313,6 +341,41 @@ class CrispyDaemon:
             threading.Thread(target=self.stop, daemon=True).start()
             return {"ok": True}
         return {"ok": False, "error": f"unknown op {op!r}"}
+
+    def _dispatch_batch(self, req: Dict) -> Dict:
+        """One {"op": "batch"} frame: execute the sub-ops in order with
+        per-op error isolation. Sub-ops skip the per-frame plumbing
+        (framing, trace adoption, frame counters are paid ONCE) but each
+        still lands in its own `daemon.op.<op>.seconds` histogram, so
+        per-op latency telemetry stays comparable across batched and
+        single-op clients."""
+        ops = req.get("ops")
+        if not isinstance(ops, list):
+            return {"ok": False,
+                    "error": "batch needs \"ops\": [frame, ...]"}
+        self._h_batch_size.observe(len(ops))
+        results: List[Dict] = []
+        for sub in ops:
+            if not isinstance(sub, dict):
+                results.append({"ok": False,
+                                "error": f"batch op is not a frame: "
+                                         f"{sub!r}"})
+                continue
+            sub_op = sub.get("op")
+            if sub_op in BATCH_EXCLUDED_OPS:
+                results.append({"ok": False,
+                                "error": f"op {sub_op!r} is not allowed "
+                                         f"inside a batch"})
+                continue
+            t0 = perf_counter()
+            try:
+                results.append(self._dispatch(sub_op, sub))
+            except Exception as e:      # isolation: one bad sub-op must
+                results.append({"ok": False,    # not fail its siblings
+                                "error": f"{type(e).__name__}: {e}"})
+            finally:
+                self._op_hist_for(sub_op).observe(perf_counter() - t0)
+        return {"ok": True, "results": results}
 
     # -- compaction / eviction thresholds -----------------------------------
     def _maybe_autocompact_locked(self, ns: str) -> None:
@@ -543,20 +606,37 @@ class DaemonBackend(StateBackend):
     `DaemonBackend("crispy-host:7421")` / `"tcp://host:port"` (tcp).
 
     One connection per thread (the AllocationService worker, profiling
-    executor workers and direct callers each get their own); a transport
-    error drops the connection and retries once, so clients fail over to
-    a daemon restarted on the same address. A daemon that stays down
-    raises `StateBackendUnavailable` naming the unix path or host:port —
-    callers see a clean, debuggable error, never a hang (socket ops are
-    bounded by `timeout_s`). When the daemon requires a shared token,
-    pass `auth_token=` or export $CRISPY_DAEMON_TOKEN; the client then
-    authenticates every fresh connection before its first request."""
+    executor workers and direct callers each get their own); connections
+    whose owning thread has exited are swept and closed on the next call
+    from any thread, so long-lived services with thread churn never
+    exhaust the daemon's connection slots. A transport error drops the
+    connection and retries once, so clients fail over to a daemon
+    restarted on the same address. A daemon that stays down raises
+    `StateBackendUnavailable` naming the unix path or host:port —
+    callers see a clean, debuggable error, never a hang: connects are
+    bounded by `timeout_s` and response reads by `read_timeout_s`
+    (default: `timeout_s`), so a daemon that accepts but never answers
+    surfaces a timeout error instead of wedging the service worker.
+    When the daemon requires a shared token, pass `auth_token=` or
+    export $CRISPY_DAEMON_TOKEN; the client then authenticates every
+    fresh connection before its first request.
+
+    Wire coalescing: `batch(ops)` executes N ops in ONE round trip via
+    the {"op": "batch"} frame (ordered results, per-op error isolation);
+    `pipeline()` returns a context manager that queues ordinary backend
+    calls and flushes them as pipelined legacy frames — N writes, one
+    socket flush, N reads — which works against daemons that predate the
+    batch op. The shared views coalesce automatically: see
+    `repro.profiling.store.refresh_views` (store tail-read + registry
+    doc get in one frame) and `ProfileStore(write_behind=True)` (profile
+    point/anchor write-through flushed as one batched append frame)."""
 
     kind = "daemon"
 
     def __init__(self, address: Optional[str] = None,
                  timeout_s: float = DEFAULT_TIMEOUT_S,
-                 auth_token: Optional[str] = None):
+                 auth_token: Optional[str] = None,
+                 read_timeout_s: Optional[float] = None):
         self.address = address or default_socket_path()
         self._parsed = parse_address(self.address)
         self.transport = self._parsed[0]          # "unix" | "tcp"
@@ -568,9 +648,16 @@ class DaemonBackend(StateBackend):
         self.socket_path = (self._parsed[1]
                             if self.transport == "unix" else None)
         self.timeout_s = timeout_s
+        self.read_timeout_s = (read_timeout_s if read_timeout_s is not None
+                               else timeout_s)
         self.auth_token = (auth_token if auth_token is not None
                            else default_auth_token())
         self._local = threading.local()
+        # every open (thread, sock, file) triple, for the dead-thread
+        # sweep + close(): per-thread caching alone leaks sockets when
+        # threads exit without closing (executor pools churn workers)
+        self._conn_registry: Dict[int, tuple] = {}
+        self._conn_lock = threading.Lock()
 
     def describe(self) -> str:
         return describe_address(self._parsed)
@@ -579,12 +666,39 @@ class DaemonBackend(StateBackend):
     def _files(self):
         files = getattr(self._local, "files", None)
         if files is None:
+            self._sweep_dead_threads()
             sock = connect(self._parsed, self.timeout_s)
+            if self.read_timeout_s != self.timeout_s:
+                sock.settimeout(self.read_timeout_s)
             files = (sock, sock.makefile("rwb"))
             self._local.files = files
+            with self._conn_lock:
+                self._conn_registry[threading.get_ident()] = \
+                    (threading.current_thread(), files)
             if self.auth_token is not None:
                 self._auth(files[1])
         return files
+
+    def _sweep_dead_threads(self) -> None:
+        """Close cached connections whose owning thread has exited —
+        their threading.local slots are unreachable, so without this
+        sweep every dead worker thread leaks one daemon connection for
+        the life of the process."""
+        with self._conn_lock:
+            dead = [ident for ident, (thread, _f) in
+                    self._conn_registry.items() if not thread.is_alive()]
+            victims = [self._conn_registry.pop(ident) for ident in dead]
+        for _thread, files in victims:
+            self._close_files(files)
+
+    @staticmethod
+    def _close_files(files) -> None:
+        sock, f = files
+        for closer in (f.close, sock.close):
+            try:
+                closer()
+            except OSError:
+                pass
 
     def _auth(self, f) -> None:
         send_frame(f, auth_frame(self.auth_token))
@@ -600,19 +714,27 @@ class DaemonBackend(StateBackend):
     def _drop(self) -> None:
         files = getattr(self._local, "files", None)
         self._local.files = None
+        with self._conn_lock:
+            self._conn_registry.pop(threading.get_ident(), None)
         if files is not None:
-            sock, f = files
-            for closer in (f.close, sock.close):
-                try:
-                    closer()
-                except OSError:
-                    pass
+            self._close_files(files)
 
     # ops safe to blindly resend: they mutate nothing server-side that a
     # duplicate could corrupt (`traces` with clear= drains telemetry, so
     # a resend loses at worst best-effort trace rows, never state)
     _IDEMPOTENT_OPS = frozenset({"ping", "read", "load", "metrics",
                                  "traces"})
+
+    def _retry_safe(self, payload: Dict) -> bool:
+        """May this fully-sent frame be resent on a fresh connection? A
+        batch frame is exactly as resendable as its least-resendable
+        sub-op."""
+        op = payload.get("op")
+        if op == BATCH_OP:
+            return all(isinstance(sub, dict)
+                       and sub.get("op") in self._IDEMPOTENT_OPS
+                       for sub in payload.get("ops") or ())
+        return op in self._IDEMPOTENT_OPS
 
     def _call(self, payload: Dict) -> Dict:
         op = payload.get("op")
@@ -640,6 +762,16 @@ class DaemonBackend(StateBackend):
                 return resp
             except StateBackendError:
                 raise                   # auth rejection / op rejection
+            except socket.timeout as e:
+                # the daemon accepted the frame but never answered (a
+                # wedged writer lock, a stuck disk): drop the connection
+                # and name the wedge — the caller must never hang
+                self._drop()
+                raise StateBackendUnavailable(
+                    f"crispy-daemon at {self.describe()} did not answer "
+                    f"{op} within {self.read_timeout_s}s (the operation "
+                    f"may or may not have been applied): "
+                    f"{e or 'timed out'}")
             except (OSError, ValueError, ConnectionError) as e:
                 self._drop()
                 last = e
@@ -650,7 +782,7 @@ class DaemonBackend(StateBackend):
                 # instead of retrying. Failures before the request went
                 # out (dead cached connection, connect refused) are
                 # always safe to retry on a fresh connection.
-                if sent and op not in self._IDEMPOTENT_OPS:
+                if sent and not self._retry_safe(payload):
                     raise StateBackendUnavailable(
                         f"crispy-daemon connection lost mid-{op} at "
                         f"{self.describe()} (the operation may or may "
@@ -694,6 +826,71 @@ class DaemonBackend(StateBackend):
         return {"before": resp["before"], "after": resp["after"],
                 "dropped": resp["dropped"]}
 
+    # -- wire coalescing -----------------------------------------------------
+
+    # leave the daemon headroom under MAX_FRAME_BYTES: the batch frame
+    # wraps the sub-ops in envelope JSON and may gain a trace field
+    _BATCH_BYTE_BUDGET = MAX_FRAME_BYTES // 2
+
+    def batch(self, ops: Sequence[Dict]) -> List[Dict]:
+        """Execute N ops in ONE {"op": "batch"} round trip: ordered
+        wire-shaped results, per-op error isolation (a failing sub-op
+        yields its {"ok": false} slot without aborting the rest — this
+        method raises only on transport/frame failures). Oversized
+        batches are split into successive frames, each well under the
+        daemon's 8 MiB line cap, preserving op order across chunks.
+        Reconnect-retry follows `_call`'s single-op rule: a batch frame
+        is resent only when EVERY sub-op is idempotent."""
+        results: List[Dict] = []
+        for chunk in self._chunk_ops(list(ops)):
+            resp = self._call({"op": BATCH_OP, "ops": chunk})
+            got = resp.get("results")
+            if not isinstance(got, list) or len(got) != len(chunk):
+                raise StateBackendError(
+                    f"daemon at {self.describe()} returned "
+                    f"{len(got) if isinstance(got, list) else 'no'} "
+                    f"batch results for {len(chunk)} ops")
+            results.extend(got)
+        return results
+
+    def _chunk_ops(self, ops: List[Dict]) -> List[List[Dict]]:
+        """Split a batch so each frame stays under _BATCH_BYTE_BUDGET
+        serialized (single over-budget ops still go out alone — the
+        daemon's frame cap is the real enforcement boundary)."""
+        chunks: List[List[Dict]] = []
+        current: List[Dict] = []
+        used = 0
+        for op in ops:
+            size = len(json.dumps(op)) + 2       # +2 for ", " separators
+            if current and used + size > self._BATCH_BYTE_BUDGET:
+                chunks.append(current)
+                current, used = [], 0
+            current.append(op)
+            used += size
+        if current:
+            chunks.append(current)
+        return chunks
+
+    def pipeline(self) -> "_DaemonPipeline":
+        """Context manager that queues ordinary single-op frames and
+        flushes them as a pipelined burst on exit — N request lines
+        written with ONE socket flush, then N responses read in order.
+        Works against daemons that predate the batch op (the server
+        answers strictly in order per connection, so no protocol change
+        is needed). Queued calls return handles whose `.result()` is
+        valid after the `with` block:
+
+            with backend.pipeline() as p:
+                h1 = p.read("profiles", cursor)
+                h2 = p.load("registry", "records")
+            rows, cur = h1.result()["rows"], h1.result()["cursor"]
+
+        A transport failure mid-flush raises `StateBackendUnavailable`
+        when any non-idempotent op may have reached the daemon (same
+        ambiguity rule as `_call`); a failure before any byte went out
+        retries once on a fresh connection."""
+        return _DaemonPipeline(self)
+
     def evict_registry(self, ns: str = REGISTRY_NS, key: str = REGISTRY_KEY,
                        max_records: Optional[int] = None,
                        max_age_s: Optional[float] = None) -> List[str]:
@@ -728,7 +925,166 @@ class DaemonBackend(StateBackend):
         self._drop()
 
     def close(self) -> None:
-        self._drop()
+        """Close EVERY cached connection, not just the calling thread's:
+        a service shutting down must release all its daemon slots even
+        for worker threads that are still parked in a pool. Surviving
+        threads that call again after close() reconnect transparently
+        (their first attempt fails on the closed socket and `_call`
+        retries on a fresh connection)."""
+        self._local.files = None
+        with self._conn_lock:
+            victims = list(self._conn_registry.values())
+            self._conn_registry.clear()
+        for _thread, files in victims:
+            self._close_files(files)
+
+
+class _PipelineHandle:
+    """Future-like result slot for one pipelined op (see
+    `DaemonBackend.pipeline`). `.result()` returns the wire-shaped
+    response dict ({"ok": true, "rows": ...} etc.) once the pipeline
+    has flushed; a rejected op raises StateBackendError there, so one
+    bad op never poisons its neighbors' results."""
+
+    __slots__ = ("op", "_resp", "_error", "_done")
+
+    def __init__(self, op: str):
+        self.op = op
+        self._resp: Optional[Dict] = None
+        self._error: Optional[Exception] = None
+        self._done = False
+
+    def _resolve(self, resp: Optional[Dict], error: Optional[Exception]):
+        self._resp, self._error, self._done = resp, error, True
+
+    def result(self) -> Dict:
+        if not self._done:
+            raise StateBackendError(
+                f"pipelined {self.op} has not been flushed yet — read "
+                f"results after the `with backend.pipeline()` block")
+        if self._error is not None:
+            raise self._error
+        return self._resp
+
+
+class _DaemonPipeline:
+    """Queues single-op frames and flushes them as one write burst (see
+    `DaemonBackend.pipeline`). Not thread-safe — a pipeline belongs to
+    the thread that opened it, like the connection it rides on."""
+
+    def __init__(self, backend: DaemonBackend):
+        self._backend = backend
+        self._queue: List[Tuple[Dict, _PipelineHandle]] = []
+        self._flushed = False
+
+    # -- queuing (mirrors the backend's protocol surface) -------------------
+    def call(self, payload: Dict) -> _PipelineHandle:
+        if self._flushed:
+            raise StateBackendError("pipeline already flushed")
+        handle = _PipelineHandle(str(payload.get("op")))
+        self._queue.append((dict(payload), handle))
+        return handle
+
+    def ping(self) -> _PipelineHandle:
+        return self.call({"op": "ping"})
+
+    def append(self, ns: str, record: Dict) -> _PipelineHandle:
+        return self.call({"op": "append", "ns": ns, "record": record})
+
+    def read(self, ns: str, cursor: int = 0) -> _PipelineHandle:
+        return self.call({"op": "read", "ns": ns, "cursor": cursor})
+
+    def load(self, ns: str, key: str) -> _PipelineHandle:
+        return self.call({"op": "load", "ns": ns, "key": key})
+
+    def cas(self, ns: str, key: str, version: int,
+            value: Dict) -> _PipelineHandle:
+        return self.call({"op": "cas", "ns": ns, "key": key,
+                          "version": version, "value": value})
+
+    def reserve(self, ns: str, key: str, deltas: Dict[str, float],
+                limits: Optional[Dict[str, float]] = None
+                ) -> _PipelineHandle:
+        return self.call({"op": "reserve", "ns": ns, "key": key,
+                          "deltas": deltas, "limits": limits or {}})
+
+    # -- flush ---------------------------------------------------------------
+    def __enter__(self) -> "_DaemonPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.flush()
+
+    def flush(self) -> None:
+        """Write every queued frame, one socket flush, then read the
+        responses in order and resolve the handles."""
+        if self._flushed:
+            return
+        self._flushed = True
+        if not self._queue:
+            return
+        backend = self._backend
+        ctx = current_trace_context()
+        payloads = []
+        for payload, _h in self._queue:
+            if ctx is not None:
+                payload = dict(payload, **{TRACE_FIELD: ctx})
+            payloads.append(payload)
+        all_idempotent = all(backend._retry_safe(p) for p in payloads)
+        last: Optional[Exception] = None
+        for attempt in range(2):
+            sent = False
+            try:
+                _sock, f = backend._files()
+                blob = b"".join((json.dumps(p) + "\n").encode()
+                                for p in payloads)
+                f.write(blob)
+                f.flush()
+                sent = True
+                for payload, handle in self._queue:
+                    resp = recv_frame(f)
+                    if resp is None:
+                        raise ConnectionError(
+                            "daemon closed the connection mid-pipeline")
+                    if not resp.get("ok"):
+                        handle._resolve(None, StateBackendError(
+                            f"daemon at {backend.describe()} rejected "
+                            f"{handle.op}: {resp.get('error')}"))
+                    else:
+                        handle._resolve(resp, None)
+                return
+            except socket.timeout as e:
+                backend._drop()
+                err = StateBackendUnavailable(
+                    f"crispy-daemon at {backend.describe()} did not "
+                    f"answer a pipelined burst of {len(self._queue)} ops "
+                    f"within {backend.read_timeout_s}s (the operations "
+                    f"may or may not have been applied): "
+                    f"{e or 'timed out'}")
+                self._fail_unresolved(err)
+                raise err
+            except (OSError, ValueError, ConnectionError) as e:
+                backend._drop()
+                last = e
+                if sent and not all_idempotent:
+                    err = StateBackendUnavailable(
+                        f"crispy-daemon connection lost mid-pipeline at "
+                        f"{backend.describe()} (some of the "
+                        f"{len(self._queue)} queued operations may have "
+                        f"been applied): {e}")
+                    self._fail_unresolved(err)
+                    raise err
+        err = StateBackendUnavailable(
+            f"crispy-daemon unreachable at {self._backend.describe()}: "
+            f"{last}")
+        self._fail_unresolved(err)
+        raise err
+
+    def _fail_unresolved(self, error: Exception) -> None:
+        for _payload, handle in self._queue:
+            if not handle._done:
+                handle._resolve(None, error)
 
 
 def main(argv: Optional[List[str]] = None) -> int:

@@ -37,6 +37,27 @@ framing over TCP, so this module owns everything both transports share:
               without it — i.e. every frame an old client sends — takes
               the exact pre-tracing code path and gets byte-identical
               responses.
+
+  batching    {"op": "batch", "ops": [<frame>, ...]} (BATCH_OP) carries
+              N sub-op frames in ONE round trip. The response is
+              {"ok": true, "results": [<resp>, ...]} with exactly one
+              result per sub-op, in order. Sub-op failures are isolated:
+              a failing sub-op yields its own {"ok": false, "error": ..}
+              slot and the remaining sub-ops still execute. Connection-
+              scoped ops (`auth`) and frame-scoped ones (`batch` itself,
+              `shutdown`) may not nest inside a batch. A frame-level
+              `trace` field covers the whole batch (one adopted
+              `daemon.op.batch` span; sub-ops are timed into their own
+              `daemon.op.<op>.seconds` histograms). Like the trace
+              field, the batch op is strictly additive: frames without
+              it take the exact legacy single-op path, byte-identical
+              (pinned by test_state_conformance).
+
+              Clients may also PIPELINE legacy single-op frames: write
+              N request lines before reading the N responses. The
+              daemon answers strictly in order on each connection, so
+              pipelining needs no protocol change and works against any
+              daemon version (`DaemonBackend.pipeline()`).
 """
 from __future__ import annotations
 
@@ -49,6 +70,15 @@ AUTH_TOKEN_ENV = "CRISPY_DAEMON_TOKEN"
 
 # optional per-frame trace-propagation field (see module docstring)
 TRACE_FIELD = "trace"
+
+# multi-op frame: {"op": BATCH_OP, "ops": [...]} -> {"ok": true,
+# "results": [...]} (see module docstring)
+BATCH_OP = "batch"
+
+# ops that must not appear INSIDE a batch frame: auth is connection
+# state, shutdown tears the connection down mid-frame, and nesting
+# batches would unbound the per-frame work a single line can demand
+BATCH_EXCLUDED_OPS = frozenset({"auth", BATCH_OP, "shutdown"})
 
 # parsed address forms: ("unix", path) | ("tcp", (host, port))
 Address = Tuple[str, Union[str, Tuple[str, int]]]

@@ -108,8 +108,12 @@ Where each span/metric hangs (the observability map):
                        `service.metrics()` returns the snapshot;
                        `AllocationEndpoint.metrics()` is the wire form.
   CrispyDaemon         histograms `daemon.op.<op>.seconds` per request
-  (repro.state)        op; counters `daemon.{frames,bytes_in,auth_
-                       failures,compactions}`. Served over BOTH
+  (repro.state)        op — batch frames time each sub-op into the same
+                       histograms and record their width (ops per
+                       frame) in `daemon.batch.size`; counters
+                       `daemon.{frames,bytes_in,auth_
+                       failures,compactions}` (a batch frame counts
+                       once in `daemon.frames`). Served over BOTH
                        transports as the `{"op": "metrics"}` wire op
                        (`DaemonBackend.metrics()`), and optionally
                        auto-published to the daemon's own backend with

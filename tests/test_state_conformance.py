@@ -13,7 +13,12 @@ implementation detail. Covered contract:
   * `reserve` never over-grants an envelope, under thread contention;
   * compaction: folding keeps the LAST row per identity, tombstoned
     identities stay dead (through compaction AND for stale cursors),
-    generic rows never fold, cursors stay monotone across a compact.
+    generic rows never fold, cursors stay monotone across a compact;
+  * `batch`: ordered per-op results, a batch reads its own earlier
+    writes, per-op failures are isolated, tombstones stay visible
+    through batched reads, auth still gates the whole frame on TCP —
+    and frames WITHOUT the batch op stay byte-identical to the legacy
+    single-op protocol (pinned below).
 
 Property-based variants run when hypothesis is installed; deterministic
 seeded equivalents always run, so tier-1 does not require hypothesis.
@@ -350,7 +355,231 @@ def test_cas_versions_monotone_hypothesis():
     run()
 
 
+# -- batched ops --------------------------------------------------------------
+
+
+def test_batch_ordering_and_reads_own_writes(backend):
+    """One batch: results come back one per op, in order, and a read
+    later in the batch observes the batch's own earlier appends."""
+    results = backend.batch([
+        {"op": "append", "ns": "blog", "record": {"i": 0}},
+        {"op": "append", "ns": "blog", "record": {"i": 1}},
+        {"op": "read", "ns": "blog", "cursor": 0},
+        {"op": "cas", "ns": "bdocs", "key": "k", "version": 0,
+         "value": {"a": 1}},
+        {"op": "load", "ns": "bdocs", "key": "k"},
+        {"op": "reserve", "ns": "bd", "key": "env", "deltas": {"points": 1},
+         "limits": {"points": 2.0}},
+    ])
+    assert len(results) == 6
+    assert all(r["ok"] for r in results)
+    assert [r["i"] for r in results[2]["rows"]] == [0, 1]
+    # cursors are backend-opaque; the batched read must land on the
+    # same caught-up cursor a single-op read reports
+    assert results[2]["cursor"] == backend.read("blog")[1]
+    assert results[3]["won"] and results[3]["version"] == 1
+    assert results[4] == {"ok": True, "value": {"a": 1}, "version": 1}
+    assert results[5]["granted"] and results[5]["doc"]["points"] == 1.0
+    # the batch's writes are durable for ordinary single-op reads
+    assert [r["i"] for r in backend.read("blog")[0]] == [0, 1]
+    assert backend.load("bdocs", "k") == ({"a": 1}, 1)
+
+
+def test_batch_partial_failure_isolation(backend):
+    """A failing op yields its own error slot; neighbors before AND
+    after it still execute."""
+    results = backend.batch([
+        {"op": "append", "ns": "flog", "record": {"i": 0}},
+        {"op": "nope"},
+        "not-even-a-dict",
+        {"op": "append", "ns": "flog", "record": {"i": 1}},
+        {"op": "read", "ns": "flog", "cursor": 0},
+    ])
+    assert len(results) == 5
+    assert results[0]["ok"] and results[3]["ok"]
+    assert not results[1]["ok"] and "nope" in results[1]["error"]
+    assert not results[2]["ok"]
+    assert [r["i"] for r in results[4]["rows"]] == [0, 1]
+
+
+def test_batch_empty_is_a_valid_noop(backend):
+    assert backend.batch([]) == []
+
+
+def test_tombstones_visible_through_batched_reads(backend):
+    """An eviction tombstone appended via batch stays the identity's
+    last word for batched readers, through compaction included."""
+    results = backend.batch([
+        {"op": "append", "ns": "tlog",
+         "record": {"kind": "profile", "sig": "x", "size": 1.0}},
+        {"op": "append", "ns": "tlog",
+         "record": {"kind": "profile", "sig": "x", "size": 1.0,
+                    "tombstone": True}},
+        {"op": "compact", "ns": "tlog",
+         "key_fields": ["kind", "sig", "size"]},
+        {"op": "read", "ns": "tlog", "cursor": 0},
+    ])
+    assert all(r["ok"] for r in results)
+    assert results[2]["after"] == 1          # folded to the tombstone
+    rows = results[3]["rows"]
+    assert [bool(r.get("tombstone")) for r in rows] == [True]
+
+
+def test_batch_rejects_nested_and_connection_scoped_ops(backend):
+    """auth / shutdown / batch may not ride inside a batch — each gets
+    an error slot, state-changing neighbors still run."""
+    if backend.kind != "daemon":
+        pytest.skip("connection-scoped ops exist only on the daemon")
+    excluded = [{"op": "auth", "token": "x"},
+                {"op": "batch", "ops": []},
+                {"op": "shutdown"}]
+    results = backend.batch(
+        excluded + [{"op": "append", "ns": "xlog", "record": {"i": 7}}])
+    for r in results[:-1]:
+        assert not r["ok"] and "not allowed inside a batch" in r["error"]
+    assert results[-1]["ok"]
+    assert backend.read("xlog")[0] == [{"i": 7}]
+
+
+def test_auth_gates_batch_frames_on_tcp():
+    """An unauthenticated TCP connection cannot smuggle writes inside a
+    batch frame: the whole frame is rejected before dispatch."""
+    import json as _json
+    with CrispyDaemon(listen="127.0.0.1:0", auth_token=AUTH_TOKEN) as d:
+        host, port = d.tcp_address.rsplit(":", 1)
+        raw = socket.create_connection((host, int(port)), timeout=5.0)
+        try:
+            raw.sendall(_json.dumps(
+                {"op": "batch",
+                 "ops": [{"op": "append", "ns": "log",
+                          "record": {"sneak": 1}}]}).encode() + b"\n")
+            resp = _json.loads(raw.makefile("rb").readline())
+            assert resp["ok"] is False
+        finally:
+            raw.close()
+        good = DaemonBackend(d.tcp_address, auth_token=AUTH_TOKEN)
+        assert good.read("log")[0] == []        # nothing snuck in
+        # and an authenticated client's batch works over TCP
+        results = good.batch([
+            {"op": "append", "ns": "log", "record": {"i": 1}},
+            {"op": "read", "ns": "log", "cursor": 0}])
+        assert results[1]["rows"] == [{"i": 1}]
+        good.close()
+
+
+# -- legacy frames stay byte-identical ----------------------------------------
+
+
+@pytest.mark.skipif(not HAS_UNIX, reason="unix-domain sockets unavailable")
+def test_legacy_frames_byte_identical_pin():
+    """The pre-batching wire protocol, pinned byte for byte: a frame
+    without the batch op (or trace field) must produce EXACTLY the
+    response bytes the legacy daemon produced — old clients never see
+    the new protocol."""
+    pinned = [
+        (b'{"op": "ping"}\n',
+         b'{"ok": true, "kind": "memory"}\n'),
+        (b'{"op": "append", "ns": "log", "record": {"i": 1}}\n',
+         b'{"ok": true}\n'),
+        (b'{"op": "read", "ns": "log", "cursor": 0}\n',
+         b'{"ok": true, "rows": [{"i": 1}], "cursor": 1}\n'),
+        (b'{"op": "load", "ns": "docs", "key": "k"}\n',
+         b'{"ok": true, "value": null, "version": 0}\n'),
+        (b'{"op": "cas", "ns": "docs", "key": "k", "version": 0, '
+         b'"value": {"a": 1}}\n',
+         b'{"ok": true, "won": true, "value": {"a": 1}, "version": 1}\n'),
+        (b'{"op": "reserve", "ns": "d", "key": "b", '
+         b'"deltas": {"points": 1}, "limits": {"points": 2.0}}\n',
+         b'{"ok": true, "granted": true, "doc": {"points": 1.0}}\n'),
+        (b'{"op": "compact", "ns": "log"}\n',
+         b'{"ok": true, "before": 1, "after": 1, "dropped": 0}\n'),
+        (b'{"op": "evict_registry", "ns": "registry", "key": "records"}\n',
+         b'{"ok": true, "evicted": []}\n'),
+        (b'{"op": "nope"}\n',
+         b'{"ok": false, "error": "unknown op \'nope\'"}\n'),
+    ]
+    sock_path = _short_socket()
+    with CrispyDaemon(sock_path):
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        s.settimeout(5.0)
+        s.connect(sock_path)
+        try:
+            f = s.makefile("rb")
+            for request, expected in pinned:
+                s.sendall(request)
+                assert f.readline() == expected, request
+        finally:
+            s.close()
+
+
 # -- daemon-transport specifics ----------------------------------------------
+
+
+def test_daemon_read_timeout_surfaces_unavailable_not_hang():
+    """A daemon that accepts but never replies must surface
+    StateBackendUnavailable within the read timeout, not wedge the
+    caller forever."""
+    listener = socket.socket()
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    host, port = listener.getsockname()
+    accepted = []
+
+    def acceptor():
+        try:
+            conn, _ = listener.accept()
+            accepted.append(conn)           # read nothing, reply nothing
+        except OSError:
+            pass
+
+    t = threading.Thread(target=acceptor, daemon=True)
+    t.start()
+    client = DaemonBackend(f"{host}:{port}", timeout_s=5.0,
+                           read_timeout_s=0.4)
+    try:
+        with pytest.raises(StateBackendUnavailable) as e:
+            client.read("log")
+        assert "did not answer" in str(e.value)
+        assert "0.4" in str(e.value)
+    finally:
+        client.close()
+        for conn in accepted:
+            conn.close()
+        listener.close()
+        t.join(timeout=2.0)
+
+
+def test_daemon_backend_sweeps_dead_thread_connections():
+    """Connections cached for exited threads are closed on the next call
+    from any thread (the per-thread-cache leak), and close() releases
+    every live connection too."""
+    sock = _short_socket()
+    if not HAS_UNIX:
+        pytest.skip("unix-domain sockets unavailable")
+    with CrispyDaemon(sock):
+        client = DaemonBackend(sock)
+
+        barrier = threading.Barrier(4)
+
+        def worker():
+            barrier.wait()          # all four connect concurrently, so
+            assert client.ping()    # no worker's connect sweeps another
+            barrier.wait()
+
+        threads = [threading.Thread(target=worker) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # 4 dead threads' connections are still cached...
+        assert len(client._conn_registry) == 4
+        dead_socks = [files[0] for _t, files in
+                      client._conn_registry.values()]
+        assert client.ping()                 # ...until any call sweeps them
+        assert len(client._conn_registry) == 1
+        assert all(s.fileno() == -1 for s in dead_socks)
+        client.close()
+        assert len(client._conn_registry) == 0
 
 
 def test_daemon_connect_error_names_the_unix_path():
