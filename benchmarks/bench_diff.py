@@ -137,13 +137,16 @@ def main(argv=None) -> int:
     print(_format_table(rows, args.markdown))
     worst_tp = min(comparable, key=lambda r: r["throughput_pct"])
     worst_p99 = max(comparable, key=lambda r: r["p99_pct"])
+    uncompared = len(rows) - len(comparable)
     summary = (f"{len(comparable)} rows compared; worst throughput "
                f"{worst_tp['throughput_pct']:+.1f}% "
                f"({worst_tp['backend']}/{worst_tp['tier']} "
                f"x{worst_tp['threads']}), worst p99 "
                f"{worst_p99['p99_pct']:+.1f}% "
                f"({worst_p99['backend']}/{worst_p99['tier']} "
-               f"x{worst_p99['threads']})")
+               f"x{worst_p99['threads']})"
+               + (f"; {uncompared} row(s) present on one side only "
+                  f"(new/retired tiers never gate)" if uncompared else ""))
     print(("\n**" + summary + "**") if args.markdown else ("\n" + summary))
     if regressed:
         bad = [r for r in rows if r["status"] == "REGRESSED"]

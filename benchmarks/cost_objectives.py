@@ -1,0 +1,143 @@
+"""Selection objectives compared: cheapest_fit vs min_cost vs min_runtime.
+
+Crispy's selection (objective="cheapest_fit") picks the cheapest config
+whose memory fits — but the follow-up work (arXiv:2306.03672) shows the
+real objective is cost = price × predicted runtime. This benchmark drives
+the SAME unified pipeline (repro.pipeline) over synthetic jobs whose
+memory curve is cleanly linear (the memory gate passes everywhere) while
+the RUNTIME curve varies:
+
+  linear       wall ∝ size — scaling out buys runtime almost linearly, so
+               the cost ranking is close to the price ranking.
+  superlinear  wall ∝ size^1.35 — the full-size runtime dominates, and
+               paying for a big BFA-favored cluster is cost-inefficient:
+               min_cost picks a *cheaper* config at equal-or-lower
+               predicted cost.
+
+Per job × objective: selected config, $/h, predicted runtime and cost
+(the runtime companion model is fit from the ladder's per-point wall
+times; objectives degrade to cheapest_fit when it is unconfident).
+
+Asserted here (the PR's acceptance criterion): on the superlinear job
+min_cost selects a config with strictly lower $/h than cheapest_fit at
+equal-or-lower predicted cost.
+
+Final CSV line: cost_objectives,<us_per_alloc>,<price_ratio>
+(price_ratio = min_cost $/h ÷ cheapest_fit $/h on the superlinear job).
+"""
+from __future__ import annotations
+
+import math
+import time
+import zlib
+
+import numpy as np
+
+from repro.core.catalog import aws_like_catalog
+from repro.core.profiler import ProfileResult
+from repro.core.sampling import ladder_from_anchor
+from repro.core.selector import (OBJECTIVES, predicted_cost_usd,
+                                 predicted_runtime_s)
+from repro.core.simulator import build_history
+from repro.pipeline import AllocationPipeline, PipelineRequest
+
+GiB = 1024 ** 3
+FULL = 1e11                     # bytes; ladder anchored at 1% of full size
+
+# name, mem(size) -> bytes, wall(size) -> seconds
+JOBS = [
+    ("runtime/linear", lambda s: 0.9 * s + 1.6e9,
+     lambda s: 20.0 + 4e-8 * s),
+    ("runtime/superlinear", lambda s: 0.9 * s + 1.6e9,
+     lambda s: 1e-11 * s ** 1.35),
+]
+
+
+def profile_fn(name, mem_fn, wall_fn):
+    def profile_at(size: float) -> ProfileResult:
+        # deterministic per (job, size): every objective pass measures
+        # the exact same world (crc32: stable across interpreters)
+        rng = np.random.default_rng(
+            zlib.crc32(f"{name}|{round(size)}".encode()))
+        mem = mem_fn(size) * (1.0 + rng.normal(0.0, 0.002))
+        return ProfileResult(size, max(mem, 0.0), 0.0, wall_fn(size))
+    return profile_at
+
+
+def run(verbose: bool = True):
+    catalog = aws_like_catalog()
+    history = build_history()
+    ladder = ladder_from_anchor(FULL * 0.01).sizes
+    rows = {}
+    wall_us = []
+    for name, mem_fn, wall_fn in JOBS:
+        rows[name] = {}
+        for objective in OBJECTIVES:
+            pipeline = AllocationPipeline(catalog, history)
+            t0 = time.monotonic()
+            trace = pipeline.run(PipelineRequest(
+                name, profile_fn(name, mem_fn, wall_fn), FULL,
+                sizes=list(ladder), exclude_job_in_history=False,
+                objective=objective))
+            wall_us.append((time.monotonic() - t0) * 1e6)
+            sel = trace.selection
+            rows[name][objective] = {
+                "selection": sel,
+                "runtime_model": trace.plan.runtime_fit,
+            }
+            if verbose:
+                rt = (f"{sel.predicted_runtime_s:9.1f}s"
+                      if sel.predicted_runtime_s is not None else
+                      "        —")
+                cost = (f"${sel.predicted_cost_usd:7.3f}"
+                        if sel.predicted_cost_usd is not None else
+                        "      —")
+                print(f"{name:22s} {objective:12s} "
+                      f"{sel.config.name:16s} "
+                      f"${sel.config.usd_per_hour:6.2f}/h  "
+                      f"runtime={rt}  cost={cost}"
+                      + ("  [fell back]" if sel.objective_fell_back
+                         else ""))
+    return rows, wall_us
+
+
+def main() -> None:
+    rows, wall_us = run(verbose=True)
+
+    sup = rows["runtime/superlinear"]
+    cheap_sel = sup["cheapest_fit"]["selection"]
+    cost_sel = sup["min_cost"]["selection"]
+    rt_model = sup["min_cost"]["runtime_model"]
+    assert rt_model is not None and rt_model.confident, \
+        "runtime companion fit must be confident on the clean job"
+    assert not cost_sel.objective_fell_back, cost_sel
+    # what min_cost avoided paying: the predicted cost of cheapest_fit's
+    # pick under the SAME runtime model
+    cheap_rt = predicted_runtime_s(rt_model, FULL, cheap_sel.config)
+    cheap_cost = predicted_cost_usd(cheap_rt, cheap_sel.config)
+    assert cost_sel.config.usd_per_hour < cheap_sel.config.usd_per_hour, \
+        (cost_sel.config.name, cheap_sel.config.name)
+    assert cost_sel.predicted_cost_usd <= cheap_cost + 1e-9, \
+        (cost_sel.predicted_cost_usd, cheap_cost)
+    price_ratio = (cost_sel.config.usd_per_hour
+                   / cheap_sel.config.usd_per_hour)
+    print(f"\nsuperlinear job: cheapest_fit {cheap_sel.config.name} "
+          f"(${cheap_sel.config.usd_per_hour:.2f}/h, predicted "
+          f"${cheap_cost:.3f}) -> min_cost {cost_sel.config.name} "
+          f"(${cost_sel.config.usd_per_hour:.2f}/h, predicted "
+          f"${cost_sel.predicted_cost_usd:.3f})")
+
+    # min_runtime never predicts slower than min_cost (it optimizes it)
+    lin = rows["runtime/linear"]
+    for jrows in (sup, lin):
+        mr = jrows["min_runtime"]["selection"]
+        mc = jrows["min_cost"]["selection"]
+        if not (mr.objective_fell_back or mc.objective_fell_back):
+            assert mr.predicted_runtime_s <= mc.predicted_runtime_s + 1e-9
+
+    us = sum(wall_us) / len(wall_us) if wall_us else 0.0
+    print(f"cost_objectives,{us:.1f},{price_ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.load_tiers",
     "benchmarks.profiling_adaptive",
     "benchmarks.point_placement",
+    "benchmarks.cost_objectives",
     "benchmarks.state_backends",
     "benchmarks.planner_validation",
     "benchmarks.roofline_table",

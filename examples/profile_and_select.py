@@ -12,14 +12,23 @@ information-optimal default — `placement="infogain"` profiles whichever
 size is expected to shrink candidate-model disagreement at full size the
 most, and stops when more measurement would not change the answer.
 
+A third pass shows the objective axis: the same ladder's wall times feed
+a runtime companion fit, and `objective="min_cost"` ranks the memory-
+feasible configs by $/h x predicted runtime instead of price alone
+(cheapest fit). On a superlinear-runtime job the cost-optimal config is
+*cheaper per hour* than the cheapest-fit pick; whenever the runtime fit
+is unconfident every objective degrades to cheapest_fit, so the answer
+is never worse than the paper's.
+
   PYTHONPATH=src python examples/profile_and_select.py
 """
 from repro.allocator.model_zoo import zoo_fitter
 from repro.core.catalog import aws_like_catalog
 from repro.core.memory_model import fit_memory_model
 from repro.core.local_jobs import LOCAL_JOBS
-from repro.core.profiler import RSSProfiler
+from repro.core.profiler import ProfileResult, RSSProfiler
 from repro.core.sampling import ladder_from_anchor
+from repro.core.selector import OBJECTIVES
 from repro.core.simulator import build_history
 from repro.pipeline import AllocationPipeline, PipelineRequest
 from repro.profiling import ProfilingBudget
@@ -90,6 +99,38 @@ def main():
         print(f"budget: {snap['points_spent']} points, "
               f"{snap['elapsed_s']:.1f}/{snap['wall_s']:.0f}s elapsed, "
               f"{snap['denials']} denials")
+
+    # -- objective axis: cost-optimal vs cheapest-fit ----------------------
+    # a synthetic job whose memory curve is cleanly linear (every config's
+    # memory gate answers the same) while runtime grows superlinearly —
+    # exactly where "cheapest config that fits" and "cheapest total run"
+    # disagree. benchmarks/cost_objectives.py measures this at scale.
+    print("\n== selection objectives (superlinear-runtime job) ==")
+    full = 1e11
+
+    def synthetic_profile(size):
+        return ProfileResult(size, 0.9 * size + 1.6e9, 0.0,
+                             1e-11 * size ** 1.35)
+
+    objective_pipeline = AllocationPipeline(catalog, history,
+                                            overhead_per_node_gib=2.0,
+                                            fitter=zoo_fitter())
+    print(f"{'objective':14s} {'selected':>16s} {'$/h':>7s} "
+          f"{'pred runtime':>12s} {'pred cost':>10s}")
+    for objective in OBJECTIVES:
+        trace = objective_pipeline.run(PipelineRequest(
+            "example/superlinear", synthetic_profile, full,
+            sizes=ladder_from_anchor(full * 0.01).sizes,
+            exclude_job_in_history=False, objective=objective))
+        sel = trace.selection
+        rt = (f"{sel.predicted_runtime_s:10.1f}s"
+              if sel.predicted_runtime_s is not None else "         —")
+        cost = (f"${sel.predicted_cost_usd:8.3f}"
+                if sel.predicted_cost_usd is not None else "        —")
+        print(f"{objective:14s} {sel.config.name:>16s} "
+              f"{sel.config.usd_per_hour:7.2f} {rt:>12s} {cost:>10s}"
+              + ("  [fell back to cheapest_fit]"
+                 if sel.objective_fell_back else ""))
 
 
 if __name__ == "__main__":

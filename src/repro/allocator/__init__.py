@@ -56,8 +56,15 @@ from repro.allocator.classifier import (Classification, NearestJobClassifier,
 from repro.allocator.model_zoo import (DEFAULT_CANDIDATES, LOOCV_GATE,
                                        LogLinearModel, MODEL_KINDS,
                                        PiecewiseLinearModel, PowerLawModel,
-                                       ZooFit, fit_zoo, model_from_dict,
-                                       model_to_dict, zoo_fitter)
+                                       RUNTIME_CANDIDATES,
+                                       RUNTIME_LOOCV_GATE, RUNTIME_R2_GATE,
+                                       RuntimeFit, RuntimeLinearModel,
+                                       RuntimeLogLinearModel,
+                                       RuntimePiecewiseLinearModel,
+                                       RuntimePowerLawModel, ZooFit,
+                                       fit_runtime_zoo, fit_zoo,
+                                       model_from_dict, model_to_dict,
+                                       zoo_fitter)
 from repro.allocator.registry import ModelRecord, ModelRegistry
 from repro.allocator.service import (AllocationRequest, AllocationResponse,
                                      AllocationService, ServiceStats)
@@ -66,8 +73,11 @@ __all__ = [
     "AllocationRequest", "AllocationResponse", "AllocationService",
     "Classification", "DEFAULT_CANDIDATES", "LOOCV_GATE", "LogLinearModel",
     "MODEL_KINDS", "ModelRecord", "ModelRegistry", "NearestJobClassifier",
-    "PiecewiseLinearModel", "PowerLawModel", "ServiceStats", "TAG_WEIGHT",
-    "ZooFit", "feature_distance", "fit_zoo", "model_from_dict",
-    "model_to_dict", "profile_features", "runtime_features", "tag_distance",
-    "zoo_fitter",
+    "PiecewiseLinearModel", "PowerLawModel", "RUNTIME_CANDIDATES",
+    "RUNTIME_LOOCV_GATE", "RUNTIME_R2_GATE", "RuntimeFit",
+    "RuntimeLinearModel", "RuntimeLogLinearModel",
+    "RuntimePiecewiseLinearModel", "RuntimePowerLawModel", "ServiceStats",
+    "TAG_WEIGHT", "ZooFit", "feature_distance", "fit_runtime_zoo",
+    "fit_zoo", "model_from_dict", "model_to_dict", "profile_features",
+    "runtime_features", "tag_distance", "zoo_fitter",
 ]

@@ -188,11 +188,66 @@ class _LinearCandidate:
 DEFAULT_CANDIDATES: Tuple = (_LinearCandidate, LogLinearModel,
                              PowerLawModel, PiecewiseLinearModel)
 
+
+# --------------------------------------------------------------------------
+# Runtime curves (arXiv:2306.03672): the same candidate families fit the
+# per-point wall times the profiling ladder already measures. Runtime feeds
+# a *ranking* (cost = price × predicted runtime), not a provisioning
+# decision, so its train gate is looser than the paper's memory gate — a
+# mis-ranked config wastes dollars, a mis-provisioned one OOMs.
+# --------------------------------------------------------------------------
+
+RUNTIME_R2_GATE = 0.95
+RUNTIME_LOOCV_GATE = 0.10
+
+
+class _RuntimeGate:
+    """Mixin (MRO-first) relaxing the train gate for runtime candidates."""
+
+    @property
+    def confident(self) -> bool:
+        return self.r2 > RUNTIME_R2_GATE
+
+
+@dataclass
+class RuntimeLinearModel(_RuntimeGate, LinearMemoryModel):
+    kind: ClassVar[str] = "runtime_linear"
+
+    @classmethod
+    def fit(cls, sizes: Sequence[float],
+            mems: Sequence[float]) -> "RuntimeLinearModel":
+        m = fit_memory_model(sizes, mems)
+        return cls(m.slope, m.intercept, m.r2, m.n)
+
+
+@dataclass
+class RuntimeLogLinearModel(_RuntimeGate, LogLinearModel):
+    kind: ClassVar[str] = "runtime_loglinear"
+
+
+@dataclass
+class RuntimePowerLawModel(_RuntimeGate, PowerLawModel):
+    kind: ClassVar[str] = "runtime_powerlaw"
+
+
+@dataclass
+class RuntimePiecewiseLinearModel(_RuntimeGate, PiecewiseLinearModel):
+    kind: ClassVar[str] = "runtime_piecewise"
+
+
+RUNTIME_CANDIDATES: Tuple = (RuntimeLinearModel, RuntimeLogLinearModel,
+                             RuntimePowerLawModel,
+                             RuntimePiecewiseLinearModel)
+
 # kind -> class, for registry deserialization
 MODEL_KINDS = {LinearMemoryModel.kind: LinearMemoryModel,
                LogLinearModel.kind: LogLinearModel,
                PowerLawModel.kind: PowerLawModel,
-               PiecewiseLinearModel.kind: PiecewiseLinearModel}
+               PiecewiseLinearModel.kind: PiecewiseLinearModel,
+               RuntimeLinearModel.kind: RuntimeLinearModel,
+               RuntimeLogLinearModel.kind: RuntimeLogLinearModel,
+               RuntimePowerLawModel.kind: RuntimePowerLawModel,
+               RuntimePiecewiseLinearModel.kind: RuntimePiecewiseLinearModel}
 
 
 def model_to_dict(model) -> Dict:
@@ -241,16 +296,28 @@ class ZooFit(GatedMemoryModel):
         return self.model.predict(size)
 
 
-def fit_zoo(sizes: Sequence[float], mems: Sequence[float],
-            candidates: Optional[Sequence] = None,
-            loocv_gate: float = LOOCV_GATE) -> ZooFit:
-    """Fit every candidate, score by leave-one-out CV, pick the simplest
-    candidate within 10% of the best score (candidate order = simplicity
-    order, linear first)."""
-    cands = tuple(candidates) if candidates is not None else \
-        DEFAULT_CANDIDATES
+@dataclass
+class RuntimeFit(ZooFit):
+    """Zoo fit over (size, wall-time) points; same selection machinery,
+    runtime-calibrated out-of-sample gate."""
+    loocv_gate: float = RUNTIME_LOOCV_GATE
+
+
+def _fit_candidate_zoo(sizes: Sequence[float], values: Sequence[float],
+                       cands: Tuple, loocv_gate: float,
+                       fallback_fit, fallback_kind: str, result_cls):
+    """Shared fit/LOOCV/select core of `fit_zoo` and `fit_runtime_zoo`.
+
+    Non-finite samples (a crashed or mis-parsed profiling run reporting
+    NaN/inf) are dropped at this boundary: a single NaN otherwise poisons
+    `scale` and every LOOCV score, making all `<=` comparisons False and
+    the final selection unreachable.
+    """
     x = np.asarray(sizes, dtype=np.float64)
-    y = np.asarray(mems, dtype=np.float64)
+    y = np.asarray(values, dtype=np.float64)
+    keep = np.isfinite(x) & np.isfinite(y)
+    if not bool(keep.all()):
+        x, y = x[keep], y[keep]
     n = int(x.size)
     scale = float(np.abs(y).mean()) or 1.0 if n else 1.0
     fits: Dict[str, object] = {}
@@ -280,9 +347,9 @@ def fit_zoo(sizes: Sequence[float], mems: Sequence[float],
         else:
             scores[cand.kind] = math.inf
 
-    if not fits:     # degenerate input (n < 2): paper's unconfident linear
-        return ZooFit(fit_memory_model(x, y), LinearMemoryModel.kind,
-                      scores, train_r2, n, loocv_gate, fits)
+    if not fits:     # degenerate input (n < 2): unconfident linear fallback
+        return result_cls(fallback_fit(x, y), fallback_kind,
+                          scores, train_r2, n, loocv_gate, fits)
 
     eligible = [k for k in order if getattr(fits[k], "confident", False)]
     pool = eligible or order
@@ -291,10 +358,38 @@ def fit_zoo(sizes: Sequence[float], mems: Sequence[float],
     # confidence threshold are measurement noise, and the simpler (earlier)
     # candidate — the paper's linear — should win them
     tol = best_score * 0.10 + 0.1 * loocv_gate
-    chosen = next(k for k in order
-                  if k in pool and scores[k] <= best_score + tol)
-    return ZooFit(fits[chosen], chosen, scores, train_r2, n, loocv_gate,
-                  fits)
+    # the defensive default can only trigger if a candidate's score is NaN
+    # despite the finite-input filter (e.g. a pathological custom candidate)
+    chosen = next((k for k in order
+                   if k in pool and scores[k] <= best_score + tol), pool[0])
+    return result_cls(fits[chosen], chosen, scores, train_r2, n, loocv_gate,
+                      fits)
+
+
+def fit_zoo(sizes: Sequence[float], mems: Sequence[float],
+            candidates: Optional[Sequence] = None,
+            loocv_gate: float = LOOCV_GATE) -> ZooFit:
+    """Fit every candidate, score by leave-one-out CV, pick the simplest
+    candidate within 10% of the best score (candidate order = simplicity
+    order, linear first)."""
+    cands = tuple(candidates) if candidates is not None else \
+        DEFAULT_CANDIDATES
+    return _fit_candidate_zoo(sizes, mems, cands, loocv_gate,
+                              fit_memory_model, LinearMemoryModel.kind,
+                              ZooFit)
+
+
+def fit_runtime_zoo(sizes: Sequence[float], walls: Sequence[float],
+                    candidates: Optional[Sequence] = None,
+                    loocv_gate: float = RUNTIME_LOOCV_GATE) -> RuntimeFit:
+    """Zoo fit over the ladder's per-point wall times. Same families, same
+    LOOCV selection; the result ranks configs by predicted runtime (and so
+    by cost) — it never gates a memory requirement."""
+    cands = tuple(candidates) if candidates is not None else \
+        RUNTIME_CANDIDATES
+    return _fit_candidate_zoo(sizes, walls, cands, loocv_gate,
+                              RuntimeLinearModel.fit,
+                              RuntimeLinearModel.kind, RuntimeFit)
 
 
 def zoo_fitter(candidates: Optional[Sequence] = None,

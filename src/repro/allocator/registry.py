@@ -34,19 +34,35 @@ class ModelRecord:
     mems: List[float] = field(default_factory=list)
     created_at: float = 0.0
     hits: int = 0
+    # runtime companion model (MODEL_KINDS runtime_* kinds) + the ladder
+    # wall times it was fit on; absent in records written by older versions
+    runtime_model: Optional[object] = None
+    runtime_candidate: Optional[str] = None
+    walls: List[float] = field(default_factory=list)
 
     def to_dict(self) -> Dict:
-        return {"model": model_to_dict(self.model),
-                "candidate": self.candidate,
-                "sizes": list(self.sizes), "mems": list(self.mems),
-                "created_at": self.created_at, "hits": self.hits}
+        d = {"model": model_to_dict(self.model),
+             "candidate": self.candidate,
+             "sizes": list(self.sizes), "mems": list(self.mems),
+             "created_at": self.created_at, "hits": self.hits}
+        if self.runtime_model is not None:
+            d["runtime_model"] = model_to_dict(self.runtime_model)
+            d["runtime_candidate"] = self.runtime_candidate
+        if self.walls:
+            d["walls"] = list(self.walls)
+        return d
 
     @classmethod
     def from_dict(cls, signature: str, d: Dict) -> "ModelRecord":
+        rm = d.get("runtime_model")
+        runtime_model = model_from_dict(rm) if rm else None
         return cls(signature, model_from_dict(d["model"]),
                    d.get("candidate", d["model"].get("kind", "linear")),
                    list(d.get("sizes", [])), list(d.get("mems", [])),
-                   float(d.get("created_at", 0.0)), int(d.get("hits", 0)))
+                   float(d.get("created_at", 0.0)), int(d.get("hits", 0)),
+                   runtime_model=runtime_model,
+                   runtime_candidate=d.get("runtime_candidate"),
+                   walls=list(d.get("walls", [])))
 
 
 class ModelRegistry:
@@ -85,13 +101,20 @@ class ModelRegistry:
 
     def put(self, signature: str, model, candidate: Optional[str] = None,
             sizes: Sequence[float] = (), mems: Sequence[float] = (),
-            defer_save: bool = False) -> ModelRecord:
+            defer_save: bool = False, runtime_model=None,
+            runtime_candidate: Optional[str] = None,
+            walls: Sequence[float] = ()) -> ModelRecord:
         """Store a model. `defer_save=True` marks the registry dirty
         instead of rewriting the JSON file (which is O(all records)) —
         the AllocationService uses it and calls `flush()` once per batch."""
+        if runtime_model is not None and runtime_candidate is None:
+            runtime_candidate = getattr(runtime_model, "kind", None)
         rec = ModelRecord(signature, model,
                           candidate or getattr(model, "kind", "linear"),
-                          list(sizes), list(mems), time.time())
+                          list(sizes), list(mems), time.time(),
+                          runtime_model=runtime_model,
+                          runtime_candidate=runtime_candidate,
+                          walls=list(walls))
         with self._lock:
             self._records[signature] = rec
             self._dirty = True

@@ -97,6 +97,7 @@ class AllocationRequest:
     adaptive: Optional[bool] = None     # overrides the service default
     placement: Optional[object] = None  # "infogain" | "ladder" | PointPlacer
     tags: Optional[Sequence[str]] = None    # Flora-style categorical tags
+    objective: str = "cheapest_fit"     # | "min_cost" | "min_runtime"
 
     @property
     def sig(self) -> str:
@@ -132,6 +133,9 @@ class AllocationResponse:
                                  # (warm_start/acquire/fit/classify/
                                  # extrapolate/select); wire opt-in via
                                  # AllocationEndpoint.handle(include_trace=)
+    objective: str = "cheapest_fit"  # what this request optimized for
+    runtime_candidate: Optional[str] = None   # runtime model kind backing
+                                 # a cost/runtime ranking (None without one)
 
 
 # the wire-facing counter names; each is a `service.<name>` Counter on
@@ -148,6 +152,11 @@ _STAT_FIELDS = (
     "escalations",               # adaptive plans that spent extra points
     "points_saved",              # ladder points adaptive plans did not run
     "budget_denied",             # plans the budget cut short
+    "runtime_fits",              # plans that fit a runtime companion model
+    "runtime_confident",         # runtime fits that passed their gate
+    "cost_objective_requests",   # requests asking min_cost / min_runtime
+    "objective_fallbacks",       # of those, selections that degraded to
+                                 # cheapest_fit (unconfident runtime model)
 )
 
 
@@ -236,7 +245,8 @@ class _ProfileLRU:
 
 class _PlanCache:
     """Striped negative-outcome plan cache (see AllocationService: maps
-    (sig, ladder, tags, settings) -> unconfident plan). Same sharding
+    (sig, ladder, tags, objective, settings) -> unconfident plan). Same
+    sharding
     rationale as _ProfileLRU — concurrent signature groups must not
     serialize on one lock — with the history-version invalidation kept
     PER SHARD: each shard remembers the history version it was filled
@@ -516,7 +526,8 @@ class AllocationService:
                                anchor=req.anchor, sizes=req.sizes,
                                signature=req.signature, leeway=req.leeway,
                                adaptive=req.adaptive,
-                               placement=req.placement, tags=req.tags)
+                               placement=req.placement, tags=req.tags,
+                               objective=req.objective)
 
     def _settings_key(self, req: AllocationRequest):
         """Resolved acquisition settings for grouping/plan-cache keys: an
@@ -565,12 +576,14 @@ class AllocationService:
                 sync_views(self.store, self.registry)
         except Exception:
             pass                            # stale view is still correct
-        # group by (signature, ladder, tags, acquisition settings):
-        # same-signature requests share one plan only when they ask for
-        # the same ladder, carry the same tag palette AND resolve to the
-        # same adaptive/placement settings — coalescing never silently
+        # group by (signature, ladder, tags, objective, acquisition
+        # settings): same-signature requests share one plan only when
+        # they ask for the same ladder, carry the same tag palette, the
+        # same selection objective AND resolve to the same
+        # adaptive/placement settings — coalescing never silently
         # overrides an explicit sizes/anchor, a tag-steered
-        # classification, or a per-request acquisition override
+        # classification, a cost objective, or a per-request acquisition
+        # override
         groups: "OrderedDict[Tuple, " \
                 "List[Tuple[AllocationRequest, Future, float, " \
                 "Optional[Dict]]]" = \
@@ -578,11 +591,12 @@ class AllocationService:
         for req, fut, t_sub, ctx in batch:
             ladder = self.pipeline.ladder_for(self._preq(req))
             groups.setdefault(
-                (req.sig, ladder, req.tags_key, self._settings_key(req)),
+                (req.sig, ladder, req.tags_key, req.objective,
+                 self._settings_key(req)),
                 []).append((req, fut, t_sub, ctx))
 
         def handle_group(entry) -> None:
-            (sig, ladder, _tags, _settings), items = entry
+            (sig, ladder, _tags, _objective, _settings), items = entry
             live = [(req, fut, ts, ctx) for req, fut, ts, ctx in items
                     if not fut.cancelled()]
             if not live:                    # whole group cancelled: don't
@@ -638,7 +652,8 @@ class AllocationService:
             self.stats.inc("registry_hits")
             return plan
 
-        plan_key = (sig, ladder, req.tags_key, self._settings_key(req))
+        plan_key = (sig, ladder, req.tags_key, req.objective,
+                    self._settings_key(req))
         # classifier/baseline plans freeze history-derived selections,
         # so a history mutation invalidates the negative cache (each
         # shard self-clears on its next access at the new version)
@@ -687,15 +702,26 @@ class AllocationService:
             s.inc("points_saved", max(0, plan.base_points
                                       - plan.total_points))
         s.inc("budget_denied", int(plan.budget_exhausted))
+        if plan.runtime_fit is not None:
+            s.inc("runtime_fits")
+            s.inc("runtime_confident",
+                  int(getattr(plan.runtime_fit, "confident", False)))
 
     def _respond(self, plan, req: AllocationRequest,
                  wall: float) -> AllocationResponse:
         trace = self.pipeline.finalize(plan, self._preq(req), wall)
         p = trace.plan
+        sel = trace.selection
+        if req.objective != "cheapest_fit":
+            self.stats.inc("cost_objective_requests")
+            self.stats.inc("objective_fallbacks",
+                           int(getattr(sel, "objective_fell_back", False)))
         return AllocationResponse(req.job, req.sig, p.source, p.candidate,
                                   p.model, trace.requirement_gib,
-                                  trace.selection, p.neighbor, p.profiled,
+                                  sel, p.neighbor, p.profiled,
                                   p.cache_hits, wall, p.early_stop,
                                   p.escalated, p.budget_exhausted,
                                   p.placement, p.store_hits,
-                                  dict(trace.stage_walls))
+                                  dict(trace.stage_walls),
+                                  objective=req.objective,
+                                  runtime_candidate=p.runtime_candidate)

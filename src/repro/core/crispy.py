@@ -52,6 +52,8 @@ class CrispyReport:
     escalated: bool = False          # adaptive: spent extra points
     budget_exhausted: bool = False   # a point was denied by the budget
     trace: Optional[PipelineTrace] = None    # the full staged-path record
+    runtime_model: Any = None        # runtime companion fit (feeds the
+                                     # min_cost/min_runtime objectives)
 
     @property
     def points_profiled(self) -> int:
@@ -64,7 +66,8 @@ class CrispyReport:
                    plan.fit if plan.fit is not None else plan.model,
                    trace.requirement_gib, trace.selection, trace.wall_s,
                    list(plan.results), plan.early_stop, plan.escalated,
-                   plan.budget_exhausted, trace)
+                   plan.budget_exhausted, trace,
+                   runtime_model=plan.runtime_fit)
 
 
 class CrispyAllocator:
@@ -97,7 +100,8 @@ class CrispyAllocator:
                  adaptive: bool = False,
                  budget=None,
                  store=None,
-                 placement=None) -> CrispyReport:
+                 placement=None,
+                 objective: str = "cheapest_fit") -> CrispyReport:
         """Paper steps 1-4 through the unified pipeline. With
         `adaptive=True` (or a `repro.profiling.ProfilingBudget` passed as
         `budget=`) point placement is strategy-driven: the default
@@ -123,5 +127,6 @@ class CrispyAllocator:
             job, profile_at, full_size, anchor=anchor, sizes=sizes,
             adaptive=adaptive or budget is not None,
             placement=placement,
-            exclude_job_in_history=exclude_job_in_history))
+            exclude_job_in_history=exclude_job_in_history,
+            objective=objective))
         return CrispyReport.from_trace(trace)

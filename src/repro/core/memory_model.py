@@ -11,6 +11,7 @@ plus `to_dict`/`from_dict` for the persistent model registry.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import ClassVar, Dict, Optional, Sequence, Tuple
 
@@ -36,8 +37,11 @@ def r2_score(y: np.ndarray, pred: np.ndarray) -> float:
     ss_tot = float(((y - y.mean()) ** 2).sum())
     if ss_tot == 0.0:
         # flat target: a constant-memory job; the fit is exact iff residuals
-        # are zero, in which case extrapolation is trivially safe
-        return 1.0 if ss_res == 0.0 else -np.inf
+        # are zero, in which case extrapolation is trivially safe. Plain
+        # Python -inf (not np.float64): the gate path compares against
+        # Python floats and the value must survive JSON round-trips of
+        # registry records exactly.
+        return 1.0 if ss_res == 0.0 else -math.inf
     return 1.0 - ss_res / ss_tot
 
 
@@ -88,7 +92,7 @@ def fit_memory_model(sizes: Sequence[float],
     coef = ols_fit(x, y)
     if coef is None:
         return LinearMemoryModel(0.0, float(y.mean()) if y.size else 0.0,
-                                 -np.inf, int(x.size))
+                                 -math.inf, int(x.size))
     slope, intercept = coef
     r2 = r2_score(y, slope * x + intercept)
     return LinearMemoryModel(slope, intercept, r2, int(x.size))

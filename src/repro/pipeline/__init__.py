@@ -22,7 +22,9 @@ that builds requests and reports around it:
         |    placement when adaptive   (placement.py) |
         |      "infogain" (default): next size =      |
         |        argmax expected reduction in         |
-        |        candidate disagreement at full_size  |
+        |        candidate disagreement at full_size, |
+        |        cost-aware: among informative sizes  |
+        |        prefer the cheapest predicted wall   |
         |      "ladder": smallest-first prefix +      |
         |        gap-midpoint escalation (PR-2)       |
         +----------------------+----------------------+
@@ -30,12 +32,16 @@ that builds requests and reports around it:
         +----------------------v----------------------+
         | 3  model fitting                            |
         |    fitter / model zoo (LOOCV selection)     |
+        | 3b runtime companion fit    (fit_runtime_   |
+        |    zoo over the ladder's wall times; its    |
+        |    own relaxed gate, R2>0.95 + LOOCV<=0.10) |
         +----------------------+----------------------+
                                |
         +----------------------v----------------------+
         | 4  gate + fallback chain                    |
         |    classifier.observe (always)              |
         |    confident -> register + serve "zoo"      |
+        |    (confident runtime fit registered too)   |
         |    else nearest-job transfer ("classifier") |
         |    else requirement 0 ("baseline" == BFA)   |
         +----------------------+----------------------+
@@ -50,6 +56,16 @@ that builds requests and reports around it:
         | 6  config selection             |
         |    select_crispy / neighbor's   |
         |    best config / BFA            |
+        |    objective axis (request):    |
+        |      cheapest_fit (default,     |
+        |        the paper, bit-exact)    |
+        |      min_cost / min_runtime:    |
+        |        Pareto front over        |
+        |        ($/h x predicted wall,   |
+        |        wall); degrade to        |
+        |        cheapest_fit whenever    |
+        |        the runtime fit is       |
+        |        unconfident              |
         +----------------------+----------+
                                |
                          PipelineTrace

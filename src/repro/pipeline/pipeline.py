@@ -29,7 +29,7 @@ from dataclasses import dataclass, field
 from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.allocator.model_zoo import fit_zoo
+from repro.allocator.model_zoo import fit_runtime_zoo, fit_zoo
 from repro.telemetry import (current_span, default_registry,
                              resolve_sampler, span_if)
 from repro.core.catalog import ClusterConfig
@@ -59,6 +59,7 @@ class PipelineRequest:
     placement: Optional[object] = None  # "infogain" | "ladder" | PointPlacer
     exclude_job_in_history: bool = True
     tags: Optional[Sequence[str]] = None    # Flora-style categorical tags
+    objective: str = "cheapest_fit"     # | "min_cost" | "min_runtime"
 
     @property
     def sig(self) -> str:
@@ -75,6 +76,11 @@ class PipelinePlan:
     candidate: Optional[str]         # winning model kind (None on baseline)
     fit: Optional[object] = None     # this job's own fit (unconfident ones
                                      # still reach CrispyReport.model)
+    runtime_fit: Optional[object] = None   # runtime companion model (a
+                                     # RuntimeFit, or the bare registered
+                                     # model on warm starts); feeds the
+                                     # min_cost/min_runtime objectives
+    runtime_candidate: Optional[str] = None
     neighbor: Optional[str] = None
     neighbor_selection: Optional[Selection] = None
     sizes: List[float] = field(default_factory=list)
@@ -146,6 +152,7 @@ class AllocationPipeline:
                  classifier=None,           # NearestJobClassifier (or None)
                  fitter: Optional[Callable] = None,
                  candidates: Optional[Sequence] = None,
+                 runtime_fitter: Optional[Callable] = None,
                  overhead_per_node_gib: float = DEFAULT_OVERHEAD_GIB,
                  leeway: float = 0.0,
                  adaptive: bool = False,
@@ -169,6 +176,7 @@ class AllocationPipeline:
         self.classifier = classifier
         self.fitter = fitter
         self.candidates = candidates
+        self.runtime_fitter = runtime_fitter
         self.overhead = overhead_per_node_gib
         self.leeway = leeway
         self.adaptive = adaptive
@@ -233,6 +241,11 @@ class AllocationPipeline:
             return self.fitter(sizes, mems)
         return fit_zoo(sizes, mems, self.candidates)
 
+    def _fit_runtime(self, sizes: Sequence[float], walls: Sequence[float]):
+        if self.runtime_fitter is not None:
+            return self.runtime_fitter(sizes, walls)
+        return fit_runtime_zoo(sizes, walls)
+
     # -- stage 1: warm start ------------------------------------------------
     def warm_start(self, signature: str) -> Optional[PipelinePlan]:
         """A confident registered model answers without any profiling."""
@@ -245,8 +258,10 @@ class AllocationPipeline:
                 rec = self.registry.get(signature)
                 if rec is not None and getattr(rec.model, "confident",
                                                False):
-                    plan = PipelinePlan(signature, "registry", rec.model,
-                                        rec.candidate)
+                    plan = PipelinePlan(
+                        signature, "registry", rec.model, rec.candidate,
+                        runtime_fit=rec.runtime_model,
+                        runtime_candidate=rec.runtime_candidate)
         wall = perf_counter() - t0
         if plan is not None:
             self._warm_hits.inc()
@@ -319,9 +334,20 @@ class AllocationPipeline:
             placement_name = None
             trace = []
         acquire_wall = max(0.0, perf_counter() - t_acq - fit_wall[0])
+        walls = [r.wall_s for r in results]
+
+        # stage 3b: runtime companion fit over the same ladder's wall
+        # times — the min_cost/min_runtime objectives rank feasible
+        # configs by it at selection time (charged to the fit stage)
+        runtime_fit = None
+        if len(sizes) >= 2 and len(walls) == len(sizes):
+            t_rt = perf_counter()
+            with span_if(tel.enabled, "pipeline.fit_runtime",
+                         signature=sig):
+                runtime_fit = self._fit_runtime(sizes, walls)
+            fit_wall[0] += perf_counter() - t_rt
         self._stage_hist["acquire"].observe(acquire_wall)
         self._stage_hist["fit"].observe(fit_wall[0])
-        walls = [r.wall_s for r in results]
 
         # stage 4a: every profiled ladder feeds future classifications,
         # gate-failing ones included
@@ -336,6 +362,9 @@ class AllocationPipeline:
             classify_wall += perf_counter() - t_cls
 
         plan = PipelinePlan(sig, "baseline", None, None, fit=fit,
+                            runtime_fit=runtime_fit,
+                            runtime_candidate=getattr(runtime_fit,
+                                                      "candidate", None),
                             sizes=list(sizes), mems=list(mems), walls=walls,
                             results=list(results), requirement_trace=trace,
                             profiled=source.stats.fresh,
@@ -357,8 +386,15 @@ class AllocationPipeline:
                                 getattr(fit, "kind", "linear"))
             plan.source, plan.model, plan.candidate = "zoo", fit, candidate
             if self.registry is not None:
-                self.registry.put(sig, model, candidate, sizes, mems,
-                                  defer_save=self.defer_registry_save)
+                rt_ok = getattr(runtime_fit, "confident", False)
+                self.registry.put(
+                    sig, model, candidate, sizes, mems,
+                    defer_save=self.defer_registry_save,
+                    runtime_model=getattr(runtime_fit, "model",
+                                          runtime_fit) if rt_ok else None,
+                    runtime_candidate=getattr(runtime_fit, "candidate",
+                                              None) if rt_ok else None,
+                    walls=walls)
                 plan.registered = True
             resolved = True
 
@@ -434,7 +470,10 @@ class AllocationPipeline:
             with span_if(nested, "pipeline.select", job=req.job):
                 sel = select_crispy(self.catalog, self.history, req_gib,
                                     overhead_per_node_gib=self.overhead,
-                                    exclude_job=exclude)
+                                    exclude_job=exclude,
+                                    objective=req.objective,
+                                    runtime_model=plan.runtime_fit,
+                                    full_size=req.full_size)
         t_sel = perf_counter()
         self._sample_n = n = (self._sample_n + 1) & self._sample_mask
         if not n:

@@ -72,6 +72,7 @@ class PlacementState:
     full_size: float
     sizes: List[float] = field(default_factory=list)
     mems: List[float] = field(default_factory=list)
+    walls: List[float] = field(default_factory=list)   # per-point wall s
     fit: Optional[object] = None     # ZooFit (or custom fitter output)
     stable: bool = False             # last two requirement predictions agree
 
@@ -190,11 +191,19 @@ class InfoGainPlacer:
     def __init__(self, min_points: int = MIN_POINTS,
                  stability_rtol: float = STABILITY_RTOL,
                  max_extra_points: int = MAX_EXTRA_POINTS,
-                 grid_points: int = 3):
+                 grid_points: int = 3,
+                 cost_aware: bool = True):
         self.min_points = max(2, min_points)
         self.stability_rtol = stability_rtol
         self.max_extra_points = max_extra_points
         self.grid_points = grid_points
+        # cost_aware: among the informative sizes, buy bits-per-second —
+        # rank by expected gain per predicted wall-second instead of raw
+        # gain, so a ten-minute ProfilingBudget stretches further. The
+        # stop rule stays on RAW gain (a cheap uninformative point must
+        # not keep the loop alive), and with constant per-point walls the
+        # weighted argmax equals the raw one.
+        self.cost_aware = cost_aware
         # single-model (non-zoo) fitters have no candidate set to
         # disagree: fall back to FULL ladder semantics — prefix AND
         # midpoint escalation — not just the prefix
@@ -293,7 +302,42 @@ class InfoGainPlacer:
         if (len(state.sizes) >= self.min_points
                 and best_gain < self.stability_rtol):
             return None
+        if self.cost_aware:
+            return self._cheapest_informative(state, scored, best_size)
         return best_size
+
+    # -- cost-aware ranking -------------------------------------------------
+    def _predicted_wall(self, state: PlacementState,
+                        size: float) -> Optional[float]:
+        """OLS wall-time estimate for profiling `size`, from the walls of
+        the points measured so far; None when walls are unavailable."""
+        walls = state.walls
+        if len(walls) != len(state.sizes) or len(walls) < 2:
+            return None
+        m = fit_memory_model(state.sizes, walls)
+        w = m.predict(size)
+        if not math.isfinite(w) or w <= 0.0:
+            w = sum(walls) / len(walls)
+        return max(w, 1e-9)
+
+    def _cheapest_informative(self, state: PlacementState, scored,
+                              best_size: float) -> float:
+        """Among sizes whose expected gain clears the stability threshold
+        (each one individually worth measuring), pick the best expected
+        gain per predicted wall-second. Falls back to the raw argmax when
+        no size clears the bar alone (min_points not yet reached) or no
+        wall model exists."""
+        informative = [(g, s) for g, s in scored
+                       if g >= self.stability_rtol]
+        if not informative:
+            return best_size
+        weighted = []
+        for g, s in informative:
+            w = self._predicted_wall(state, s)
+            if w is None:
+                return best_size
+            weighted.append((g / w, s))
+        return max(weighted)[1]
 
 
 @dataclass
@@ -341,6 +385,7 @@ def drive_placement(placer: PointPlacer, ladder: Sequence[float],
         hits += int(not was_fresh)
         state.sizes.append(float(nxt))
         state.mems.append(r.job_mem_bytes)
+        state.walls.append(float(getattr(r, "wall_s", 0.0)))
         results.append(r)
         if len(state.sizes) >= 2:
             fit = fit_fn(state.sizes, state.mems)

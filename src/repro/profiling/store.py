@@ -396,13 +396,18 @@ class BackendModelRegistry(ModelRegistry):
                 self._records[sig] = rec
 
     def put(self, signature: str, model, candidate: Optional[str] = None,
-            sizes=(), mems=(), defer_save: bool = False):
+            sizes=(), mems=(), defer_save: bool = False,
+            runtime_model=None, runtime_candidate: Optional[str] = None,
+            walls=()):
         with self._lock:
             # re-registering a signature revokes our own eviction of it
             self._tombstones.pop(signature, None)
             return super().put(signature, model, candidate=candidate,
                                sizes=sizes, mems=mems,
-                               defer_save=defer_save)
+                               defer_save=defer_save,
+                               runtime_model=runtime_model,
+                               runtime_candidate=runtime_candidate,
+                               walls=walls)
 
     def evict(self, signature: str) -> bool:
         with self._lock:

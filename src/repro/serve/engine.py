@@ -181,11 +181,12 @@ class AllocationEndpoint:
                leeway: Optional[float] = None,
                adaptive: Optional[bool] = None,
                placement: Optional[str] = None,
-               tags: Optional[List[str]] = None):
+               tags: Optional[List[str]] = None,
+               objective: str = "cheapest_fit"):
         return self.service.submit(AllocationRequest(
             job, profile_at, full_size, anchor=anchor, sizes=sizes,
             signature=signature, leeway=leeway, adaptive=adaptive,
-            placement=placement, tags=tags))
+            placement=placement, tags=tags, objective=objective))
 
     def handle(self, timeout: Optional[float] = None,
                include_trace: bool = False,
@@ -249,7 +250,11 @@ class AllocationEndpoint:
                "early_stops": s.early_stops,
                "escalations": s.escalations,
                "points_saved": s.points_saved,
-               "budget_denied": s.budget_denied}
+               "budget_denied": s.budget_denied,
+               "runtime_fits": s.runtime_fits,
+               "runtime_confident": s.runtime_confident,
+               "cost_objective_requests": s.cost_objective_requests,
+               "objective_fallbacks": s.objective_fallbacks}
         if self.service.budget is not None:
             out["budget"] = self.service.budget.snapshot()
         return out
@@ -268,7 +273,12 @@ class AllocationEndpoint:
                 "wall_s": resp.wall_s, "early_stop": resp.early_stop,
                 "escalated": resp.escalated,
                 "budget_exhausted": resp.budget_exhausted,
-                "placement": resp.placement}
+                "placement": resp.placement,
+                "objective": resp.objective,
+                "objective_fell_back": sel.objective_fell_back,
+                "predicted_runtime_s": sel.predicted_runtime_s,
+                "predicted_cost_usd": sel.predicted_cost_usd,
+                "runtime_candidate": resp.runtime_candidate}
 
 
 def _reset_slot(caches, slot: int):

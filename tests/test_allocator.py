@@ -1,6 +1,7 @@
 """Allocator subsystem: model zoo + LOOCV selection, persistent registry,
 nearest-job classifier, and the batched/cached AllocationService end to end
 (concurrent submitters, dedup, registry hits, classifier fallback)."""
+import dataclasses
 import math
 import threading
 from concurrent.futures import ThreadPoolExecutor
@@ -8,17 +9,19 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 import pytest
 
-from repro.allocator import (AllocationRequest, AllocationService,
-                             LogLinearModel, ModelRegistry,
-                             NearestJobClassifier, PiecewiseLinearModel,
-                             PowerLawModel, ZooFit, fit_zoo,
+from repro.allocator import (MODEL_KINDS, AllocationRequest,
+                             AllocationService, LogLinearModel,
+                             ModelRegistry, NearestJobClassifier,
+                             PiecewiseLinearModel, PowerLawModel, RuntimeFit,
+                             ZooFit, fit_runtime_zoo, fit_zoo,
                              model_from_dict, model_to_dict, zoo_fitter)
-from repro.core.catalog import aws_like_catalog
+from repro.core.catalog import (ClusterConfig, NodeType, aws_like_catalog)
 from repro.core.crispy import CrispyAllocator
 from repro.core.history import ExecutionHistory
 from repro.core.memory_model import fit_memory_model
 from repro.core.profiler import ProfileResult
 from repro.core.sampling import ladder_from_anchor
+from repro.core.selector import select_crispy
 from repro.core.simulator import (GiB, build_history, make_profile_fn,
                                   scout_like_jobs)
 from repro.profiling import BackendModelRegistry, ProfileStore
@@ -105,6 +108,71 @@ def test_zoo_fitter_is_a_crispy_drop_in():
     assert rep.requirement_gib > 0
 
 
+def test_zoo_nan_sample_filtered_not_fatal():
+    """Regression: one NaN memory sample (crashed/mis-parsed profiling run)
+    used to poison every LOOCV score and make candidate selection raise
+    StopIteration. It must be dropped at the fit boundary instead."""
+    mems = [0.9 * s + 1.6e9 for s in SIZES]
+    mems[2] = float("nan")
+    z = fit_zoo(SIZES, mems)
+    assert isinstance(z, ZooFit)
+    assert z.candidate == "linear"
+    assert z.confident                      # 4 clean points remain
+    assert z.n == len(SIZES) - 1
+    assert z.predict(1e12) == pytest.approx(0.9e12 + 1.6e9, rel=1e-6)
+
+
+def test_zoo_single_finite_survivor_degenerates_unconfident():
+    z = fit_zoo(SIZES, [math.nan, math.inf, -math.inf, math.nan, 3e9])
+    assert z.candidate == "linear"
+    assert not z.confident
+    assert z.requirement(1e12) == 0.0       # degenerates like the paper
+
+
+# -- runtime zoo --------------------------------------------------------------
+
+
+def test_runtime_zoo_linear_walls():
+    f = fit_runtime_zoo(SIZES, [20.0 + 4e-8 * s for s in SIZES])
+    assert isinstance(f, RuntimeFit)
+    assert f.candidate == "runtime_linear"
+    assert type(f.model).kind == "runtime_linear"   # runtime gate, not
+    assert f.confident                              # the paper's 0.99 one
+
+
+def test_runtime_zoo_superlinear_walls_pick_powerlaw():
+    f = fit_runtime_zoo(SIZES, [1e-11 * s ** 1.35 for s in SIZES])
+    assert f.candidate == "runtime_powerlaw"
+    assert f.confident
+    truth = 1e-11 * 5e11 ** 1.35
+    assert f.predict(5e11) == pytest.approx(truth, rel=0.01)
+
+
+def test_runtime_zoo_relaxed_gate_admits_mild_noise():
+    """R² 0.95 < r2 < 0.99: unusable as a memory model (OOM risk), fine
+    for a cost *ranking* — the runtime subclasses must stay confident."""
+    rng = np.random.default_rng(3)
+    walls = [(20.0 + 4e-8 * s) * (1 + rng.normal(0, 0.06)) for s in SIZES]
+    f = fit_runtime_zoo(SIZES, walls)
+    assert f.confident
+    assert 0.95 < f.model.r2 < 0.99         # inside the relaxed band
+
+
+def test_runtime_zoo_noisy_walls_not_confident():
+    rng = np.random.default_rng(7)
+    walls = [abs(10.0 * (1 + rng.normal(0, 0.6))) for _ in SIZES]
+    f = fit_runtime_zoo(SIZES, walls)
+    assert not f.confident
+
+
+def test_runtime_zoo_nonfinite_wall_filtered():
+    walls = [20.0 + 4e-8 * s for s in SIZES]
+    walls[0] = math.inf                     # e.g. a timed-out run
+    f = fit_runtime_zoo(SIZES, walls)
+    assert f.candidate == "runtime_linear"
+    assert f.confident
+
+
 def test_model_serialization_round_trip():
     models = [fit_memory_model(SIZES, [2 * s + 1e9 for s in SIZES]),
               LogLinearModel.fit(SIZES, [1e9 * math.log(s) for s in SIZES]),
@@ -118,6 +186,43 @@ def test_model_serialization_round_trip():
         for size in (1e9, 5e10):
             assert back.predict(size) == pytest.approx(m.predict(size))
         assert back.confident == m.confident
+
+
+def test_r2_score_flat_target_returns_plain_float():
+    """`-inf` from the flat-target branch must be the Python float (the
+    registry JSON path serializes it exactly; np.float64 also works but
+    the contract is the plain builtin)."""
+    from repro.core.memory_model import r2_score
+    bad = r2_score(np.array([5.0, 5.0, 5.0]), np.array([4.0, 5.0, 6.0]))
+    assert bad == -math.inf and type(bad) is float
+    good = r2_score(np.array([5.0, 5.0, 5.0]), np.array([5.0, 5.0, 5.0]))
+    assert good == 1.0 and type(good) is float
+
+
+def test_registry_round_trips_unconfident_models_of_every_kind(tmp_path):
+    """Every kind in MODEL_KINDS — runtime kinds included — survives the
+    registry JSON path with r2 = -inf intact (json emits `-Infinity`;
+    a naive str() round-trip would not parse back)."""
+    path = str(tmp_path / "models.json")
+    reg = ModelRegistry(path)
+    lin = [2 * s + 1e9 for s in SIZES]
+    for kind, cls in sorted(MODEL_KINDS.items()):
+        fit = getattr(cls, "fit", None)
+        m = fit(SIZES, lin) if fit else fit_memory_model(SIZES, lin)
+        assert type(m) is cls, kind         # subclass fits must return cls
+        u = dataclasses.replace(m, r2=-math.inf)
+        assert not u.confident
+        reg.put(f"job/{kind}", u, sizes=SIZES, mems=lin)
+    back = ModelRegistry(path)
+    for kind, cls in sorted(MODEL_KINDS.items()):
+        rec = back.get(f"job/{kind}")
+        assert rec is not None and type(rec.model) is cls, kind
+        assert rec.model.r2 == -math.inf
+        assert not rec.model.confident
+        src = reg.get(f"job/{kind}", count_hit=False).model
+        for size in (1e9, 5e10):
+            assert rec.model.predict(size) == pytest.approx(
+                src.predict(size))
 
 
 # -- registry -----------------------------------------------------------------
@@ -320,6 +425,158 @@ def test_pipeline_parity_adaptive_placement(corpus):
         assert rep.points_profiled == resp.profiled + resp.cache_hits
         assert rep.requirement_gib == resp.requirement_gib, placement
         assert rep.selection.config.name == resp.selection.config.name
+
+
+# -- selection objectives -----------------------------------------------------
+
+
+def test_nothing_fits_fallback_breaks_memory_tie_by_price():
+    """Regression: when no config satisfies the requirement, the largest-
+    memory fallback used to resolve equal-memory ties by catalog order —
+    list order could hand out a strictly costlier config."""
+    dear = ClusterConfig(NodeType("dear", 8, 64.0, 9.0), 4)
+    fair = ClusterConfig(NodeType("fair", 8, 64.0, 2.0), 4)
+    for catalog in ([dear, fair], [fair, dear]):    # order-independent
+        sel = select_crispy(catalog, ExecutionHistory(),
+                            mem_requirement_gib=1e9)
+        assert sel.fell_back
+        assert sel.feasible_count == 1
+        assert sel.config.name == "fairx4"
+
+
+def test_select_crispy_rejects_unknown_objective():
+    cfg = ClusterConfig(NodeType("n", 8, 64.0, 1.0), 4)
+    with pytest.raises(ValueError, match="unknown objective"):
+        select_crispy([cfg], ExecutionHistory(), 1.0, objective="fastest")
+
+
+def test_min_cost_selects_cheaper_config_on_superlinear_runtime():
+    """Acceptance: on a superlinear-runtime job min_cost picks a strictly
+    cheaper-$/h config than cheapest_fit, at equal-or-lower predicted
+    cost under the SAME runtime model."""
+    from repro.core.selector import predicted_cost_usd, predicted_runtime_s
+    catalog = aws_like_catalog()
+    history = build_history()
+    full = 1e11
+    alloc = CrispyAllocator(catalog, history, fitter=zoo_fitter())
+
+    def profile_at(s):
+        return ProfileResult(s, 0.9 * s + 1.6e9, 0.0, 1e-11 * s ** 1.35)
+
+    cheap = alloc.allocate("sup/cheapest", profile_at, full,
+                           anchor=full * 0.01)
+    cost = alloc.allocate("sup/mincost", profile_at, full,
+                          anchor=full * 0.01, objective="min_cost")
+    sel = cost.selection
+    assert cost.runtime_model is not None and cost.runtime_model.confident
+    assert not sel.objective_fell_back
+    assert sel.config.usd_per_hour < cheap.selection.config.usd_per_hour
+    cheap_rt = predicted_runtime_s(cost.runtime_model, full,
+                                   cheap.selection.config)
+    assert sel.predicted_cost_usd <= predicted_cost_usd(
+        cheap_rt, cheap.selection.config) + 1e-9
+
+
+def test_objective_cheapest_fit_is_byte_identical_to_default(corpus):
+    """CONTRACT: objective="cheapest_fit" is the pre-objective-axis
+    behavior, bit for bit — the runtime model may be fit and registered,
+    but it must not touch the selection."""
+    jobs, catalog, history = corpus
+    for job in (jobs[2], jobs[6]):          # confident linear + noisy
+        full = job.dataset_gib * GiB
+        with AllocationService(catalog, history) as svc:
+            default = svc.allocate(_req(job))
+        with AllocationService(catalog, history) as svc:
+            explicit = svc.allocate(AllocationRequest(
+                job.name, make_profile_fn(job), full, anchor=full * 0.01,
+                objective="cheapest_fit"))
+        s1, s2 = default.selection, explicit.selection
+        assert s1 == s2, job.name
+        assert s2.objective == "cheapest_fit"
+        assert s2.predicted_runtime_s is None
+        assert s2.predicted_cost_usd is None
+        assert not s2.objective_fell_back
+
+
+def test_pipeline_parity_holds_on_objective_axis(corpus):
+    """Service and one-shot answer identically for the runtime objectives
+    too (same stored points, same runtime fit, same Pareto pick)."""
+    jobs, catalog, history = corpus
+    km = jobs[2]
+    full = km.dataset_gib * GiB
+    for objective in ("min_cost", "min_runtime"):
+        backend = InMemoryBackend()
+        with AllocationService(catalog, history,
+                               registry=BackendModelRegistry(backend),
+                               store=ProfileStore(backend=backend)) as svc:
+            resp = svc.allocate(AllocationRequest(
+                km.name, make_profile_fn(km), full, anchor=full * 0.01,
+                objective=objective))
+        rep = CrispyAllocator(catalog, history, fitter=zoo_fitter()).allocate(
+            km.name, make_profile_fn(km), full, anchor=full * 0.01,
+            objective=objective, store=ProfileStore(backend=backend))
+        s1, s2 = rep.selection, resp.selection
+        assert s1.config.name == s2.config.name, objective
+        assert s1.objective == s2.objective == objective
+        assert s1.predicted_runtime_s == s2.predicted_runtime_s
+        assert s1.predicted_cost_usd == s2.predicted_cost_usd
+        assert s1.objective_fell_back == s2.objective_fell_back
+
+
+def test_min_cost_falls_back_when_runtime_unconfident(corpus):
+    """Never-worse-than-BFA across the objective axis: noisy walls leave
+    the runtime model unconfident, so min_cost must answer exactly what
+    cheapest_fit answers (and say it fell back)."""
+    jobs, catalog, history = corpus
+    rng = np.random.default_rng(11)
+
+    def profile_at(s):                      # clean memory, useless walls
+        return ProfileResult(s, 0.9 * s + 1.6e9, 0.0,
+                             abs(10.0 * (1 + rng.normal(0, 0.6))))
+
+    full = 2e11
+    with AllocationService(catalog, history) as svc:
+        cheap = svc.allocate(AllocationRequest(
+            "noisy-wall/job", profile_at, full, anchor=full * 0.01))
+        cost = svc.allocate(AllocationRequest(
+            "noisy-wall/job", profile_at, full, anchor=full * 0.01,
+            objective="min_cost"))
+        # second pass reads the shared point LRU: identical measured world
+        assert cost.profiled == 0
+        sel = cost.selection
+        assert sel.objective == "min_cost"
+        assert sel.objective_fell_back
+        assert sel.predicted_runtime_s is None
+        assert sel.config.name == cheap.selection.config.name
+        assert svc.stats.cost_objective_requests == 1
+        assert svc.stats.objective_fallbacks == 1
+
+
+def test_warm_start_serves_runtime_model(corpus):
+    """A registry hit must answer runtime objectives without re-profiling:
+    the runtime companion model round-trips through the shared backend."""
+    jobs, catalog, history = corpus
+    km = jobs[2]
+    full = km.dataset_gib * GiB
+    backend = InMemoryBackend()
+    with AllocationService(catalog, history,
+                           registry=BackendModelRegistry(backend)) as svc:
+        first = svc.allocate(AllocationRequest(
+            km.name, make_profile_fn(km), full, anchor=full * 0.01,
+            objective="min_cost"))
+        assert not first.selection.objective_fell_back
+    with AllocationService(catalog, history,
+                           registry=BackendModelRegistry(backend)) as svc2:
+        warm = svc2.allocate(AllocationRequest(
+            km.name, make_profile_fn(km), full, anchor=full * 0.01,
+            objective="min_cost"))
+        assert warm.source == "registry"
+        assert warm.profiled == 0
+        assert warm.runtime_candidate == first.runtime_candidate
+        assert not warm.selection.objective_fell_back
+        assert warm.selection.config.name == first.selection.config.name
+        assert warm.selection.predicted_cost_usd == pytest.approx(
+            first.selection.predicted_cost_usd)
 
 
 # -- service end-to-end -------------------------------------------------------
@@ -535,3 +792,30 @@ def test_allocation_endpoint_wire_format(corpus):
     assert wire["requirement_gib"] > 0
     assert isinstance(wire["config"], str) and "x" in wire["config"]
     assert wire["usd_per_hour"] > 0
+    # objective axis on the wire: default request carries the runtime
+    # companion fit but no runtime-derived numbers
+    assert wire["objective"] == "cheapest_fit"
+    assert wire["objective_fell_back"] is False
+    assert wire["predicted_runtime_s"] is None
+    assert wire["predicted_cost_usd"] is None
+    assert wire["runtime_candidate"] == "runtime_linear"
+
+
+def test_allocation_endpoint_min_cost_objective(corpus):
+    jobs, catalog, history = corpus
+    kmeans = jobs[2]
+    with AllocationService(catalog, history) as svc:
+        ep = AllocationEndpoint(svc)
+        wire = ep.handle(job=kmeans.name, profile_at=make_profile_fn(kmeans),
+                         full_size=kmeans.dataset_gib * GiB,
+                         anchor=kmeans.dataset_gib * GiB * 0.01,
+                         objective="min_cost")
+        stats = ep.stats()
+    assert wire["objective"] == "min_cost"
+    assert wire["objective_fell_back"] is False
+    assert wire["predicted_runtime_s"] > 0
+    assert wire["predicted_cost_usd"] > 0
+    assert stats["runtime_fits"] >= 1
+    assert stats["runtime_confident"] >= 1
+    assert stats["cost_objective_requests"] == 1
+    assert stats["objective_fallbacks"] == 0

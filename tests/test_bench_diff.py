@@ -1,0 +1,96 @@
+"""bench_diff tolerates rows missing from either artifact.
+
+Tier sets legitimately change across PRs (new tiers land, old ones
+retire, CI smokes with a truncated matrix), so a (backend, tier,
+threads) row present in only ONE of the two BENCH_load.json files must
+be *reported* but never *gate* — and an empty intersection must exit 0.
+These tests pin that contract.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.bench_diff import diff, main  # noqa: E402
+
+
+def _doc(tiers):
+    """BENCH_load.json-shaped doc: {tier: {threads: (rps, p99_ms)}}."""
+    return {"benchmark": "load_tiers", "tiers": {
+        tier: {"by_threads": {
+            str(n): {"requests": 10, "throughput_rps": rps, "p99_ms": p99}
+            for n, (rps, p99) in by_threads.items()}}
+        for tier, by_threads in tiers.items()}}
+
+
+def test_row_only_in_after_is_reported_not_gated():
+    before = _doc({"warm": {1: (100.0, 2.0)}})
+    after = _doc({"warm": {1: (101.0, 2.0)}, "fresh": {1: (5.0, 50.0)}})
+    rows, regressed = diff(before, after)
+    assert not regressed
+    by_status = {r["status"] for r in rows}
+    assert by_status == {"ok", "only-after"}
+    only = next(r for r in rows if r["status"] == "only-after")
+    assert (only["tier"], only["threads"]) == ("fresh", "1")
+    # one-sided rows carry no numbers — nothing downstream can gate on
+    assert "throughput_before" not in only and "throughput_pct" not in only
+
+
+def test_row_only_in_before_is_reported_not_gated():
+    before = _doc({"warm": {1: (100.0, 2.0)}, "retired": {4: (9.0, 9.0)}})
+    after = _doc({"warm": {1: (100.0, 2.0)}})
+    rows, regressed = diff(before, after)
+    assert not regressed
+    assert {r["status"] for r in rows} == {"ok", "only-before"}
+
+
+def test_regression_still_detected_alongside_uncompared_rows():
+    before = _doc({"warm": {1: (100.0, 2.0)}})
+    after = _doc({"warm": {1: (10.0, 2.0)}, "fresh": {1: (5.0, 5.0)}})
+    rows, regressed = diff(before, after)
+    assert regressed
+    warm = next(r for r in rows if r["tier"] == "warm")
+    assert warm["status"] == "REGRESSED"
+
+
+def test_main_exits_zero_when_baseline_misses_tiers(tmp_path, capsys):
+    b = tmp_path / "before.json"
+    a = tmp_path / "after.json"
+    b.write_text(json.dumps(_doc({"warm": {1: (100.0, 2.0)}})))
+    a.write_text(json.dumps(_doc({"warm": {1: (99.0, 2.1)},
+                                  "fresh": {1: (5.0, 50.0)}})))
+    assert main([str(b), str(a)]) == 0
+    out = capsys.readouterr().out
+    assert "only-after" in out
+    assert "1 row(s) present on one side only" in out
+
+
+def test_main_exits_zero_on_disjoint_tier_sets(tmp_path, capsys):
+    b = tmp_path / "before.json"
+    a = tmp_path / "after.json"
+    b.write_text(json.dumps(_doc({"old": {1: (100.0, 2.0)}})))
+    a.write_text(json.dumps(_doc({"new": {1: (50.0, 9.0)}})))
+    assert main([str(b), str(a)]) == 0
+    assert "nothing to gate on" in capsys.readouterr().out
+
+
+def test_main_exits_two_on_unreadable_input(tmp_path):
+    a = tmp_path / "after.json"
+    a.write_text(json.dumps(_doc({"warm": {1: (1.0, 1.0)}})))
+    assert main([str(tmp_path / "missing.json"), str(a)]) == 2
+
+
+@pytest.mark.parametrize("markdown", [False, True])
+def test_table_renders_one_sided_rows_as_dashes(tmp_path, capsys, markdown):
+    b = tmp_path / "before.json"
+    a = tmp_path / "after.json"
+    b.write_text(json.dumps(_doc({"warm": {1: (100.0, 2.0)}})))
+    a.write_text(json.dumps(_doc({"warm": {1: (100.0, 2.0)},
+                                  "fresh": {1: (5.0, 50.0)}})))
+    argv = [str(b), str(a)] + (["--markdown"] if markdown else [])
+    assert main(argv) == 0
+    out = capsys.readouterr().out
+    assert "local/fresh" in out and "only-after" in out
