@@ -31,9 +31,25 @@ ONE `DaemonBackend.batch()` frame, and reports the speedup — the
 mechanism behind `ProfileStore(write_behind=True)` and
 `refresh_views()`. Runs over whichever `--transport` was selected.
 
+`--shards N` adds the scale-out section: spawns 1-, 2- and 4-shard
+daemon topologies (capped at N) and drives each with multi-process
+workers issuing BATCHED frames over many namespaces — the service's
+steady-state wire shape, where `ShardedBackend.batch()` splits each
+frame by owning shard and fans out concurrently. Every daemon runs
+with the same small `--op-delay` per-mutation service time (a stand-in
+for a durable backend's fsync under the writer lock), so the measured
+quantity is topology scaling — serialized service time on one shard vs
+overlapped service time across shards — independent of how many cores
+the host happens to have. Per-shard ops/s comes from each daemon's own
+`daemon.op.*` histograms, every appended row is verified readable
+through the ring, and the rows land in BENCH_shards.json in the same
+backends/tiers/by_threads shape `bench_diff.py` consumes — the scaling
+claim is gated by diffable JSON, not scrollback.
+
 Final CSV: state_backends,<us_per_op_file>,<daemon_vs_file_speedup>
 (speedup 0.0 when the daemon section was skipped). With `--batch N` a
-second CSV line follows: state_backends_batch,<us_single>,<batch_speedup>.
+second CSV line follows: state_backends_batch,<us_single>,<batch_speedup>;
+with `--shards N`: state_backends_shards,<rps_1shard>,<scaling_1_to_2>.
 """
 from __future__ import annotations
 
@@ -55,6 +71,27 @@ from repro.state import HAS_UNIX_SOCKETS  # noqa: E402
 WORKERS = 2
 OPS_PER_WORKER = 60           # reserve+charge (+append/read/cas every 4th)
 MAX_POINTS = 40               # < total attempts: contention + denials
+
+# --shards section: enough concurrent batched load that daemon-side CPU,
+# not client round trips, is the bottleneck — otherwise adding shards
+# can't show up in aggregate ops/s at all
+SHARD_WORKERS = 6             # worker processes per topology
+SHARD_BATCHES = 20            # batch frames per worker
+SHARD_BATCH_OPS = 24          # appends per frame (+1 piggybacked read)
+# namespaces per worker: the unit of placement on the hash ring. Many
+# namespaces -> the per-shard load split concentrates near even (the
+# namespace sample, not ring-arc size, dominates the variance), and
+# DETERMINISTIC names (no run id — every topology gets fresh daemons)
+# make the split identical run to run
+SHARD_NAMESPACES = 32
+# per-append service time injected with the daemon's --op-delay: models
+# a durable backend's fsync under the writer lock, so the measured
+# quantity is topology scaling (serialized waits on one shard vs
+# overlapped waits across shards) rather than how many cores this
+# particular host happens to have — CI runners are often single-core,
+# where pure in-memory daemons could never show scaling at all
+SHARD_OP_DELAY_S = 0.0005
+SHARD_BENCH_FILE = os.path.join(_ROOT, "BENCH_shards.json")
 
 _WORKER_CODE = """
 import json, os, sys, time
@@ -85,6 +122,39 @@ for i in range(ops):
 wall = time.monotonic() - t0
 print(json.dumps({{"granted": granted, "appended": appended,
                    "wall": wall}}))
+"""
+
+_SHARD_WORKER_CODE = """
+import json, sys, time
+sys.path.insert(0, {src!r})
+from repro.state import ShardedBackend
+
+addrs, batches, batch_ops, nss, tag = (
+    sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+    sys.argv[5])
+lat_ms = []
+total = 0
+with ShardedBackend.from_addresses(addrs.split(",")) as backend:
+    cursor = 0
+    ns0 = "shard-bench-%s-0" % tag
+    t0 = time.monotonic()
+    for b in range(batches):
+        ops = []
+        for j in range(batch_ops):
+            k = (b * batch_ops + j) % nss
+            ops.append({{"op": "append",
+                         "ns": "shard-bench-%s-%d" % (tag, k),
+                         "record": {{"tag": tag, "b": b, "j": j}}}})
+        ops.append({{"op": "read", "ns": ns0, "cursor": cursor}})
+        t1 = time.monotonic()
+        results = backend.batch(ops)
+        lat_ms.append((time.monotonic() - t1) * 1e3)
+        assert all(r.get("ok") for r in results), results
+        cursor = results[-1]["cursor"]
+        total += len(ops)
+    wall = time.monotonic() - t0
+print(json.dumps({{"ops": total, "appends": batches * batch_ops,
+                   "wall": wall, "lat_ms": lat_ms}}))
 """
 
 # unique per benchmark invocation so a reused long-lived daemon (or a
@@ -137,7 +207,7 @@ def bench_file() -> float:
     return _report("file", rows)
 
 
-def _spawn_daemon(transport: str):
+def _spawn_daemon(transport: str, extra_args=()):
     """(address, child|None) for a fresh daemon on `transport`, or
     (None, None) when it could not be started."""
     tmp = tempfile.mkdtemp(prefix=f"crispy-bench-daemon-{transport}-")
@@ -152,6 +222,7 @@ def _spawn_daemon(transport: str):
         argv = [sys.executable, "-m", "repro.state.daemon",
                 "--listen", "127.0.0.1:0", "--port-file", port_file]
         ready = lambda: os.path.exists(port_file)       # noqa: E731
+    argv.extend(extra_args)
     child = subprocess.Popen(argv, env=env, stdout=subprocess.PIPE,
                              stderr=subprocess.STDOUT, text=True)
     for _ in range(100):
@@ -170,11 +241,11 @@ def _spawn_daemon(transport: str):
         with open(port_file) as f:
             addr = f.read().strip()
     from repro.state import DaemonBackend
-    client = DaemonBackend(addr, timeout_s=2.0)
-    for _ in range(100):
-        if client.ping():
-            return addr, child
-        time.sleep(0.05)
+    with DaemonBackend(addr, timeout_s=2.0) as client:
+        for _ in range(100):
+            if client.ping():
+                return addr, child
+            time.sleep(0.05)
     child.kill()
     print(f"daemon({transport}): skipped (never answered ping)")
     return None, None
@@ -191,7 +262,11 @@ def bench_daemon(transport: str = "unix") -> float:
     reuse_env = ("CRISPY_DAEMON_SOCKET" if transport == "unix"
                  else "CRISPY_DAEMON_TCP")
     env_addr = os.environ.get(reuse_env)
-    if env_addr and DaemonBackend(env_addr, timeout_s=2.0).ping():
+    reusable = False
+    if env_addr:
+        with DaemonBackend(env_addr, timeout_s=2.0) as probe:
+            reusable = probe.ping()
+    if reusable:
         addr, child = env_addr, None
         print(f"{label}: reusing running daemon at {addr}")
     else:
@@ -200,11 +275,13 @@ def bench_daemon(transport: str = "unix") -> float:
             return 0.0
     try:
         rows = _run_workers("daemon", addr)
-        _verify(label, DaemonBackend(addr), rows)
+        with DaemonBackend(addr) as checker:
+            _verify(label, checker, rows)
         return _report(label, rows)
     finally:
         if child is not None:
-            DaemonBackend(addr).shutdown_daemon()
+            with DaemonBackend(addr) as closer:
+                closer.shutdown_daemon()
             child.wait(timeout=10)
             assert child.returncode == 0, \
                 f"daemon did not shut down cleanly: rc={child.returncode}"
@@ -224,28 +301,28 @@ def bench_batch(transport: str, batch_n: int, repeats: int = 20):
         return 0.0, 0.0
     label = f"batch({transport}) x{batch_n}"
     try:
-        client = DaemonBackend(addr)
-        cursor = 0
-        t0 = time.monotonic()
-        for i in range(repeats):
-            for j in range(batch_n):
-                client.append("batch-single", {"i": i, "j": j})
-            _rows, cursor = client.read("batch-single", cursor)
-        wall_single = time.monotonic() - t0
-        cursor = 0
-        t0 = time.monotonic()
-        for i in range(repeats):
-            ops = [{"op": "append", "ns": "batch-batched",
-                    "record": {"i": i, "j": j}} for j in range(batch_n)]
-            ops.append({"op": "read", "ns": "batch-batched",
-                        "cursor": cursor})
-            results = client.batch(ops)
-            assert all(r.get("ok") for r in results), results
-            cursor = results[-1]["cursor"]
-        wall_batched = time.monotonic() - t0
-        n_single, _ = client.read("batch-single", 0)
-        n_batched, _ = client.read("batch-batched", 0)
-        assert len(n_single) == len(n_batched) == repeats * batch_n
+        with DaemonBackend(addr) as client:
+            cursor = 0
+            t0 = time.monotonic()
+            for i in range(repeats):
+                for j in range(batch_n):
+                    client.append("batch-single", {"i": i, "j": j})
+                _rows, cursor = client.read("batch-single", cursor)
+            wall_single = time.monotonic() - t0
+            cursor = 0
+            t0 = time.monotonic()
+            for i in range(repeats):
+                ops = [{"op": "append", "ns": "batch-batched",
+                        "record": {"i": i, "j": j}} for j in range(batch_n)]
+                ops.append({"op": "read", "ns": "batch-batched",
+                            "cursor": cursor})
+                results = client.batch(ops)
+                assert all(r.get("ok") for r in results), results
+                cursor = results[-1]["cursor"]
+            wall_batched = time.monotonic() - t0
+            n_single, _ = client.read("batch-single", 0)
+            n_batched, _ = client.read("batch-batched", 0)
+            assert len(n_single) == len(n_batched) == repeats * batch_n
         us_single = wall_single / repeats * 1e6
         us_batched = wall_batched / repeats * 1e6
         speedup = us_single / us_batched if us_batched else 0.0
@@ -259,10 +336,150 @@ def bench_batch(transport: str, batch_n: int, repeats: int = 20):
                 # the shutdown reply can race the daemon's drain when
                 # other connections (our bench client) are still open;
                 # the child's exit code is the real cleanliness signal
-                DaemonBackend(addr).shutdown_daemon()
+                with DaemonBackend(addr) as closer:
+                    closer.shutdown_daemon()
             except Exception:
                 pass
             child.wait(timeout=10)
+
+
+def _pct(sorted_ms, q: float) -> float:
+    if not sorted_ms:
+        return 0.0
+    idx = min(len(sorted_ms) - 1, int(q * len(sorted_ms)))
+    return sorted_ms[idx]
+
+
+def _shutdown_fleet(fleet) -> None:
+    from repro.state import DaemonBackend
+    for addr, child in fleet:
+        if child is None or child.poll() is not None:
+            continue
+        try:
+            with DaemonBackend(addr, timeout_s=5.0) as closer:
+                closer.shutdown_daemon()
+        except Exception:
+            pass
+        try:
+            child.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            child.kill()
+
+
+def _bench_shard_topology(transport: str, n_shards: int):
+    """One topology: spawn `n_shards` fresh daemons, drive them with
+    SHARD_WORKERS processes of batched frames, return the by_threads row
+    (or None when a daemon could not be started). Aggregate ops/s is
+    total ops over the slowest worker's wall — the number that should
+    scale with shard count; per-shard ops/s is read back from each
+    daemon's own `daemon.op.*` histograms so skew is visible."""
+    from repro.state import DaemonBackend, ShardedBackend
+    fleet = []
+    for _ in range(n_shards):
+        addr, child = _spawn_daemon(
+            transport, ("--op-delay", str(SHARD_OP_DELAY_S)))
+        if addr is None:
+            _shutdown_fleet(fleet)
+            return None
+        fleet.append((addr, child))
+    addrs = [addr for addr, _child in fleet]
+    try:
+        code = _SHARD_WORKER_CODE.format(src=_SRC)
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", code, ",".join(addrs),
+             str(SHARD_BATCHES), str(SHARD_BATCH_OPS),
+             str(SHARD_NAMESPACES), f"w{i}"],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+            for i in range(SHARD_WORKERS)]
+        outs = [p.communicate(timeout=300) for p in procs]
+        rows = []
+        for p, (out, err) in zip(procs, outs):
+            if p.returncode != 0:
+                raise RuntimeError(f"shard worker failed: {err[-2000:]}")
+            rows.append(json.loads(out.strip().splitlines()[-1]))
+        wall = max(r["wall"] for r in rows)
+        total_ops = sum(r["ops"] for r in rows)
+        total_appends = sum(r["appends"] for r in rows)
+        lats = sorted(l for r in rows for l in r["lat_ms"])
+        # correctness: every acknowledged append is readable through the
+        # ring afterwards, across every namespace of every worker
+        with ShardedBackend.from_addresses(addrs) as ring:
+            seen = 0
+            for i in range(SHARD_WORKERS):
+                for k in range(SHARD_NAMESPACES):
+                    ns_rows, _ = ring.read(f"shard-bench-w{i}-{k}", 0)
+                    seen += len(ns_rows)
+        assert seen == total_appends, \
+            f"shards={n_shards}: lost rows: {seen} != {total_appends}"
+        per_shard_rps = {}
+        for i, addr in enumerate(addrs):
+            with DaemonBackend(addr, timeout_s=5.0) as client:
+                snap = client.metrics()
+            count = sum(
+                int(h.get("count", 0))
+                for name, h in snap.get("histograms", {}).items()
+                if name.startswith("daemon.op.") and
+                name.endswith(".seconds"))
+            per_shard_rps[f"shard-{i}"] = round(count / wall, 1)
+        return {
+            "requests": total_ops,
+            "throughput_rps": round(total_ops / wall, 1),
+            "p50_ms": round(_pct(lats, 0.50), 3),
+            "p99_ms": round(_pct(lats, 0.99), 3),
+            "per_shard_rps": per_shard_rps,
+        }
+    finally:
+        _shutdown_fleet(fleet)
+
+
+def bench_shards(transport: str, max_shards: int):
+    """Aggregate ops/s across 1-, 2- and 4-shard topologies (capped at
+    `max_shards`), written to BENCH_shards.json in bench_diff.py's
+    backends/tiers/by_threads shape. Returns (rps_1shard, scaling_1_to_2)
+    or (0.0, 0.0) when skipped."""
+    if transport == "unix" and not HAS_UNIX_SOCKETS:
+        print("shards: skipped (no unix-domain sockets on this platform)")
+        return 0.0, 0.0
+    topologies = [n for n in (1, 2, 4) if n <= max_shards]
+    tiers = {}
+    rps_by_n = {}
+    for n in topologies:
+        row = _bench_shard_topology(transport, n)
+        if row is None:
+            print(f"shards({transport}) n={n}: skipped "
+                  f"(daemon failed to start)")
+            return 0.0, 0.0
+        tiers[f"shards-{n}"] = {"by_threads": {str(SHARD_WORKERS): row}}
+        rps_by_n[n] = row["throughput_rps"]
+        shard_txt = " ".join(f"{k}={v:.0f}" for k, v in
+                             sorted(row["per_shard_rps"].items()))
+        print(f"shards({transport}) n={n}: {row['throughput_rps']:.0f} "
+              f"ops/s aggregate (p50 {row['p50_ms']:.1f} ms, p99 "
+              f"{row['p99_ms']:.1f} ms; per-shard {shard_txt})")
+    scaling = {}
+    if 1 in rps_by_n and 2 in rps_by_n and rps_by_n[1]:
+        scaling["1_to_2"] = round(rps_by_n[2] / rps_by_n[1], 2)
+    if 2 in rps_by_n and 4 in rps_by_n and rps_by_n[2]:
+        scaling["2_to_4"] = round(rps_by_n[4] / rps_by_n[2], 2)
+    doc = {
+        "benchmark": "state_shards",
+        "created_unix": time.time(),
+        "transport": transport,
+        "workers": SHARD_WORKERS,
+        "batches_per_worker": SHARD_BATCHES,
+        "ops_per_batch": SHARD_BATCH_OPS + 1,
+        "op_delay_ms": SHARD_OP_DELAY_S * 1e3,
+        "backends": {f"sharded-{transport}": {"tiers": tiers}},
+        "scaling": scaling,
+    }
+    with open(SHARD_BENCH_FILE, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    if scaling:
+        print(f"shards({transport}) scaling: " +
+              " ".join(f"{k}={v:.2f}x" for k, v in sorted(scaling.items())))
+    print(f"wrote {SHARD_BENCH_FILE}")
+    return rps_by_n.get(1, 0.0), scaling.get("1_to_2", 0.0)
 
 
 def main(argv=None) -> None:
@@ -276,6 +493,13 @@ def main(argv=None) -> None:
                     help="also measure batched vs single-op wire "
                          "throughput with N appends + 1 read per group "
                          "(default: $STATE_BACKENDS_BATCH, off)")
+    ap.add_argument("--shards", type=int, metavar="N",
+                    default=int(os.environ.get("STATE_BACKENDS_SHARDS",
+                                               "0")) or None,
+                    help="also measure aggregate ops/s across 1-, 2- and "
+                         "4-shard topologies capped at N, writing "
+                         "BENCH_shards.json "
+                         "(default: $STATE_BACKENDS_SHARDS, off)")
     # argv=None means "called programmatically" (benchmarks/run.py): use
     # defaults rather than swallowing the harness's own sys.argv
     args = ap.parse_args(argv if argv is not None else [])
@@ -289,6 +513,9 @@ def main(argv=None) -> None:
     if args.batch:
         us_single, batch_speedup = bench_batch(args.transport, args.batch)
         print(f"state_backends_batch,{us_single:.1f},{batch_speedup:.2f}")
+    if args.shards:
+        rps_one, scale_1_2 = bench_shards(args.transport, args.shards)
+        print(f"state_backends_shards,{rps_one:.1f},{scale_1_2:.2f}")
 
 
 if __name__ == "__main__":

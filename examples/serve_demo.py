@@ -55,6 +55,40 @@ its first request:
   PYTHONPATH=src python -m repro.state.daemon \\
       --listen crispy-host:7421 --ping
 
+Sharded fleets, replication & failover
+--------------------------------------
+One daemon is a single writer AND a single point of failure. When one
+isn't enough, shard the state plane — same `StateBackend` protocol, so
+no service code changes (repro.state.sharding):
+
+  # one daemon per shard; shard-1 also ships to a warm standby
+  PYTHONPATH=src python -m repro.state.daemon --socket /tmp/s0.sock \\
+      --shard-name shard-0
+  PYTHONPATH=src python -m repro.state.daemon --socket /tmp/s1.sock \\
+      --shard-name shard-1 --standby /tmp/s1-standby.sock \\
+      --replicate-interval 0.5
+  # the fleet client: namespaces route to their owning shard on a
+  # stable hash ring; batch frames split per shard and fan out
+  backend = ShardedBackend.from_addresses(
+      ["/tmp/s0.sock", "/tmp/s1.sock"],
+      standbys=[None, "/tmp/s1-standby.sock"])
+  svc = AllocationService(catalog, history, backend=backend)
+
+Each namespace lives on exactly ONE shard, so every per-namespace
+guarantee (append order, CAS arbitration, the budget envelope's
+never-over-grant) is untouched. If shard-1's primary dies, the client
+retries its standby once and keeps going — acknowledged rows that
+replication delivered are already there, and `publish_topology(backend)`
+leaves a topology doc on every node so clients re-resolve the fleet
+after failover. Watch per-shard heat and stitched traces fleet-wide:
+
+  PYTHONPATH=src python -m repro.telemetry.trace_tool \\
+      --daemon /tmp/s0.sock,/tmp/s1.sock --fleet
+
+Scaling is measurable, not aspirational:
+`benchmarks/state_backends.py --shards 4` records aggregate ops/s for
+1/2/4-shard topologies in BENCH_shards.json.
+
 Append-only logs grow forever under "later rows win", so the daemon
 folds them into snapshot-plus-tail form: `--compact-after N`
 auto-compacts a log namespace every N appends, `--compact-max-age S`
@@ -163,39 +197,40 @@ def demo_shared_state(n_jobs: int = 8):
     with CrispyDaemon(sock, root=os.path.join(tmp, "state"),
                       listen="127.0.0.1:0") as daemon:
         def serve_all(tag, address):
-            backend = DaemonBackend(address)
-            budget = ProfilingBudget(charge_s=600.0 * len(jobs),
-                                     backend=backend)
-            with AllocationService(catalog, history, backend=backend,
-                                   adaptive=True, budget=budget) as svc:
-                for j in jobs:
-                    full = j.dataset_gib * GiB
-                    AllocationEndpoint(svc).handle(
-                        job=j.name, profile_at=make_profile_fn(j),
-                        full_size=full, anchor=full * 0.01)
-                s, snap = svc.stats, budget.snapshot()
-                print(f"  service {tag} [{svc.backend_kind} via "
-                      f"{svc.backend_transport}:{svc.backend_address}]: "
-                      f"{s.profile_calls} fresh profiles, "
-                      f"{s.registry_hits} registry hits, "
-                      f"{s.store_hits} store hits; shared envelope "
-                      f"{snap['charged_s']:.0f}/{snap['charge_s']:.0f}s "
-                      f"charged")
-                return s.profile_calls
+            with DaemonBackend(address) as backend:
+                budget = ProfilingBudget(charge_s=600.0 * len(jobs),
+                                         backend=backend)
+                with AllocationService(catalog, history, backend=backend,
+                                       adaptive=True, budget=budget) as svc:
+                    for j in jobs:
+                        full = j.dataset_gib * GiB
+                        AllocationEndpoint(svc).handle(
+                            job=j.name, profile_at=make_profile_fn(j),
+                            full_size=full, anchor=full * 0.01)
+                    s, snap = svc.stats, budget.snapshot()
+                    print(f"  service {tag} [{svc.backend_kind} via "
+                          f"{svc.backend_transport}:{svc.backend_address}]: "
+                          f"{s.profile_calls} fresh profiles, "
+                          f"{s.registry_hits} registry hits, "
+                          f"{s.store_hits} store hits; shared envelope "
+                          f"{snap['charged_s']:.0f}/{snap['charge_s']:.0f}s "
+                          f"charged")
+                    return s.profile_calls
         first = serve_all("A", sock)                 # co-located: unix
         second = serve_all("B", daemon.tcp_address)  # "remote": tcp
         print(f"shared state: service B re-profiled {second} points "
               f"after A spent {first} (daemon shares store+registry+"
               f"budget across transports)")
-        stats = DaemonBackend(sock).compact("profiles")
-        print(f"  compaction: profile log {stats['before']} -> "
-              f"{stats['after']} rows ({stats['dropped']} shadowed rows "
-              f"dropped; survives --root restarts)")
-        # the daemon serves its own telemetry as a wire op — identical
-        # over both transports (a real deployment publishes it with
-        # `--telemetry-interval S` and reads the fleet with
-        # `fleet_snapshot(backend)`)
-        dm = DaemonBackend(sock).metrics()
+        with DaemonBackend(sock) as admin:
+            stats = admin.compact("profiles")
+            print(f"  compaction: profile log {stats['before']} -> "
+                  f"{stats['after']} rows ({stats['dropped']} shadowed rows "
+                  f"dropped; survives --root restarts)")
+            # the daemon serves its own telemetry as a wire op — identical
+            # over both transports (a real deployment publishes it with
+            # `--telemetry-interval S` and reads the fleet with
+            # `fleet_snapshot(backend)`)
+            dm = admin.metrics()
         busiest = max(
             ((n.split(".")[2], h["count"])
              for n, h in dm["histograms"].items()
@@ -211,8 +246,9 @@ def demo_shared_state(n_jobs: int = 8):
         # Against a live fleet the CLI does the same:
         #   python -m repro.telemetry.trace_tool --daemon /tmp/crispy.sock \
         #       --slowest 5 --expect-cross-process
-        publish_traces(DaemonBackend(sock), "serve-demo")
-        trees = stitch_fleet_traces(collect_fleet(DaemonBackend(sock)))
+        with DaemonBackend(sock) as tracer:
+            publish_traces(tracer, "serve-demo")
+            trees = stitch_fleet_traces(collect_fleet(tracer))
         crossed = cross_process_trees(trees)
         print(f"  tracing: {len(trees)} stitched traces, {len(crossed)} "
               f"cross-process; last one:")

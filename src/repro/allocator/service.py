@@ -428,6 +428,17 @@ class AllocationService:
         None for local backends."""
         return getattr(self._shared_backend(), "address", None)
 
+    @property
+    def backend_shards(self) -> Optional[List[Dict]]:
+        """Shard topology of a sharded backend: one {"name", "kind",
+        "address", "standby"} descriptor per shard (see
+        repro.state.sharding.ShardedBackend.topology); None over a
+        single backend."""
+        topo = getattr(self._shared_backend(), "topology", None)
+        if not callable(topo):
+            return None
+        return topo().get("shards")
+
     def metrics(self) -> Dict:
         """Snapshot of every instrument on this service's registry —
         the `service.*` counters/histograms plus whatever the pipeline,

@@ -548,7 +548,13 @@ def refresh_views(*views) -> int:
 
     Per-op error isolation carries through: a failed slot leaves that
     view stale (it re-reads the same tail next time) without aborting
-    its neighbors."""
+    its neighbors.
+
+    Over a sharded backend (repro.state.sharding.ShardedBackend) the
+    coalesced frame is split by owning shard INSIDE `batch()` — each
+    view's namespace lives on exactly one shard, sub-frames fan out
+    concurrently, and results come back in this frame's order — so the
+    one-call-per-backend pattern here needs no sharding awareness."""
     total = 0
     groups: List[Tuple[StateBackend, List]] = []
     for view in views:
@@ -593,7 +599,14 @@ def sync_views(*views) -> int:
     failed refresh slot leaves that view stale, and a transport error
     mid-frame restores every popped row before propagating. Views
     without the hooks fall back to their own `flush_writes`/`flush` +
-    `refresh`. Returns rows/records applied by the refresh half."""
+    `refresh`. Returns rows/records applied by the refresh half.
+
+    Sharded backends keep every one of those guarantees: a view's flush
+    and refresh ops share a namespace, hence a shard, hence relative
+    order within that shard's sub-frame (refresh still reads its own
+    flush); a shard whose primary AND standby are down degrades to
+    {"ok": false} slots for ITS ops only, so exactly the affected
+    views re-queue while views on healthy shards proceed."""
     total = 0
     groups: List[Tuple[StateBackend, List]] = []
     for view in views:

@@ -206,6 +206,11 @@ class AllocationEndpoint:
             # for a daemon, over which transport ("unix" | "tcp")
             wire["backend"] = self.service.backend_kind
             wire["backend_transport"] = self.service.backend_transport
+            shards = self.service.backend_shards
+            if shards is not None:
+                # only present over a sharded backend: single-backend
+                # wire answers keep their exact historical shape
+                wire["backend_shards"] = [s["name"] for s in shards]
             wire["trace_id"] = sp.trace_id if sp is not None else None
             if include_trace:
                 # opt-in ONLY: the rest of the wire answer stays stable
@@ -225,6 +230,7 @@ class AllocationEndpoint:
         out = {"backend": self.service.backend_kind,
                "backend_transport": self.service.backend_transport,
                "backend_address": self.service.backend_address,
+               "backend_shards": self.service.backend_shards,
                "metrics": self.service.metrics()}
         if self.service.budget is not None:
             out["budget"] = self.service.budget.snapshot()
@@ -237,6 +243,7 @@ class AllocationEndpoint:
         out = {"backend": self.service.backend_kind,
                "backend_transport": self.service.backend_transport,
                "backend_address": self.service.backend_address,
+               "backend_shards": self.service.backend_shards,
                "requests": s.requests, "batches": s.batches,
                "profile_calls": s.profile_calls,
                "cache_hits": s.cache_hits, "store_hits": s.store_hits,

@@ -27,6 +27,10 @@ one `StateBackend` protocol:
                    and age handling) + `prune_registry_doc` (size/age
                    registry eviction with doc tombstones). Every backend
                    exposes them via `compact(ns, ...)`.
+  sharding.py      `ShardedBackend` — the same protocol over N daemons
+                   via consistent hashing of namespaces — plus
+                   `ReplicationShipper`/`ReplicationApplier` (warm-
+                   standby replication) and the topology-doc helpers.
 
 Daemon lifecycle (full wire protocol in daemon.py):
 
@@ -72,13 +76,56 @@ one batched append frame. The daemon records batch widths in
 `daemon.batch.size` and still times each sub-op into its
 `daemon.op.<op>.seconds` histogram.
 
+Sharded fleet topology, replication and failover (sharding.py): when one
+daemon's write throughput caps the fleet, shard the state plane —
+
+  topology   N primary daemons, each optionally paired with a warm
+             standby:
+
+               python -m repro.state.daemon --socket /tmp/s0.sock \
+                   --shard-name shard-0 --standby /tmp/s0-standby.sock
+               python -m repro.state.daemon --socket /tmp/s0-standby.sock
+               python -m repro.state.daemon --socket /tmp/s1.sock \
+                   --shard-name shard-1
+
+             backend = ShardedBackend.from_addresses(
+                 ["/tmp/s0.sock", "/tmp/s1.sock"],
+                 standbys=["/tmp/s0-standby.sock", None])
+             publish_topology(backend)   # the doc lives on the ring
+
+             Namespaces route by a stable md5 hash ring with virtual
+             nodes, so each namespace (hence each budget envelope,
+             each log, each document key's arbitration) is owned by
+             exactly ONE shard and every per-namespace protocol
+             guarantee holds unchanged; `batch()` splits frames by
+             owning shard and fans out concurrently, so aggregate
+             ops/s scales with shard count
+             (`benchmarks/state_backends.py --shards N`).
+
+  replicate  each primary's `ReplicationShipper` periodically ships log
+             tails + changed documents to its standby as batched
+             `replicate` frames — idempotent by cursor/version, full
+             resync after a compaction gap, auth-gated like every op.
+
+  failover   a `DaemonBackend(primary, standby=.., shard_name=..)` that
+             gets `StateBackendUnavailable` from its primary retries
+             the standby ONCE and re-resolves the shard's current
+             primary/standby from the topology doc stored at
+             (`__topology__`, "shards") on whatever node answered.
+             Mutating frames interrupted mid-flight may execute at most
+             twice (availability over exactly-once); log rows are
+             idempotent under later-wins folding and CAS/reserve
+             re-arbitrate, so views stay correct.
+
 Choosing a backend: `InMemoryBackend` for tests and single-process
 embedding; `FileBackend` for a handful of processes on one host with no
 extra moving parts; `DaemonBackend` when reservation traffic is contended,
 you want one process to own all writes, or clients live on other hosts
-(tcp). `benchmarks/state_backends.py --transport {unix,tcp}` measures
-file vs daemon under multi-process load on either transport, and its
-`--batch N` flag measures batched vs single-op round trips.
+(tcp); `ShardedBackend` when one daemon's throughput or blast radius is
+the bottleneck. `benchmarks/state_backends.py --transport {unix,tcp}`
+measures file vs daemon under multi-process load on either transport, its
+`--batch N` flag measures batched vs single-op round trips, and its
+`--shards N` flag measures aggregate ops/s over 1/2/4-shard topologies.
 """
 from repro.state.backend import (CASConflict, InMemoryBackend, StateBackend,
                                  StateBackendError, StateBackendUnavailable)
@@ -94,13 +141,21 @@ from repro.state.transport import (AUTH_TOKEN_ENV, default_auth_token,
 _DAEMON_EXPORTS = ("CrispyDaemon", "DaemonBackend", "HAS_UNIX_SOCKETS",
                    "default_socket_path")
 
+# sharding exports resolve lazily too: sharding imports DaemonBackend for
+# from_addresses/shipping, so eager import would drag daemon.py in
+_SHARDING_EXPORTS = ("HashRing", "ReplicationApplier", "ReplicationShipper",
+                     "ShardedBackend", "TOPOLOGY_KEY", "TOPOLOGY_NS",
+                     "load_topology", "publish_topology")
+
 __all__ = [
     "AUTH_TOKEN_ENV", "CASConflict", "CrispyDaemon", "DaemonBackend",
     "DEFAULT_KEY_FIELDS", "FileBackend", "FileLock", "HAS_FCNTL",
-    "HAS_UNIX_SOCKETS", "InMemoryBackend", "StateBackend",
-    "StateBackendError", "StateBackendUnavailable", "default_auth_token",
-    "default_socket_path", "describe_address", "fold_log", "parse_address",
-    "prune_registry_doc",
+    "HAS_UNIX_SOCKETS", "HashRing", "InMemoryBackend",
+    "ReplicationApplier", "ReplicationShipper", "ShardedBackend",
+    "StateBackend", "StateBackendError", "StateBackendUnavailable",
+    "TOPOLOGY_KEY", "TOPOLOGY_NS", "default_auth_token",
+    "default_socket_path", "describe_address", "fold_log", "load_topology",
+    "parse_address", "prune_registry_doc", "publish_topology",
 ]
 
 
@@ -108,4 +163,7 @@ def __getattr__(name):
     if name in _DAEMON_EXPORTS:
         from repro.state import daemon
         return getattr(daemon, name)
+    if name in _SHARDING_EXPORTS:
+        from repro.state import sharding
+        return getattr(sharding, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

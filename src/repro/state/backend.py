@@ -213,6 +213,19 @@ class StateBackend(ABC):
         except Exception as e:
             return {"ok": False, "error": f"{type(e).__name__}: {e}"}
 
+    # -- replication enumeration --------------------------------------------
+    def log_namespaces(self) -> List[str]:
+        """Namespaces that currently hold log rows. Used by the warm-standby
+        ReplicationShipper (which runs colocated with the primary's local
+        storage backend) to discover what to ship; backends that cannot
+        enumerate return [] and simply aren't shippable sources."""
+        return []
+
+    def doc_snapshot(self) -> List[Tuple[str, str, Optional[Dict], int]]:
+        """Every versioned document as (ns, key, value, version). Same
+        consumer and same default as `log_namespaces`."""
+        return []
+
     # -- lifecycle ----------------------------------------------------------
     def ping(self) -> bool:
         """True when the backend is reachable."""
@@ -285,3 +298,14 @@ class InMemoryBackend(StateBackend):
                         cur_ver)
             self._docs[(ns, key)] = (dict(value), cur_ver + 1)
             return True, dict(value), cur_ver + 1
+
+    def log_namespaces(self) -> List[str]:
+        with self._lock:
+            return sorted(ns for ns, log in self._logs.items()
+                          if log or self._bases.get(ns, 0))
+
+    def doc_snapshot(self) -> List[Tuple[str, str, Optional[Dict], int]]:
+        with self._lock:
+            return [(ns, key, dict(value), version)
+                    for (ns, key), (value, version) in sorted(
+                        self._docs.items())]

@@ -53,6 +53,9 @@ Wire protocol (one JSON object per line, request -> response):
   {"op": "traces", "clear": false}                 -> {"ok": true,
                                                        "source": ..,
                                                        "traces": [..]}
+  {"op": "replicate", "log": {..} | "doc": {..}}   -> {"ok": true,
+                                                       "applied": ..,
+                                                       "cursor"/"version"}
   {"op": "batch", "ops": [<frame>, ..]}            -> {"ok": true,
                                                        "results": [..]}
   {"op": "shutdown"}                               -> {"ok": true}
@@ -125,6 +128,20 @@ reconnect once on a transport error — a daemon restarted on the same
 address is picked up transparently; a daemon that stays down surfaces
 `StateBackendUnavailable` naming the exact unix path or host:port it
 could not reach.
+
+Sharding + warm-standby replication (repro.state.sharding): a daemon
+started with `--shard-name shard-0 --standby ADDR` runs a
+`ReplicationShipper` that periodically ships log tails and changed
+documents to the standby daemon via batched `replicate` frames
+(idempotent by cursor/version; `--replicate-interval` sets the period).
+The applied `replicate` op is purely additive to the wire protocol —
+legacy frames stay byte-identical (pinned by the conformance suite).
+`--shard-name` also tags the daemon's telemetry source as
+"crispy-daemon@<shard>", so fleet snapshots and `trace_tool --fleet`
+attribute per-op heat to the right shard. Clients carrying `standby=`
+fail over: on `StateBackendUnavailable` they retry the standby address
+once and re-resolve the shard's primary from the topology doc stored
+on the ring itself (sharding.publish_topology).
 """
 from __future__ import annotations
 
@@ -144,14 +161,15 @@ from repro.state.backend import (InMemoryBackend, StateBackend,
 from repro.state.compaction import prune_registry_doc
 from repro.state.file_backend import FileBackend
 from repro.state.transport import (BATCH_EXCLUDED_OPS, BATCH_OP,
-                                   MAX_FRAME_BYTES, TRACE_FIELD,
+                                   MAX_FRAME_BYTES, TOPOLOGY_KEY,
+                                   TOPOLOGY_NS, TRACE_FIELD,
                                    auth_frame, connect,
                                    default_auth_token, describe_address,
                                    parse_address, recv_frame, send_frame)
 from repro.telemetry import (MetricsRegistry, StructuredLogger,
                              TelemetryPublisher, TraceRing,
                              current_trace_context, span)
-from time import perf_counter
+from time import perf_counter, sleep
 
 HAS_UNIX_SOCKETS = hasattr(socket, "AF_UNIX")
 
@@ -182,7 +200,11 @@ class CrispyDaemon:
                  compact_max_age_s: Optional[float] = None,
                  registry_max_records: Optional[int] = None,
                  registry_max_age_s: Optional[float] = None,
-                 telemetry=None):           # repro.telemetry MetricsRegistry
+                 telemetry=None,            # repro.telemetry MetricsRegistry
+                 standby: Optional[str] = None,
+                 replicate_interval_s: float = 0.5,
+                 shard_name: Optional[str] = None,
+                 op_delay_s: float = 0.0):
         if socket_path is None and listen is None:
             raise StateBackendError(
                 "CrispyDaemon needs a unix socket_path, a tcp listen "
@@ -201,6 +223,21 @@ class CrispyDaemon:
         self.compact_max_age_s = compact_max_age_s
         self.registry_max_records = registry_max_records
         self.registry_max_age_s = registry_max_age_s
+        # warm-standby replication (repro.state.sharding): when `standby`
+        # names another daemon, start() launches a ReplicationShipper that
+        # periodically ships this daemon's state there; `shard_name` tags
+        # the telemetry source so fleet views attribute per-shard heat
+        self.standby = standby
+        self.replicate_interval_s = replicate_interval_s
+        self.shard_name = shard_name
+        self.shipper = None                      # set by start() if standby
+        self._applier = None                     # lazy ReplicationApplier
+        # opt-in per-mutation service-time model (--op-delay): slept
+        # INSIDE the writer lock, where a durable backend would pay its
+        # fsync — makes shard-topology scaling measurable on hosts with
+        # fewer cores than shards, and widens failover race windows for
+        # tests. Zero (the default) is a no-op on the hot path.
+        self.op_delay_s = float(op_delay_s)
         self.tcp_address: Optional[str] = None   # resolved after start()
         self._write_lock = threading.Lock()
         self._appends_since_compact: Dict[str, int] = {}
@@ -247,6 +284,13 @@ class CrispyDaemon:
             self._op_hist[op] = h
         return h
 
+    @property
+    def source(self) -> str:
+        """Telemetry source label: shard-qualified when this daemon is
+        one shard of a fleet, the historical label otherwise."""
+        return (f"crispy-daemon@{self.shard_name}" if self.shard_name
+                else "crispy-daemon")
+
     # -- request dispatch ---------------------------------------------------
     def handle_request(self, req: Dict) -> Dict:
         op = req.get("op")
@@ -279,8 +323,9 @@ class CrispyDaemon:
             return {"ok": True, "kind": b.kind}
         if op == "metrics":
             # per-op latency histograms + frame/byte/compaction counters,
-            # identical over both transports
-            return {"ok": True, "kind": b.kind,
+            # identical over both transports; `source` is shard-qualified
+            # so fleet aggregation can attribute per-shard heat
+            return {"ok": True, "kind": b.kind, "source": self.source,
                     "metrics": self.telemetry.snapshot()}
         if op == "traces":
             # finished daemon-side span roots, ready for stitching; the
@@ -288,11 +333,21 @@ class CrispyDaemon:
             roots = [s.to_dict() for s in self.trace_ring.traces()]
             if req.get("clear"):
                 self.trace_ring.clear()
-            return {"ok": True, "source": "crispy-daemon",
+            return {"ok": True, "source": self.source,
                     "traces": roots}
+        if op == "replicate":
+            # warm-standby application, idempotent by primary cursor /
+            # doc version (repro.state.sharding.ReplicationApplier)
+            if self._applier is None:
+                from repro.state.sharding import ReplicationApplier
+                self._applier = ReplicationApplier(b)
+            with self._write_lock:
+                return self._applier.apply(req)
         if op == "append":
             with self._write_lock:
                 b.append(req["ns"], req["record"])
+                if self.op_delay_s:
+                    sleep(self.op_delay_s)
                 self._maybe_autocompact_locked(req["ns"])
             return {"ok": True}
         if op == "read":
@@ -306,6 +361,8 @@ class CrispyDaemon:
                 won, value, version = b.cas(req["ns"], req["key"],
                                             int(req["version"]),
                                             req["value"])
+                if self.op_delay_s:
+                    sleep(self.op_delay_s)
                 if won and self._maybe_prune_registry_locked(req["ns"],
                                                              req["key"]):
                     value, version = b.load(req["ns"], req["key"])
@@ -319,6 +376,8 @@ class CrispyDaemon:
                 granted, doc = b.reserve(req["ns"], req["key"],
                                          req.get("deltas", {}),
                                          req.get("limits") or {})
+                if self.op_delay_s:
+                    sleep(self.op_delay_s)
             return {"ok": True, "granted": granted, "doc": doc}
         if op == "compact":
             with self._write_lock:
@@ -500,6 +559,11 @@ class CrispyDaemon:
         if background:
             for server in self._servers:
                 self._serve_on_thread(server)
+        if self.standby is not None and self.shipper is None:
+            from repro.state.sharding import ReplicationShipper
+            self.shipper = ReplicationShipper(
+                self.backend, self.standby, auth_token=self.auth_token,
+                period_s=self.replicate_interval_s).start()
         return self
 
     def _serve_on_thread(self, server) -> None:
@@ -571,6 +635,9 @@ class CrispyDaemon:
         servers[-1].serve_forever(poll_interval=0.05)
 
     def stop(self) -> None:
+        shipper, self.shipper = self.shipper, None
+        if shipper is not None:
+            shipper.stop()      # final ship drains the tail when reachable
         servers, self._servers = self._servers, []
         for server in servers:
             if server in self._serving:
@@ -636,7 +703,9 @@ class DaemonBackend(StateBackend):
     def __init__(self, address: Optional[str] = None,
                  timeout_s: float = DEFAULT_TIMEOUT_S,
                  auth_token: Optional[str] = None,
-                 read_timeout_s: Optional[float] = None):
+                 read_timeout_s: Optional[float] = None,
+                 standby: Optional[str] = None,
+                 shard_name: Optional[str] = None):
         self.address = address or default_socket_path()
         self._parsed = parse_address(self.address)
         self.transport = self._parsed[0]          # "unix" | "tcp"
@@ -652,6 +721,13 @@ class DaemonBackend(StateBackend):
                                else timeout_s)
         self.auth_token = (auth_token if auth_token is not None
                            else default_auth_token())
+        # client-side failover (repro.state.sharding): when this client's
+        # primary is unreachable and `standby` names the shard's warm
+        # standby, _call retries there ONCE, then re-resolves the shard's
+        # current primary/standby from the topology doc on the ring
+        self.standby_address = standby
+        self.shard_name = shard_name
+        self.failovers = 0              # observable: how often we switched
         self._local = threading.local()
         # every open (thread, sock, file) triple, for the dead-thread
         # sweep + close(): per-thread caching alone leaks sockets when
@@ -673,8 +749,15 @@ class DaemonBackend(StateBackend):
             files = (sock, sock.makefile("rwb"))
             self._local.files = files
             with self._conn_lock:
+                # thread idents are REUSED: a new thread can inherit a
+                # dead thread's ident before any sweep ran, and plainly
+                # overwriting the slot would leak the dead thread's
+                # socket until process exit — close the usurped entry
+                stale = self._conn_registry.pop(threading.get_ident(), None)
                 self._conn_registry[threading.get_ident()] = \
                     (threading.current_thread(), files)
+            if stale is not None and stale[1] is not files:
+                self._close_files(stale[1])
             if self.auth_token is not None:
                 self._auth(files[1])
         return files
@@ -737,6 +820,70 @@ class DaemonBackend(StateBackend):
         return op in self._IDEMPOTENT_OPS
 
     def _call(self, payload: Dict) -> Dict:
+        """`_call_once` plus client-side failover: when the primary is
+        unreachable and a standby address is known, switch every future
+        connection to the standby, retry the frame ONCE there, and
+        re-resolve the shard's topology from the doc on the ring. A
+        mutating frame that died mid-flight may thus execute at most
+        twice (once invisibly on the dying primary, once on the
+        standby); log rows are idempotent under the store's later-wins
+        fold and CAS/reserve re-arbitrate, the same contract as the
+        single-daemon reconnect retry. `shutdown` never fails over — a
+        dead primary must not take its healthy standby down with it."""
+        try:
+            return self._call_once(payload)
+        except StateBackendUnavailable as primary_err:
+            target = self.standby_address
+            if (target is None or payload.get("op") == "shutdown"
+                    or parse_address(target) == self._parsed):
+                raise
+            self._activate(target)
+            try:
+                resp = self._call_once(payload)
+            except StateBackendUnavailable:
+                raise primary_err       # both down: name the primary error
+            self.failovers += 1
+            self._adopt_topology()
+            return resp
+
+    def _activate(self, address: str) -> None:
+        """Point every future connection at `address` (the old address
+        becomes the failover candidate, so a recovered ex-primary can be
+        retried if the new one dies too)."""
+        self.close()                    # sever EVERY thread's cached conn
+        old = self.address
+        self.address = address
+        self._parsed = parse_address(address)
+        self.transport = self._parsed[0]
+        self.socket_path = (self._parsed[1]
+                            if self.transport == "unix" else None)
+        self.standby_address = old
+
+    def _adopt_topology(self) -> None:
+        """Refresh this shard's primary/standby from the topology doc on
+        whatever node we just reached (best-effort: a fleet without a
+        published doc keeps the swapped pair from `_activate`)."""
+        if self.shard_name is None or getattr(self._local, "adopting",
+                                              False):
+            return
+        self._local.adopting = True     # the load() below re-enters _call
+        try:
+            value, _version = self.load(TOPOLOGY_NS, TOPOLOGY_KEY)
+            entry = ((value or {}).get("shards") or {}).get(self.shard_name)
+            if not isinstance(entry, dict):
+                return
+            primary, standby = entry.get("primary"), entry.get("standby")
+            for candidate in (primary, standby):
+                if (candidate and
+                        parse_address(candidate) != self._parsed):
+                    self.standby_address = candidate
+                    return
+        except (StateBackendError, ValueError):
+            pass
+        finally:
+            self._local.adopting = False
+
+    def _call_once(self, payload: Dict) -> Dict:
         op = payload.get("op")
         ctx = current_trace_context()
         if ctx is not None:
@@ -901,17 +1048,29 @@ class DaemonBackend(StateBackend):
                            "max_age_s": max_age_s})
         return list(resp.get("evicted", []))
 
-    def metrics(self) -> Dict:
+    def metrics(self, with_source: bool = False):
         """The daemon's telemetry snapshot (`daemon.op.<op>.seconds`
         histograms + frame/byte/auth-failure/compaction counters) —
-        same answer over unix and tcp transports."""
-        return self._call({"op": "metrics"})["metrics"]
+        same answer over unix and tcp transports. `with_source=True`
+        returns (source, snapshot) where source is the daemon's
+        shard-qualified telemetry label ("crispy-daemon@shard-0" on a
+        fleet member, "crispy-daemon" on a lone daemon or one that
+        predates sharding)."""
+        resp = self._call({"op": "metrics"})
+        if with_source:
+            return resp.get("source") or "crispy-daemon", resp["metrics"]
+        return resp["metrics"]
 
-    def traces(self, clear: bool = False) -> List[Dict]:
+    def traces(self, clear: bool = False, with_source: bool = False):
         """The daemon's finished trace roots (span dicts, ready for
-        `stitch_fleet_traces`); `clear=True` drains the ring."""
-        return list(self._call({"op": "traces",
-                                "clear": bool(clear)}).get("traces", []))
+        `stitch_fleet_traces`); `clear=True` drains the ring.
+        `with_source=True` returns (source, roots), same labeling rule
+        as `metrics`."""
+        resp = self._call({"op": "traces", "clear": bool(clear)})
+        roots = list(resp.get("traces", []))
+        if with_source:
+            return resp.get("source") or "crispy-daemon", roots
+        return roots
 
     def ping(self) -> bool:
         try:
@@ -927,7 +1086,10 @@ class DaemonBackend(StateBackend):
     def close(self) -> None:
         """Close EVERY cached connection, not just the calling thread's:
         a service shutting down must release all its daemon slots even
-        for worker threads that are still parked in a pool. Surviving
+        for worker threads that are still parked in a pool — including
+        connections whose owning thread died mid-call (the registry
+        holds them regardless of thread liveness). Idempotent: a second
+        close() finds an empty registry and does nothing. Surviving
         threads that call again after close() reconnect transparently
         (their first attempt fails on the closed socket and `_call`
         retries on a fresh connection)."""
@@ -1129,7 +1291,24 @@ def main(argv: Optional[List[str]] = None) -> int:
                     metavar="S", help="publish the daemon's own metrics "
                     "snapshot (__telemetry__ namespace) and trace roots "
                     "(__traces__) into its backend every S seconds "
-                    "(source 'crispy-daemon')")
+                    "(source 'crispy-daemon', shard-qualified under "
+                    "--shard-name)")
+    ap.add_argument("--standby", default=None, metavar="ADDR",
+                    help="warm-standby daemon address (unix path or "
+                         "host:port); this daemon ships its log tails "
+                         "and changed documents there via batched "
+                         "'replicate' frames")
+    ap.add_argument("--replicate-interval", type=float, default=0.5,
+                    metavar="S", help="seconds between replication "
+                    "rounds to --standby (default 0.5)")
+    ap.add_argument("--shard-name", default=None, metavar="NAME",
+                    help="this daemon's shard name in a sharded fleet "
+                    "(e.g. shard-0); tags telemetry as "
+                    "'crispy-daemon@NAME' for per-shard heat")
+    ap.add_argument("--op-delay", type=float, default=0.0, metavar="S",
+                    help="inject S seconds of per-mutation service time "
+                    "under the writer lock (models a durable backend's "
+                    "fsync; benchmark/failover testing only, default 0)")
     ap.add_argument("--ping", action="store_true",
                     help="health-check a running daemon and exit")
     ap.add_argument("--shutdown", action="store_true",
@@ -1172,7 +1351,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                           compact_after=args.compact_after,
                           compact_max_age_s=args.compact_max_age,
                           registry_max_records=args.registry_max_records,
-                          registry_max_age_s=args.registry_max_age)
+                          registry_max_age_s=args.registry_max_age,
+                          standby=args.standby,
+                          replicate_interval_s=args.replicate_interval,
+                          shard_name=args.shard_name,
+                          op_delay_s=args.op_delay)
     # stop() blocks until serve_forever returns, so it must not run on the
     # thread serve_forever occupies (the signal handler interrupts it)
     for sig in (signal.SIGTERM, signal.SIGINT):
@@ -1185,7 +1368,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 1
     log.info("serving", backend=daemon.backend.kind,
              unix=socket_path, tcp=daemon.tcp_address,
-             auth=bool(auth_token))
+             auth=bool(auth_token), shard=args.shard_name,
+             standby=args.standby)
     if args.port_file and daemon.tcp_address:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:
@@ -1194,7 +1378,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     publisher = None
     if args.telemetry_interval:
         publisher = TelemetryPublisher(
-            daemon.backend, "crispy-daemon", daemon.telemetry,
+            daemon.backend, daemon.source, daemon.telemetry,
             period_s=args.telemetry_interval,
             ring=daemon.trace_ring).start()
     try:

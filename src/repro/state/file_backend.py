@@ -231,6 +231,38 @@ class FileBackend(StateBackend):
             json.dump({"docs": docs}, f)
         os.replace(tmp, path)       # atomic on POSIX: no torn reads
 
+    # -- replication enumeration --------------------------------------------
+    # The shipper sees the SANITIZED namespace (the filename stem). That is
+    # fine: sanitization is a fixpoint, so re-applying ops under the stem on
+    # the standby lands in the same files, and every daemon-facing caller
+    # already uses filename-safe namespaces.
+    def log_namespaces(self) -> List[str]:
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return []
+        return sorted(f[:-len(".jsonl")] for f in names
+                      if f.endswith(".jsonl"))
+
+    def doc_snapshot(self) -> List[Tuple[str, str, Optional[Dict], int]]:
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return []
+        out: List[Tuple[str, str, Optional[Dict], int]] = []
+        for f in sorted(names):
+            if not f.endswith(".json"):
+                continue
+            ns = f[:-len(".json")]
+            path = os.path.join(self.root, f)
+            with self._lock(path, shared=True):
+                docs = self._read_docs(path)
+            for key in sorted(docs):
+                entry = docs[key]
+                out.append((ns, key, entry.get("value"),
+                            int(entry.get("version", 0))))
+        return out
+
     def load(self, ns: str, key: str) -> Tuple[Optional[Dict], int]:
         path = self.doc_path(ns)
         with self._lock(path, shared=True):

@@ -58,6 +58,27 @@ framing over TCP, so this module owns everything both transports share:
               daemon answers strictly in order on each connection, so
               pipelining needs no protocol change and works against any
               daemon version (`DaemonBackend.pipeline()`).
+
+  replication {"op": "replicate", "log": {"ns": .., "rows": [..],
+              "base": c0, "cursor": c1}} ships a log tail (primary
+              cursors c0..c1) to a warm-standby daemon, and
+              {"op": "replicate", "doc": {"ns": .., "key": ..,
+              "value": {..}, "version": n}} ships a versioned document.
+              Both are idempotent by cursor/version: the standby tracks
+              the highest primary cursor applied per namespace (and the
+              highest primary doc version per key) and skips anything
+              at or below it, so a restarted shipper can replay from
+              zero without duplicating state. A frame whose `base` is
+              past the standby's applied cursor is a replication GAP
+              and is rejected ({"ok": false, "error": "replication
+              gap..."}); the shipper then resets to cursor 0 and
+              re-ships the (compacted) log from the head. Like every
+              op, `replicate` rides behind the connection-level auth
+              handshake, so a token-gated standby only accepts
+              replication from holders of the shared secret. The op may
+              ride inside a batch frame — the shipper coalesces one
+              round of tails + docs into one round trip. See
+              repro.state.sharding.ReplicationShipper.
 """
 from __future__ import annotations
 
@@ -79,6 +100,17 @@ BATCH_OP = "batch"
 # state, shutdown tears the connection down mid-frame, and nesting
 # batches would unbound the per-frame work a single line can demand
 BATCH_EXCLUDED_OPS = frozenset({"auth", BATCH_OP, "shutdown"})
+
+# warm-standby replication frame (see module docstring). May ride
+# inside a batch — the shipper coalesces one round into one frame.
+REPLICATE_OP = "replicate"
+
+# the shard topology document lives ON the ring itself (a plain CAS doc
+# replicated to every node), so any reachable daemon can answer "who is
+# primary for shard X now" during client-side failover. Double-underscore
+# namespace: reserved, same convention as __telemetry__ / __traces__.
+TOPOLOGY_NS = "__topology__"
+TOPOLOGY_KEY = "shards"
 
 # parsed address forms: ("unix", path) | ("tcp", (host, port))
 Address = Tuple[str, Union[str, Tuple[str, int]]]

@@ -128,7 +128,7 @@ from repro.telemetry.export import (KEY_FIELDS, TELEMETRY_NS, TRACES_NS,
                                     fleet_snapshot, fleet_traces,
                                     publish_snapshot, publish_traces,
                                     render_json, render_prometheus,
-                                    stitch_fleet_traces)
+                                    shard_heat, stitch_fleet_traces)
 from repro.telemetry.logs import StructuredLogger
 from repro.telemetry.metrics import (DEFAULT_BUCKETS, Counter, Gauge,
                                      Histogram, MetricsRegistry,
@@ -152,5 +152,6 @@ __all__ = [
     "default_ring", "fleet_snapshot", "fleet_traces", "new_span_id",
     "publish_snapshot", "publish_traces", "quantile_from_buckets",
     "render_json", "render_prometheus", "resolve_sampler",
-    "set_default_registry", "span", "span_if", "stitch_fleet_traces",
+    "set_default_registry", "shard_heat", "span", "span_if",
+    "stitch_fleet_traces",
 ]

@@ -211,6 +211,32 @@ def aggregate_fleet(fleet: Dict[str, Dict]) -> Dict:
             "sources": sorted(fleet)}
 
 
+def shard_heat(fleet: Dict[str, Dict],
+               prefix: str = "daemon.op.") -> Dict[str, Dict]:
+    """Per-source daemon op-load breakdown from a fleet snapshot map
+    (the same {source: {"metrics": ...}} shape `fleet_snapshot` and
+    trace_tool.collect_fleet_metrics return). `aggregate_fleet` sums
+    sources together, which is exactly wrong for spotting a hot shard —
+    this keeps them apart: {source: {"ops": {op: count}, "total": n}},
+    counting observations of each `daemon.op.<op>.seconds` histogram.
+    Sources without daemon op histograms (plain services) are omitted,
+    so over a sharded fleet the keys are the shard-qualified daemon
+    labels ("crispy-daemon@shard-0", ...) and skew is one dict away."""
+    suffix = ".seconds"
+    heat: Dict[str, Dict] = {}
+    for source, entry in fleet.items():
+        snap = (entry or {}).get("metrics", {})
+        ops: Dict[str, int] = {}
+        for name, h in snap.get("histograms", {}).items():
+            if name.startswith(prefix) and name.endswith(suffix):
+                op = name[len(prefix):-len(suffix)]
+                ops[op] = ops.get(op, 0) + int(h.get("count", 0))
+        if ops:
+            heat[source] = {"ops": dict(sorted(ops.items())),
+                            "total": sum(ops.values())}
+    return heat
+
+
 # -- fleet traces -------------------------------------------------------------
 
 def publish_traces(backend, source: str, ring: Optional[TraceRing] = None,

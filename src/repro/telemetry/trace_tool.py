@@ -3,24 +3,31 @@
     python -m repro.telemetry.trace_tool --daemon /tmp/crispy.sock
     python -m repro.telemetry.trace_tool --daemon host:7421 --slowest 10
     python -m repro.telemetry.trace_tool --daemon ... --trace <id> --json
+    python -m repro.telemetry.trace_tool \
+        --daemon /tmp/s0.sock,/tmp/s1.sock --fleet     # sharded fleet
 
-Connects to a crispy-daemon (unix path or host:port, token auth via
---auth-token / $CRISPY_DAEMON_TOKEN), pulls every trace source it can
-reach, stitches them into cross-process trees, and prints:
+Connects to one or more crispy-daemons (comma-separated unix paths or
+host:port addresses, token auth via --auth-token /
+$CRISPY_DAEMON_TOKEN), pulls every trace source it can reach, stitches
+them into cross-process trees, and prints:
 
   * the stitched trees (indented; per-span wall ms, attrs, [source]),
     newest last — or one tree with `--trace <id>`;
   * a slowest-span table (`--slowest N`) across every stitched tree,
     the "where did the time go" answer sorted by self-time;
-  * with `--fleet`, the aggregated fleet metrics snapshot and any
-    histogram exemplars, each linking a bucket to a trace id that can
-    be fed straight back into `--trace`.
+  * with `--fleet`, the aggregated fleet metrics snapshot, a per-shard
+    `daemon.op.*` heat table (shard-qualified daemon sources, so
+    hot-shard skew is visible at a glance) and any histogram exemplars,
+    each linking a bucket to a trace id that can be fed straight back
+    into `--trace`.
 
 Trace sources, all merged under their source labels:
 
-  1. the daemon's OWN ring, over the `traces` wire op (`daemon.op.*`
-     spans adopted from traced callers);
-  2. every forest published into the backend's `__traces__` namespace
+  1. each daemon's OWN ring, over the `traces` wire op (`daemon.op.*`
+     spans adopted from traced callers), labeled by the daemon's
+     shard-qualified source ("crispy-daemon@shard-0" under
+     --shard-name, plain "crispy-daemon" otherwise);
+  2. every forest published into the backends' `__traces__` namespaces
      by service-side `TelemetryPublisher(ring=...)` / `publish_traces`.
 
 `--expect-cross-process` exits non-zero unless at least one stitched
@@ -38,7 +45,8 @@ import sys
 from typing import Dict, List, Optional
 
 from repro.telemetry.export import (aggregate_fleet, fleet_snapshot,
-                                    fleet_traces, stitch_fleet_traces)
+                                    fleet_traces, shard_heat,
+                                    stitch_fleet_traces)
 
 DAEMON_SOURCE = "crispy-daemon"
 
@@ -46,12 +54,18 @@ DAEMON_SOURCE = "crispy-daemon"
 def collect_fleet(backend) -> Dict[str, List[Dict]]:
     """Every reachable trace forest: published `__traces__` rows plus
     the daemon's own ring (daemon wins its label on conflict — its ring
-    is fresher than anything it published)."""
+    is fresher than anything it published). The daemon's label is its
+    shard-qualified source when it announces one (a --shard-name fleet
+    member), the historical DAEMON_SOURCE otherwise."""
     fleet = dict(fleet_traces(backend))
     traces_op = getattr(backend, "traces", None)
     if callable(traces_op):
         try:
-            fleet[DAEMON_SOURCE] = traces_op()
+            try:
+                source, roots = traces_op(with_source=True)
+            except TypeError:       # pre-sharding DaemonBackend
+                source, roots = DAEMON_SOURCE, traces_op()
+            fleet[source] = roots
         except Exception:
             pass                    # daemon without the op: published only
     return fleet
@@ -59,12 +73,17 @@ def collect_fleet(backend) -> Dict[str, List[Dict]]:
 
 def collect_fleet_metrics(backend) -> Dict[str, Dict]:
     """Every reachable metrics snapshot: published `__telemetry__` rows
-    plus the daemon's own live registry over the `metrics` wire op."""
+    plus the daemon's own live registry over the `metrics` wire op
+    (shard-qualified label, same rule as `collect_fleet`)."""
     fleet = dict(fleet_snapshot(backend))
     metrics_op = getattr(backend, "metrics", None)
     if callable(metrics_op):
         try:
-            fleet[DAEMON_SOURCE] = {"ts": None, "metrics": metrics_op()}
+            try:
+                source, snap = metrics_op(with_source=True)
+            except TypeError:       # pre-sharding DaemonBackend
+                source, snap = DAEMON_SOURCE, metrics_op()
+            fleet[source] = {"ts": None, "metrics": snap}
         except Exception:
             pass
     return fleet
@@ -147,8 +166,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         prog="python -m repro.telemetry.trace_tool",
         description="Pull + stitch distributed traces from a "
                     "crispy-daemon fleet (see module docstring).")
-    ap.add_argument("--daemon", required=True, metavar="ADDR",
-                    help="daemon address: unix socket path or host:port")
+    ap.add_argument("--daemon", required=True, metavar="ADDR[,ADDR...]",
+                    help="daemon address: unix socket path or host:port; "
+                         "comma-separate several to pull a sharded fleet")
     ap.add_argument("--auth-token", default=None,
                     help="shared daemon token "
                          "(default: $CRISPY_DAEMON_TOKEN)")
@@ -159,7 +179,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--slowest", type=int, default=0, metavar="N",
                     help="also print the N slowest spans by self time")
     ap.add_argument("--fleet", action="store_true",
-                    help="also print aggregated fleet metrics + exemplars")
+                    help="also print aggregated fleet metrics, per-shard "
+                         "daemon op heat, and exemplars")
     ap.add_argument("--json", action="store_true",
                     help="machine form: one JSON object instead of text")
     ap.add_argument("--expect-cross-process", action="store_true",
@@ -170,18 +191,25 @@ def main(argv: Optional[List[str]] = None) -> int:
     # deferred import: repro.state imports repro.telemetry
     from repro.state.daemon import DaemonBackend
 
-    backend = DaemonBackend(args.daemon, timeout_s=args.timeout,
-                            auth_token=args.auth_token)
-    try:
-        fleet = collect_fleet(backend)
-        trees = stitch_fleet_traces(fleet)
-        if args.trace:
-            trees = [t for t in trees if t.get("trace_id") == args.trace]
-        fleet_metrics = None
-        if args.fleet:
-            fleet_metrics = aggregate_fleet(collect_fleet_metrics(backend))
-    finally:
-        backend.close()
+    addresses = [a.strip() for a in args.daemon.split(",") if a.strip()]
+    fleet: Dict[str, List[Dict]] = {}
+    metrics_by_source: Dict[str, Dict] = {}
+    for address in addresses:
+        with DaemonBackend(address, timeout_s=args.timeout,
+                           auth_token=args.auth_token) as backend:
+            # merge across daemons: each shard contributes its own ring
+            # under its shard-qualified label, plus whatever was
+            # published into the namespaces IT owns on the hash ring
+            fleet.update(collect_fleet(backend))
+            if args.fleet:
+                metrics_by_source.update(collect_fleet_metrics(backend))
+    trees = stitch_fleet_traces(fleet)
+    if args.trace:
+        trees = [t for t in trees if t.get("trace_id") == args.trace]
+    fleet_metrics = heat = None
+    if args.fleet:
+        fleet_metrics = aggregate_fleet(metrics_by_source)
+        heat = shard_heat(metrics_by_source)
 
     crossed = cross_process_trees(trees)
 
@@ -192,6 +220,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             out["slowest"] = slowest_spans(trees, args.slowest)
         if fleet_metrics is not None:
             out["fleet"] = fleet_metrics
+            out["shard_heat"] = heat
             out["exemplars"] = _exemplar_rows(fleet_metrics)
         print(json.dumps(out, indent=2, sort_keys=True))
     else:
@@ -209,6 +238,13 @@ def main(argv: Optional[List[str]] = None) -> int:
             rows = _exemplar_rows(fleet_metrics)
             print(f"fleet sources: "
                   f"{', '.join(fleet_metrics.get('sources', []))}")
+            if heat:
+                print("per-shard daemon op heat:")
+                for source in sorted(heat):
+                    entry = heat[source]
+                    ops = " ".join(f"{op}={n}" for op, n in
+                                   entry["ops"].items())
+                    print(f"  {source:<28} total={entry['total']:<8} {ops}")
             print(f"exemplars: {len(rows)}")
             for r in rows:
                 print(f"  {r['histogram']} le={r['le']} "

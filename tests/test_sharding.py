@@ -1,0 +1,515 @@
+"""Sharded state plane: routing, batch fan-out, replication, failover.
+
+The conformance suite (tests/test_state_conformance.py) already runs the
+full StateBackend contract over `ShardedBackend`; this file covers what
+is specific to the sharded plane — the hash ring's stability and
+balance, batch split/reassembly and per-shard degradation, the
+replicate protocol's idempotency and gap handling, the topology doc,
+and the headline guarantee: killing a shard's primary loses zero
+acknowledged appends that replication delivered, and the client fails
+over to the standby without call-site changes.
+"""
+import os
+import socket
+import tempfile
+import threading
+
+import pytest
+
+from repro.state import (CrispyDaemon, DaemonBackend, FileBackend,
+                         HashRing, InMemoryBackend, ReplicationApplier,
+                         ReplicationShipper, ShardedBackend,
+                         StateBackendError, StateBackendUnavailable,
+                         TOPOLOGY_KEY, TOPOLOGY_NS, load_topology,
+                         publish_topology)
+from repro.state.sharding import stable_hash
+
+HAS_UNIX = hasattr(socket, "AF_UNIX")
+needs_unix = pytest.mark.skipif(not HAS_UNIX,
+                                reason="unix-domain sockets unavailable")
+
+
+def _short_socket() -> str:
+    return os.path.join(tempfile.mkdtemp(prefix="crispyd-"), "d.sock")
+
+
+# -- hash ring ----------------------------------------------------------------
+
+
+def test_stable_hash_is_process_independent():
+    # pinned values: PYTHONHASHSEED must never be able to re-route a
+    # namespace (md5, not the salted builtin hash)
+    assert stable_hash("profiles") == stable_hash("profiles")
+    assert stable_hash("profiles") != stable_hash("profiles2")
+    assert 0 <= stable_hash("x") < 2 ** 64
+
+
+def test_ring_routing_is_deterministic_and_name_based():
+    a = HashRing(["shard-0", "shard-1", "shard-2"])
+    b = HashRing(["shard-0", "shard-1", "shard-2"])
+    for ns in ("profiles", "registry", "budget", "__traces__", "log-17"):
+        assert a.owner(ns) == b.owner(ns)      # two instances agree
+        assert a.owner(ns) in a.names
+
+
+def test_ring_growth_moves_only_a_fraction_of_namespaces():
+    """Consistent hashing's point: adding a shard re-homes roughly 1/n of
+    the keyspace, not all of it."""
+    nss = [f"ns-{i}" for i in range(400)]
+    two = HashRing(["shard-0", "shard-1"])
+    three = HashRing(["shard-0", "shard-1", "shard-2"])
+    moved = sum(1 for ns in nss if two.owner(ns) != three.owner(ns))
+    # ideal is 1/3; anything under half proves it's not modulo hashing
+    assert moved < len(nss) / 2
+    # and every moved namespace landed on the NEW shard
+    assert all(three.owner(ns) == "shard-2" for ns in nss
+               if two.owner(ns) != three.owner(ns))
+
+
+def test_ring_balance_within_tolerance():
+    nss = [f"ns-{i}" for i in range(600)]
+    for n in (2, 3, 4):
+        ring = HashRing([f"shard-{i}" for i in range(n)])
+        counts = [0] * n
+        for ns in nss:
+            counts[ring.owner_index(ns)] += 1
+        assert max(counts) <= 1.4 * len(nss) / n, (n, counts)
+        assert min(counts) > 0
+
+
+def test_ring_rejects_empty_and_duplicate_names():
+    with pytest.raises(ValueError):
+        HashRing([])
+    with pytest.raises(ValueError):
+        HashRing(["a", "a"])
+
+
+def test_sharded_backend_names_are_index_based_not_address_based():
+    """Routing must survive a failover that swaps a shard's address:
+    only the shard COUNT may matter."""
+    m = ShardedBackend([InMemoryBackend(), InMemoryBackend()])
+    assert m.names == ["shard-0", "shard-1"]
+    for ns in ("profiles", "budget", "reg-9"):
+        assert m.shard_index(ns) == HashRing(m.names).owner_index(ns)
+
+
+# -- routing + single-namespace ops -------------------------------------------
+
+
+def _ns_owned_by(backend: ShardedBackend, idx: int, prefix="pick") -> str:
+    for i in range(10_000):
+        ns = f"{prefix}-{i}"
+        if backend.shard_index(ns) == idx:
+            return ns
+    raise AssertionError(f"no namespace routed to shard {idx}")
+
+
+def test_each_namespace_lives_on_exactly_one_child():
+    children = [InMemoryBackend(), InMemoryBackend(), InMemoryBackend()]
+    sb = ShardedBackend(children)
+    for i in range(30):
+        sb.append(f"route-{i}", {"i": i})
+    for i in range(30):
+        ns = f"route-{i}"
+        holders = [c for c in children if c.read(ns)[0]]
+        assert len(holders) == 1
+        assert holders[0] is children[sb.shard_index(ns)]
+
+
+def test_sharded_topology_descriptor():
+    sb = ShardedBackend([InMemoryBackend(), InMemoryBackend()])
+    topo = sb.topology()
+    assert topo["vnodes"] == sb.ring.vnodes
+    assert [s["name"] for s in topo["shards"]] == ["shard-0", "shard-1"]
+    assert all(s["kind"] == "memory" for s in topo["shards"])
+    assert "shard-0=" in sb.describe()
+
+
+# -- batch fan-out ------------------------------------------------------------
+
+
+def test_batch_splits_by_shard_and_reassembles_in_order():
+    children = [InMemoryBackend(), InMemoryBackend()]
+    sb = ShardedBackend(children)
+    ns_a = _ns_owned_by(sb, 0, "ba")
+    ns_b = _ns_owned_by(sb, 1, "bb")
+    results = sb.batch([
+        {"op": "append", "ns": ns_a, "record": {"i": 0}},
+        {"op": "append", "ns": ns_b, "record": {"i": 1}},
+        {"op": "append", "ns": ns_a, "record": {"i": 2}},
+        {"op": "read", "ns": ns_a, "cursor": 0},
+        {"op": "read", "ns": ns_b, "cursor": 0},
+    ])
+    assert [r["ok"] for r in results] == [True] * 5
+    # per-namespace order survives the concurrent fan-out, and each
+    # read observes the batch's own earlier writes on its shard
+    assert [r["i"] for r in results[3]["rows"]] == [0, 2]
+    assert [r["i"] for r in results[4]["rows"]] == [1]
+    # the rows really live on their owning children only
+    assert children[sb.shard_index(ns_a)].read(ns_a)[0] != []
+    assert children[sb.shard_index(ns_b)].read(ns_b)[0] != []
+
+
+def test_batch_unroutable_ops_get_error_slots_not_exceptions():
+    sb = ShardedBackend([InMemoryBackend(), InMemoryBackend()])
+    ns = _ns_owned_by(sb, 1, "iso")
+    results = sb.batch([
+        "not-even-a-dict",
+        {"op": "append", "ns": ns, "record": {"i": 1}},
+        {"op": "nope", "ns": ns},
+    ])
+    assert not results[0]["ok"]
+    assert results[1]["ok"]
+    assert not results[2]["ok"] and "nope" in results[2]["error"]
+
+
+class _DownChild(InMemoryBackend):
+    def batch(self, ops):
+        raise StateBackendUnavailable("shard is down")
+
+
+def test_batch_degrades_per_shard_without_poisoning_others():
+    """A shard whose primary AND standby are gone answers with per-op
+    error slots; the other shard's sub-frame still lands."""
+    sb = ShardedBackend([InMemoryBackend(), _DownChild()])
+    ns_up = _ns_owned_by(sb, 0, "up")
+    ns_down = _ns_owned_by(sb, 1, "down")
+    results = sb.batch([
+        {"op": "append", "ns": ns_up, "record": {"i": 0}},
+        {"op": "append", "ns": ns_down, "record": {"i": 1}},
+        {"op": "read", "ns": ns_up, "cursor": 0},
+    ])
+    assert results[0]["ok"] and results[2]["ok"]
+    assert not results[1]["ok"]
+    assert "shard-1" in results[1]["error"]
+    assert [r["i"] for r in results[2]["rows"]] == [0]
+
+
+def test_batch_empty_frame_is_noop():
+    assert ShardedBackend([InMemoryBackend()]).batch([]) == []
+
+
+# -- enumeration hooks (what the shipper reads) -------------------------------
+
+
+@pytest.mark.parametrize("factory", [
+    lambda tmp: InMemoryBackend(),
+    lambda tmp: FileBackend(str(tmp / "fb")),
+], ids=["memory", "file"])
+def test_log_namespaces_and_doc_snapshot(factory, tmp_path):
+    b = factory(tmp_path)
+    assert b.log_namespaces() == []
+    assert b.doc_snapshot() == []
+    b.append("logs-a", {"i": 1})
+    b.append("logs-b", {"i": 2})
+    b.cas("docs", "k1", 0, {"v": 1})
+    b.cas("docs", "k2", 0, {"v": 2})
+    assert sorted(b.log_namespaces()) == ["logs-a", "logs-b"]
+    snap = b.doc_snapshot()
+    assert ("docs", "k1", {"v": 1}, 1) in snap
+    assert ("docs", "k2", {"v": 2}, 1) in snap
+
+
+# -- replication: applier ------------------------------------------------------
+
+
+def test_applier_is_idempotent_by_cursor():
+    standby = InMemoryBackend()
+    ap = ReplicationApplier(standby)
+    frame = {"log": {"ns": "log", "rows": [{"i": 0}, {"i": 1}],
+                     "base": 0, "cursor": 2}}
+    first = ap.apply(frame)
+    assert first == {"ok": True, "applied": 2, "cursor": 2}
+    again = ap.apply(frame)                    # duplicate delivery
+    assert again["ok"] and again["applied"] == 0
+    assert [r["i"] for r in standby.read("log")[0]] == [0, 1]
+
+
+def test_applier_skips_overlapping_prefix():
+    standby = InMemoryBackend()
+    ap = ReplicationApplier(standby)
+    ap.apply({"log": {"ns": "log", "rows": [{"i": 0}, {"i": 1}],
+                      "base": 0, "cursor": 2}})
+    # retransmission overlaps one already-applied row
+    resp = ap.apply({"log": {"ns": "log",
+                             "rows": [{"i": 1}, {"i": 2}, {"i": 3}],
+                             "base": 1, "cursor": 4}})
+    assert resp["ok"] and resp["applied"] == 2
+    assert [r["i"] for r in standby.read("log")[0]] == [0, 1, 2, 3]
+
+
+def test_applier_demands_resync_on_gap():
+    ap = ReplicationApplier(InMemoryBackend())
+    resp = ap.apply({"log": {"ns": "log", "rows": [{"i": 9}],
+                             "base": 7, "cursor": 8}})
+    assert not resp["ok"] and "replication gap" in resp["error"]
+
+
+def test_applier_doc_versions_are_monotone():
+    standby = InMemoryBackend()
+    ap = ReplicationApplier(standby)
+    assert ap.apply({"doc": {"ns": "d", "key": "k", "value": {"v": 2},
+                             "version": 2}})["applied"] is True
+    # a stale (or duplicate) doc never regresses the standby's copy
+    assert ap.apply({"doc": {"ns": "d", "key": "k", "value": {"v": 1},
+                             "version": 1}})["applied"] is False
+    assert standby.load("d", "k")[0] == {"v": 2}
+
+
+def test_applier_rejects_malformed_frames():
+    ap = ReplicationApplier(InMemoryBackend())
+    assert not ap.apply({})["ok"]
+    assert not ap.apply({"log": {"rows": []}})["ok"]
+    assert not ap.apply({"doc": {"ns": "d"}})["ok"]
+
+
+# -- replication: shipper end-to-end ------------------------------------------
+
+
+class _LoopbackStandby(InMemoryBackend):
+    """In-process standby: routes batch frames through a real applier,
+    like the daemon's replicate dispatch does."""
+
+    def __init__(self):
+        super().__init__()
+        self.applier = ReplicationApplier(self)
+
+    def batch(self, ops):
+        return [self.applier.apply(op) for op in ops]
+
+
+def test_shipper_ships_tails_and_docs_idempotently():
+    primary = InMemoryBackend()
+    standby = _LoopbackStandby()
+    shipper = ReplicationShipper(primary, standby="unused", period_s=30)
+    shipper._client = standby                   # no wire: loopback standby
+    for i in range(5):
+        primary.append("log", {"i": i})
+    primary.cas("docs", "k", 0, {"v": 1})
+    first = shipper.ship_once()
+    assert first["rows"] == 5 and first["docs"] == 1
+    assert [r["i"] for r in standby.read("log")[0]] == list(range(5))
+    assert standby.load("docs", "k")[0] == {"v": 1}
+    # a quiet round ships nothing (cursors + doc versions held back)
+    assert shipper.ship_once() == {"ops": 0, "rows": 0, "docs": 0,
+                                   "errors": 0}
+    # incremental: only the new tail goes over
+    primary.append("log", {"i": 5})
+    assert shipper.ship_once()["rows"] == 1
+    assert len(standby.read("log")[0]) == 6
+    assert shipper.stats["shipped_rows"] == 6
+    assert shipper.stats["rounds"] == 3
+
+
+def test_shipper_resyncs_after_standby_restart():
+    """A standby that lost its state (fresh applier cursors ahead of a
+    compacted primary base) answers 'replication gap'; the next round
+    re-ships the folded log from the head."""
+    primary = InMemoryBackend()
+    shipper = ReplicationShipper(primary, standby="unused", period_s=30)
+    standby = _LoopbackStandby()
+    shipper._client = standby
+    for i in range(4):
+        primary.append("log", {"kind": "profile", "sig": "s",
+                               "size": 1.0, "gen": i})
+    assert shipper.ship_once()["rows"] == 4
+    primary.compact("log")                     # folds to 1 row, moves base
+    primary.append("log", {"kind": "profile", "sig": "t", "size": 9.0})
+    # simulate standby restart: empty state, fresh cursors
+    fresh = _LoopbackStandby()
+    shipper._client = fresh
+    gap_round = shipper.ship_once()
+    assert gap_round["errors"] == 1            # gap reported, cursor reset
+    assert shipper.stats["resyncs"] == 1
+    recovery = shipper.ship_once()
+    assert recovery["errors"] == 0 and recovery["rows"] == 2
+    sigs = sorted(r["sig"] for r in fresh.read("log")[0])
+    assert sigs == ["s", "t"]                  # folded snapshot + new tail
+
+
+# -- topology doc -------------------------------------------------------------
+
+
+def test_publish_and_load_topology_on_every_shard():
+    children = [InMemoryBackend(), InMemoryBackend()]
+    sb = ShardedBackend(children)
+    doc = publish_topology(sb)
+    assert doc["version"] == 1
+    assert set(doc["shards"]) == {"shard-0", "shard-1"}
+    for child in children:                     # every node can answer
+        assert load_topology(child) == doc
+    # republish bumps the version everywhere
+    assert publish_topology(sb)["version"] == 2
+    assert load_topology(children[1])["version"] == 2
+
+
+def test_publish_topology_skips_down_nodes():
+    class _Down(InMemoryBackend):
+        def load(self, ns, key):
+            raise StateBackendUnavailable("down")
+
+    up = InMemoryBackend()
+    doc = publish_topology(ShardedBackend([up, _Down()]))
+    assert doc["version"] == 1
+    assert load_topology(up) == doc
+
+
+# -- failover against live daemons --------------------------------------------
+
+
+@needs_unix
+def test_kill_primary_loses_no_acknowledged_appends():
+    """The headline guarantee: acknowledged appends that replication
+    delivered survive a hard primary death, and the SAME client object
+    keeps working against the standby — reads, new writes, CAS."""
+    s_primary, s_standby = _short_socket(), _short_socket()
+    with CrispyDaemon(s_standby, shard_name="shard-0"):
+        primary = CrispyDaemon(s_primary, standby=s_standby,
+                               replicate_interval_s=30.0,
+                               shard_name="shard-0")
+        primary.start(background=True)
+        client = DaemonBackend(s_primary, timeout_s=10.0,
+                               standby=s_standby, shard_name="shard-0")
+        try:
+            for i in range(20):
+                client.append("jobs", {"i": i})        # acknowledged
+            won, _v, _ver = client.cas("docs", "plan", 0, {"v": 42})
+            assert won
+            primary.shipper.ship_once()    # replication barrier
+            # hard death: no graceful drain, no final ship
+            primary.shipper.stop(final_ship=False)
+            primary.shipper = None
+            primary.stop()
+
+            rows, _ = client.read("jobs", 0)           # fails over
+            assert [r["i"] for r in rows] == list(range(20))
+            assert client.failovers == 1
+            assert client.load("docs", "plan") == ({"v": 42}, 1)
+            client.append("jobs", {"i": 20})           # writes continue
+            assert len(client.read("jobs", 0)[0]) == 21
+        finally:
+            client.close()
+            client.close()                 # idempotent (satellite: close)
+            primary.stop()                 # idempotent when already dead
+
+
+@needs_unix
+def test_failover_adopts_new_standby_from_topology_doc():
+    """After failing over, the client re-resolves from the on-ring
+    topology doc: the dead primary becomes the shard's standby, so a
+    LATER failover can bounce back once it recovers."""
+    s_primary, s_standby = _short_socket(), _short_socket()
+    with CrispyDaemon(s_standby, shard_name="shard-0") as standby_daemon:
+        topo = {"version": 1,
+                "shards": {"shard-0": {"primary": s_standby,
+                                       "standby": s_primary}}}
+        over = DaemonBackend(s_standby)
+        assert over.cas(TOPOLOGY_NS, TOPOLOGY_KEY, 0, topo)[0]
+        over.close()
+
+        primary = CrispyDaemon(s_primary, shard_name="shard-0")
+        primary.start(background=True)
+        client = DaemonBackend(s_primary, timeout_s=10.0,
+                               standby=s_standby, shard_name="shard-0")
+        try:
+            client.append("jobs", {"i": 0})
+            primary.stop()
+            assert client.ping()                       # failover to standby
+            assert client.failovers == 1
+            assert client.address == s_standby
+            assert client.standby_address == s_primary # adopted from doc
+            assert standby_daemon is not None
+        finally:
+            client.close()
+
+
+@needs_unix
+def test_shutdown_op_never_fails_over():
+    """`shutdown` aimed at a dead primary must not kill the standby."""
+    s_primary, s_standby = _short_socket(), _short_socket()
+    with CrispyDaemon(s_standby):
+        client = DaemonBackend(s_primary, timeout_s=2.0, standby=s_standby)
+        try:
+            with pytest.raises(StateBackendUnavailable):
+                client.shutdown_daemon()
+        finally:
+            client.close()
+        probe = DaemonBackend(s_standby)
+        assert probe.ping()                  # standby survived
+        probe.close()
+
+
+@needs_unix
+def test_sharded_fleet_survives_one_primary_kill():
+    """Two shards, one standby: after shard-1's primary dies, the
+    ShardedBackend keeps serving EVERY namespace — shard-0 untouched,
+    shard-1 through its standby — including batch frames."""
+    s0, s1, s1b = _short_socket(), _short_socket(), _short_socket()
+    with CrispyDaemon(s0, shard_name="shard-0"), \
+            CrispyDaemon(s1b, shard_name="shard-1"):
+        shard1 = CrispyDaemon(s1, standby=s1b, replicate_interval_s=30.0,
+                              shard_name="shard-1")
+        shard1.start(background=True)
+        with ShardedBackend.from_addresses([s0, s1],
+                                           standbys=[None, s1b]) as sb:
+            ns0 = _ns_owned_by(sb, 0, "fleet")
+            ns1 = _ns_owned_by(sb, 1, "fleet")
+            for i in range(10):
+                sb.append(ns0, {"i": i})
+                sb.append(ns1, {"i": i})
+            shard1.shipper.ship_once()       # replication barrier
+            shard1.shipper.stop(final_ship=False)
+            shard1.shipper = None
+            shard1.stop()                    # hard death of one primary
+
+            assert [r["i"] for r in sb.read(ns0, 0)[0]] == list(range(10))
+            assert [r["i"] for r in sb.read(ns1, 0)[0]] == list(range(10))
+            results = sb.batch([
+                {"op": "append", "ns": ns0, "record": {"i": 10}},
+                {"op": "append", "ns": ns1, "record": {"i": 10}},
+                {"op": "read", "ns": ns1, "cursor": 0},
+            ])
+            assert all(r["ok"] for r in results)
+            assert len(results[2]["rows"]) == 11
+            assert sb.children[1].failovers == 1
+
+
+# -- daemon-side shipper wiring -----------------------------------------------
+
+
+@needs_unix
+def test_daemon_ships_to_standby_periodically():
+    """The primary's own replication thread (no explicit barrier) gets
+    acknowledged rows onto the standby within a few periods."""
+    s_primary, s_standby = _short_socket(), _short_socket()
+    with CrispyDaemon(s_standby), \
+            CrispyDaemon(s_primary, standby=s_standby,
+                         replicate_interval_s=0.05):
+        writer = DaemonBackend(s_primary)
+        observer = DaemonBackend(s_standby)
+        try:
+            for i in range(5):
+                writer.append("period-log", {"i": i})
+            deadline = threading.Event()
+            for _ in range(100):
+                if len(observer.read("period-log", 0)[0]) == 5:
+                    break
+                deadline.wait(0.05)
+            assert [r["i"] for r in observer.read("period-log", 0)[0]] \
+                == list(range(5))
+        finally:
+            writer.close()
+            observer.close()
+
+
+def test_replicate_op_rejected_for_unknown_body_over_wire():
+    # replicate is a normal admitted-connection op: malformed bodies get
+    # per-op errors, not connection teardown
+    with CrispyDaemon(listen="127.0.0.1:0") as d:
+        client = DaemonBackend(d.tcp_address)
+        try:
+            results = client.batch([{"op": "replicate"}])
+            assert not results[0]["ok"]
+            assert "log" in results[0]["error"]
+        finally:
+            client.close()

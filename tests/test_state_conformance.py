@@ -1,11 +1,12 @@
 """Cross-backend StateBackend conformance suite.
 
-ONE contract, four implementations: every test in this file runs
+ONE contract, six implementations: every test in this file runs
 identically against `InMemoryBackend`, `FileBackend`, `DaemonBackend`
-over a unix socket, and `DaemonBackend` over TCP (with the shared-token
-auth handshake) — the guarantee that lets every view (ProfileStore,
-BackendModelRegistry, shared ProfilingBudget) treat the transport as an
-implementation detail. Covered contract:
+over a unix socket, `DaemonBackend` over TCP (with the shared-token
+auth handshake), and `ShardedBackend` over two memory children and two
+live unix daemons — the guarantee that lets every view (ProfileStore,
+BackendModelRegistry, shared ProfilingBudget) treat the transport AND
+the fleet topology as implementation details. Covered contract:
 
   * append/read ordering + incremental cursor semantics;
   * versioned-document CAS conflict behavior (stale writers lose and get
@@ -38,11 +39,12 @@ except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
 from repro.state import (CrispyDaemon, DaemonBackend, FileBackend,
-                         InMemoryBackend, StateBackendError,
-                         StateBackendUnavailable)
+                         InMemoryBackend, ShardedBackend,
+                         StateBackendError, StateBackendUnavailable)
 
 HAS_UNIX = hasattr(socket, "AF_UNIX")
-BACKENDS = ("memory", "file", "daemon-unix", "daemon-tcp")
+BACKENDS = ("memory", "file", "daemon-unix", "daemon-tcp",
+            "sharded-memory", "sharded-daemon")
 AUTH_TOKEN = "conformance-secret"
 
 
@@ -68,13 +70,24 @@ def backend(request, tmp_path):
             client = DaemonBackend(sock, timeout_s=10.0)
             yield client
             client.close()
-    else:                                   # daemon-tcp, auth required
+    elif kind == "daemon-tcp":              # auth required
         with CrispyDaemon(listen="127.0.0.1:0",
                           auth_token=AUTH_TOKEN) as daemon:
             client = DaemonBackend(daemon.tcp_address, timeout_s=10.0,
                                    auth_token=AUTH_TOKEN)
             yield client
             client.close()
+    elif kind == "sharded-memory":
+        with ShardedBackend([InMemoryBackend(), InMemoryBackend()]) as b:
+            yield b
+    else:                                   # sharded-daemon: 2 live shards
+        if not HAS_UNIX:
+            pytest.skip("unix-domain sockets unavailable")
+        s0, s1 = _short_socket(), _short_socket()
+        with CrispyDaemon(s0), CrispyDaemon(s1):
+            with ShardedBackend.from_addresses([s0, s1],
+                                               timeout_s=10.0) as b:
+                yield b
 
 
 # -- append/read ordering -----------------------------------------------------
